@@ -1,0 +1,21 @@
+"""Shared helpers for the benchmark suite. Each module exposes
+``run() -> list[(name, value, unit)]`` rows; benchmarks.run prints CSV."""
+import time
+
+import numpy as np
+import jax
+
+
+def tail_mean(arr, frac=0.25):
+    a = np.asarray(arr)
+    n = max(1, int(a.shape[0] * frac))
+    return float(a[-n:].mean())
+
+
+def timer(fn, *args, repeat=3, **kw):
+    fn(*args, **kw)           # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeat

@@ -1,0 +1,102 @@
+"""Generate the §Dry-run / §Roofline markdown tables from artifacts.
+
+    PYTHONPATH=src python -m benchmarks.report > artifacts/roofline_tables.md
+"""
+import glob
+import json
+from collections import defaultdict
+
+
+def load(mesh):
+    out = {}
+    for f in sorted(glob.glob(f"artifacts/dryrun/*__{mesh}.json")):
+        d = json.load(open(f))
+        out[(d["arch"], d["shape"])] = d
+    return out
+
+
+def fmt_bytes(b):
+    return f"{b / 1e9:.2f}"
+
+
+def main():
+    pod = load("pod")
+    multi = load("multipod")
+
+    print("### Dry-run matrix (lower + compile status, peak memory/chip)\n")
+    print("| arch | shape | 1-pod (256) | 2-pod (512) | peak/chip GB "
+          "(raw CPU / TPU-est) | fits 16G |")
+    print("|---|---|---|---|---|---|")
+    for key in sorted(pod):
+        d = pod[key]
+        m = multi.get(key, {})
+        if d.get("skipped"):
+            print(f"| {key[0]} | {key[1]} | SKIP | SKIP | — | — |")
+            continue
+        ok1 = "OK" if not d.get("error") else "FAIL"
+        ok2 = "OK" if (m and not m.get("error") and not m.get("skipped")) \
+            else ("SKIP" if m.get("skipped") else "FAIL")
+        peak = (f"{fmt_bytes(d['peak_bytes_per_chip'])} / "
+                f"{fmt_bytes(d['peak_bytes_per_chip_tpu_est'])}")
+        fits = "yes" if d.get("fits_16g") else "NO"
+        print(f"| {key[0]} | {key[1]} | {ok1} ({d['compile_s']}s) | {ok2} "
+              f"| {peak} | {fits} |")
+
+    print("\n### Roofline terms per (arch x shape), single pod "
+          "(256 x v5e chips)\n")
+    print("| arch | shape | compute s | memory s | collective s | "
+          "bottleneck | MODEL_FLOPS/HLO | dominant collectives |")
+    print("|---|---|---|---|---|---|---|---|")
+    for key in sorted(pod):
+        d = pod[key]
+        if d.get("skipped") or d.get("error"):
+            continue
+        r = d["roofline"]
+        det = r.get("collective_detail", {})
+        top = sorted(det.items(), key=lambda kv: -kv[1])[:2]
+        tops = ", ".join(f"{k} {v / 1e9:.1f}GB" for k, v in top) or "—"
+        print(f"| {key[0]} | {key[1]} | {r['compute_s']:.4f} | "
+              f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+              f"{r['bottleneck']} | {r['useful_flops_ratio']:.3f} | "
+              f"{tops} |")
+
+    opt = load("pod__opt")
+    if opt:
+        print("\n### Optimized vs baseline (per-arch best flags, "
+              "EXPERIMENTS.md §Perf)\n")
+        print("| arch | shape | dominant term base s | opt s | speedup | "
+              "peak base GB | opt GB |")
+        print("|---|---|---|---|---|---|---|")
+        for key in sorted(opt):
+            d = opt[key]
+            b = pod.get(key, {})
+            if d.get("skipped") or d.get("error") or not b or \
+                    b.get("skipped") or b.get("error"):
+                continue
+            rb, ro = b["roofline"], d["roofline"]
+            dom = rb["bottleneck"]
+            base_t = rb[f"{dom}_s"]
+            opt_t = ro[f"{dom}_s"]
+            sp = base_t / max(opt_t, 1e-9)
+            print(f"| {key[0]} | {key[1]} | {base_t:.2f} ({dom}) | "
+                  f"{opt_t:.2f} | {sp:.1f}x | "
+                  f"{fmt_bytes(b['peak_bytes_per_chip_tpu_est'])} | "
+                  f"{fmt_bytes(d['peak_bytes_per_chip_tpu_est'])} |")
+
+    print("\n### Multi-pod (2 x 256) deltas — what the pod axis costs\n")
+    print("| arch | shape | coll term 1-pod s | coll term 2-pod s | "
+          "peak/chip 2-pod GB |")
+    print("|---|---|---|---|---|")
+    for key in sorted(multi):
+        d = multi[key]
+        p = pod.get(key, {})
+        if d.get("skipped") or d.get("error") or p.get("skipped"):
+            continue
+        print(f"| {key[0]} | {key[1]} | "
+              f"{p['roofline']['collective_s']:.3f} | "
+              f"{d['roofline']['collective_s']:.3f} | "
+              f"{fmt_bytes(d['peak_bytes_per_chip_tpu_est'])} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""§Roofline: aggregate the dry-run artifacts into the per-(arch, shape)
+three-term table (reads artifacts/dryrun/*.json; run the dry-run first)."""
+import glob
+import json
+
+
+def run():
+    rows = []
+    for f in sorted(glob.glob("artifacts/dryrun/*__pod.json")):
+        d = json.load(open(f))
+        if d.get("skipped") or d.get("error"):
+            continue
+        r = d["roofline"]
+        tag = f"{d['arch']}__{d['shape']}"
+        rows.append((f"roofline_{tag}_compute", r["compute_s"], "s"))
+        rows.append((f"roofline_{tag}_memory", r["memory_s"], "s"))
+        rows.append((f"roofline_{tag}_collective", r["collective_s"], "s"))
+        rows.append((f"roofline_{tag}_bottleneck",
+                     {"compute": 0, "memory": 1, "collective": 2}[
+                         r["bottleneck"]], "0=c,1=m,2=coll"))
+    if not rows:
+        rows.append(("roofline_missing_run_dryrun_first", float("nan"),
+                     ""))
+    return rows

@@ -1,0 +1,57 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig3,tab1]
+
+Prints ``name,value,unit`` CSV rows per benchmark.
+"""
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    "fig3_runtime_model",
+    "fig4_speedup",
+    "fig4_sps_scaling",
+    "fig5_curves",
+    "tab1_final_time",
+    "tab2_required_time",
+    "tab3_multiagent",
+    "tab4_actor_ablation",
+    "tab5_sync_interval",
+    "tabA1_correction",
+    "tabA2_impl_sps",
+    "roofline_table",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module substring filters")
+    args = ap.parse_args()
+    filters = args.only.split(",") if args.only else None
+
+    print("name,value,unit")
+    failed = 0
+    for mod_name in MODULES:
+        if filters and not any(f in mod_name for f in filters):
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{mod_name}",
+                             fromlist=["run"])
+            for name, value, unit in mod.run():
+                print(f"{name},{value:.6g},{unit}", flush=True)
+            print(f"# {mod_name} done in {time.time() - t0:.1f}s",
+                  file=sys.stderr, flush=True)
+        except Exception:
+            failed += 1
+            print(f"# {mod_name} FAILED:\n{traceback.format_exc()}",
+                  file=sys.stderr, flush=True)
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Tab. 1: final-TIME metric — average reward achieved within a fixed
+virtual wall-clock budget (the paper sets the budget to IMPALA's 20M-step
+finish time; here: the async system's finish time for K steps).
+
+Equal-time step budgets come from the throughput model (exp step times,
+mean 1): async processes K steps; sync/HTS get however many steps fit in
+the async wall-clock. Each system then trains for its own step budget on
+the token env and reports the final metric (tail mean reward).
+"""
+import numpy as np
+import jax
+
+from benchmarks.common import tail_mean
+from repro.core import mesh_runtime
+from repro.core.baselines import (AsyncConfig, async_init_carry,
+                                  make_async_step, make_sync_step,
+                                  sync_init_carry)
+from repro.core.mesh_runtime import HTSConfig
+from repro.core.runtime_model import async_runtime, expected_runtime
+from repro.envs import token_env
+from repro.envs.interfaces import vectorize
+from repro.models.cnn_policy import apply_token_policy, init_token_policy
+from repro.optim import rmsprop
+
+VOCAB, N_ENVS, ALPHA = 32, 8, 8
+BASE_INTERVALS = 80
+LEARN_FRAC = 0.25
+
+
+def run():
+    env1 = token_env.make(vocab=VOCAB, seed=1)
+    venv = vectorize(env1, N_ENVS)
+    cfg = HTSConfig(alpha=ALPHA, n_envs=N_ENVS, seed=0, entropy_coef=0.003)
+    params = init_token_policy(jax.random.key(0), VOCAB, hidden=64)
+    opt = rmsprop(5e-3, eps=1e-5)
+
+    K = BASE_INTERVALS * ALPHA * N_ENVS
+    t_budget = async_runtime(K, N_ENVS, beta=1.0)          # async finishes
+    t_hts_per_step = expected_runtime(K, N_ENVS, ALPHA, 1.0) / K
+    t_sync_per_step = (expected_runtime(K, N_ENVS, 1, 1.0) +
+                       LEARN_FRAC * K / N_ENVS) / K
+    hts_steps = int(t_budget / t_hts_per_step)
+    sync_steps = int(t_budget / t_sync_per_step)
+    hts_iv = max(1, min(hts_steps // (ALPHA * N_ENVS), 3 * BASE_INTERVALS))
+    sync_iv = max(1, min(sync_steps // (ALPHA * N_ENVS), 3 * BASE_INTERVALS))
+
+    _, m_hts = mesh_runtime.train(params, apply_token_policy, venv, opt,
+                                  cfg, hts_iv)
+    sstep = make_sync_step(apply_token_policy, venv, opt, cfg)
+    _, m_sync = jax.jit(lambda c: jax.lax.scan(
+        sstep, c, None, length=sync_iv))(
+        sync_init_carry(params, opt, venv, cfg))
+    acfg = AsyncConfig(staleness=48, correction="vtrace")
+    astep = make_async_step(apply_token_policy, venv, opt, cfg, acfg)
+    _, m_async = jax.jit(lambda c: jax.lax.scan(
+        astep, c, None, length=BASE_INTERVALS))(
+        async_init_carry(params, opt, venv, cfg, acfg))
+
+    return [
+        ("tab1_budget_virtual_s", t_budget, "s"),
+        ("tab1_steps_hts", hts_iv * ALPHA * N_ENVS, "steps"),
+        ("tab1_steps_sync", sync_iv * ALPHA * N_ENVS, "steps"),
+        ("tab1_steps_async", BASE_INTERVALS * ALPHA * N_ENVS, "steps"),
+        ("tab1_reward_hts", tail_mean(m_hts["rewards"]), "r/step"),
+        ("tab1_reward_sync", tail_mean(m_sync["rewards"]), "r/step"),
+        ("tab1_reward_async_vtrace_k48", tail_mean(m_async["rewards"]),
+         "r/step"),
+    ]

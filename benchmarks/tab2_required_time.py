@@ -1,0 +1,63 @@
+"""Tab. 2: required-TIME metric — virtual wall-clock to reach a target
+reward on the mini-football drill (PPO), per system."""
+import numpy as np
+import jax
+
+from repro.core import mesh_runtime
+from repro.core.baselines import make_sync_step, sync_init_carry
+from repro.core.mesh_runtime import HTSConfig
+from repro.core.runtime_model import expected_runtime
+from repro.envs import football
+from repro.envs.interfaces import vectorize
+from repro.models.cnn_policy import apply_mlp_policy, init_mlp_policy
+from repro.optim import rmsprop
+
+N_ENVS, ALPHA, MAX_IV = 8, 16, 80
+LEARN_FRAC = 0.25
+
+
+def _first_hit(metrics, per_step_time, alpha, target):
+    r = np.asarray(metrics["rewards"])          # (iv, alpha, envs)
+    run = np.cumsum(r.reshape(r.shape[0], -1).mean(1)) / \
+        np.arange(1, r.shape[0] + 1)
+    hits = np.nonzero(run >= target)[0]
+    if len(hits) == 0:
+        return float("nan")
+    steps = (hits[0] + 1) * alpha * N_ENVS
+    return steps * per_step_time
+
+
+def run():
+    env1 = football.make()
+    venv = vectorize(env1, N_ENVS)
+    cfg = HTSConfig(alpha=ALPHA, n_envs=N_ENVS, seed=0, algorithm="ppo",
+                    use_gae=True)
+    params = init_mlp_policy(jax.random.key(0), env1.obs_shape[0],
+                             env1.n_actions)
+    opt = rmsprop(3e-4, eps=1e-5)
+    policy = apply_mlp_policy
+
+    K = MAX_IV * ALPHA * N_ENVS
+    t_hts = expected_runtime(K, N_ENVS, ALPHA, 1.0) / K
+    t_sync = (expected_runtime(K, N_ENVS, 1, 1.0) +
+              LEARN_FRAC * K / N_ENVS) / K
+
+    _, m_hts = mesh_runtime.train(params, policy, venv, opt, cfg, MAX_IV)
+    sstep = make_sync_step(policy, venv, opt, cfg)
+    _, m_sync = jax.jit(lambda c: jax.lax.scan(
+        sstep, c, None, length=MAX_IV))(
+        sync_init_carry(params, opt, venv, cfg))
+
+    def final(m):
+        r = np.asarray(m["rewards"])
+        return float(r[-r.shape[0] // 4:].mean())
+
+    # self-calibrating target: half the better system's final rate
+    target = 0.5 * max(final(m_hts), final(m_sync), 1e-4)
+    return [
+        ("tab2_target_goal_rate", target, "r/step"),
+        ("tab2_required_time_hts_ppo",
+         _first_hit(m_hts, t_hts, ALPHA, target), "virtual_s"),
+        ("tab2_required_time_sync_ppo",
+         _first_hit(m_sync, t_sync, ALPHA, target), "virtual_s"),
+    ]

@@ -1,0 +1,86 @@
+"""HTS-RL(A2C) vs synchronous A2C vs IMPALA-style async on a pixel env —
+the paper's Tab. 1 / Fig. 5 comparison, end-to-end.
+
+Uses the paper's conv policy trunk on GridMaze (the deterministic
+pixel-observation Atari stand-in; see DESIGN.md §8 for why not ALE).
+Reports final-metric rewards at equal environment steps AND virtual-time
+throughput under a high-variance step-time model (Claim 1's regime).
+
+    PYTHONPATH=src python examples/atari_a2c.py --intervals 120
+"""
+import argparse
+
+import numpy as np
+import jax
+
+from repro.configs.paper_cnn import CNNPolicyConfig
+from repro.core import mesh_runtime
+from repro.core.baselines import (AsyncConfig, async_init_carry,
+                                  make_async_step, make_sync_step,
+                                  sync_init_carry)
+from repro.core.mesh_runtime import HTSConfig
+from repro.core.runtime_model import expected_runtime
+from repro.envs import gridmaze
+from repro.envs.interfaces import vectorize
+from repro.models.cnn_policy import apply_cnn, init_cnn
+from repro.optim import rmsprop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--intervals", type=int, default=120)
+    ap.add_argument("--n-envs", type=int, default=8)
+    ap.add_argument("--alpha", type=int, default=5)
+    args = ap.parse_args()
+
+    env1 = gridmaze.make()
+    cfg = HTSConfig(alpha=args.alpha, n_envs=args.n_envs, seed=0,
+                    entropy_coef=0.01)
+    venv = vectorize(env1, cfg.n_envs)
+    ccfg = CNNPolicyConfig(obs_shape=env1.obs_shape, conv_sizes=(3, 3, 3),
+                           conv_strides=(1, 1, 1), hidden=128)
+
+    def policy(params, obs):
+        return apply_cnn(params, obs, ccfg)
+
+    params = init_cnn(jax.random.key(0), ccfg, env1.n_actions,
+                      env1.obs_shape)
+    opt = rmsprop(7e-4, eps=1e-5)
+
+    # --- HTS-RL
+    _, m_hts = mesh_runtime.train(params, policy, venv, opt, cfg,
+                                  args.intervals)
+    # --- synchronous A2C baseline
+    sstep = make_sync_step(policy, venv, opt, cfg)
+    sc = sync_init_carry(params, opt, venv, cfg)
+    _, m_sync = jax.jit(lambda c: jax.lax.scan(
+        sstep, c, None, length=args.intervals))(sc)
+    # --- IMPALA-style stale async
+    acfg = AsyncConfig(staleness=8, correction="vtrace")
+    astep = make_async_step(policy, venv, opt, cfg, acfg)
+    ac = async_init_carry(params, opt, venv, cfg, acfg)
+    _, m_async = jax.jit(lambda c: jax.lax.scan(
+        astep, c, None, length=args.intervals))(ac)
+
+    def tail(m):
+        r = np.asarray(m["rewards"])
+        return float(r[-max(1, len(r) // 5):].mean())
+
+    print(f"final-metric reward/step (last 20%):")
+    print(f"  HTS-RL(A2C):          {tail(m_hts):+.4f}")
+    print(f"  sync A2C:             {tail(m_sync):+.4f}")
+    print(f"  async+vtrace (k=8):   {tail(m_async):+.4f}")
+
+    # virtual-time: same steps, modeled wall-clock (Claim 1 regime:
+    # exponential step times, mean 1)
+    K = args.intervals * cfg.alpha * cfg.n_envs
+    t_hts = expected_runtime(K, cfg.n_envs, cfg.alpha, beta=1.0)
+    t_sync = expected_runtime(K, cfg.n_envs, 1, beta=1.0) + \
+        args.intervals * cfg.alpha * 0.05   # alternating learner time
+    print(f"modeled wall-clock for {K} steps (exp step times): "
+          f"HTS-RL {t_hts:.0f}s vs sync-A2C {t_sync:.0f}s "
+          f"({t_sync / t_hts:.2f}x speedup)")
+
+
+if __name__ == "__main__":
+    main()

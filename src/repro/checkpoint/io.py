@@ -1,0 +1,66 @@
+"""Checkpointing: flat .npz with pytree structure manifest (orbax is not
+available offline; this is self-contained and deterministic).
+
+Saves the full DelayedGradState — params, params_prev (the behavior
+snapshot matters: restoring only params would silently reset the
+one-step delay), optimizer state, and step.
+"""
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+from typing import Any
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, str(treedef)
+
+
+def save(path: str, tree: Any, metadata: dict | None = None) -> None:
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    # numpy's savez has no bf16 cast path: store bf16 leaves as f32
+    # (lossless upcast) and restore back to the reference dtype.
+    arrays = {}
+    for i, a in enumerate(leaves):
+        arr = np.asarray(a)
+        if arr.dtype.name == "bfloat16":
+            arr = arr.astype(np.float32)
+        arrays[f"leaf_{i}"] = arr
+    np.savez(path.with_suffix(".npz"), **arrays)
+    manifest = {
+        "n_leaves": len(leaves),
+        "dtypes": [str(np.asarray(a).dtype) for a in leaves],
+        "metadata": metadata or {},
+    }
+    path.with_suffix(".json").write_text(json.dumps(manifest, indent=1))
+
+
+def restore(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shape/dtype validated)."""
+    path = Path(path)
+    data = np.load(path.with_suffix(".npz"))
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    out = []
+    for i, ref in enumerate(leaves):
+        arr = data[f"leaf_{i}"]
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(
+                f"leaf {i}: checkpoint shape {arr.shape} != {ref.shape}")
+        out.append(jnp.asarray(arr).astype(ref.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def latest(dirpath: str) -> str | None:
+    d = Path(dirpath)
+    if not d.exists():
+        return None
+    cands = sorted(d.glob("step_*.npz"))
+    return str(cands[-1].with_suffix("")) if cands else None

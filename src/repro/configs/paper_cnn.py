@@ -1,0 +1,23 @@
+"""The paper's own policy networks (Atari / GFootball CNN).
+
+Four hidden layers: conv 32x8x8/4, conv 64x4x4/2, conv 64x3x3/1, fc 512,
+then policy + value heads (Espeholt et al. 2018 / Kuettler et al. 2019 /
+Kurach et al. 2019 -- identical trunk for all three systems compared in
+the paper). Used by the RL examples and benchmarks, not by the dry-run.
+"""
+from dataclasses import dataclass
+from typing import Tuple
+
+
+@dataclass(frozen=True)
+class CNNPolicyConfig:
+    name: str = "paper-cnn"
+    obs_shape: Tuple[int, int, int] = (84, 84, 4)
+    conv_filters: Tuple[int, ...] = (32, 64, 64)
+    conv_sizes: Tuple[int, ...] = (8, 4, 3)
+    conv_strides: Tuple[int, ...] = (4, 2, 1)
+    hidden: int = 512
+    n_actions: int = 18
+
+
+CONFIG = CNNPolicyConfig()

@@ -1,0 +1,24 @@
+"""Qwen2-VL 72B (language backbone). [arXiv:2409.12191]
+
+80L d_model=8192 64H (GQA kv=8) d_ff=29568 vocab=152064, M-RoPE
+(3 position streams: temporal/height/width). Vision tower (ViT) is a STUB
+per the carve-out: input_specs() provides patch embeddings merged at the
+sequence prefix. long_500k skipped (full attention).
+"""
+from repro.configs.base import ModelConfig, register, ATTN_FULL, FFN_DENSE
+
+CONFIG = register(ModelConfig(
+    name="qwen2-vl-72b",
+    family="vlm",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=29568,
+    vocab_size=152064,
+    mixer_cycle=(ATTN_FULL,),
+    mrope=True,
+    vision_prefix=256,            # merged patch-embedding prefix length
+    sub_quadratic=False,
+    source="arXiv:2409.12191",
+))

@@ -1,0 +1,153 @@
+"""Baselines the paper compares against, in the same harness:
+
+* ``make_sync_step``   — A2C/PPO with the conventional alternating schedule
+  (rollout, then update at the *same* params; no delay, no overlap).
+  Identical math to HTS-RL minus the one-step delay — used to show HTS-RL
+  matches its sample efficiency (Fig. 5 top row) while the virtual-clock
+  harness shows the throughput gap (bottom row).
+
+* ``make_async_step``  — GA3C/IMPALA-style stale-policy training: the
+  behavior policy lags k updates behind the target (k drawn from the
+  queueing process in expectation; here fixed/configurable), with
+  correction in {none, epsilon, truncated-IS, vtrace} (Eq. 5 + Sec. 2).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import losses, vtrace as vtrace_mod
+from repro.core.mesh_runtime import HTSConfig, _interval_loss
+from repro.core.rollout import RolloutConfig, rollout_interval
+from repro.envs.interfaces import Env
+from repro.optim import Optimizer, apply_updates
+
+
+def make_sync_step(policy_apply: Callable, env: Env, opt: Optimizer,
+                   cfg: HTSConfig):
+    """Conventional synchronous A2C/PPO interval (paper Fig. 2(c))."""
+    rcfg = RolloutConfig(cfg.alpha, cfg.n_envs)
+    master = jax.random.key(cfg.seed)
+    grad_fn = jax.grad(
+        lambda p, traj: _interval_loss(policy_apply, p, traj, cfg)[0])
+
+    def step(carry, _):
+        params, opt_state, env_state, obs, j = carry
+        traj, env_state, obs = rollout_interval(
+            policy_apply, env, params, env_state, obs, master,
+            j * cfg.alpha, rcfg)
+        grads = grad_fn(params, traj)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = {"rewards": traj["rewards"], "dones": traj["dones"]}
+        return (params, opt_state, env_state, obs, j + 1), metrics
+
+    return step
+
+
+def sync_init_carry(params, opt: Optimizer, env: Env, cfg: HTSConfig):
+    keys = jax.random.split(jax.random.key(cfg.seed ^ 0x5EED), cfg.n_envs)
+    env_state, obs = env.reset(keys)
+    return (params, opt.init(params), env_state, obs,
+            jnp.zeros((), jnp.int32))
+
+
+class AsyncConfig(NamedTuple):
+    staleness: int = 8             # behavior policy lag in updates
+    correction: str = "none"       # none | epsilon | trunc_is | vtrace
+    epsilon: float = 1e-3          # GA3C's eps-correction
+    rho_max: float = 1.0
+
+
+def _stale_loss(policy_apply, params_target, traj, cfg: HTSConfig,
+                acfg: AsyncConfig):
+    """Eq. (5): gradient at theta_j on data from theta_{j-k}, with the
+    chosen correction."""
+    A, N = traj["actions"].shape
+    obs = traj["obs"]
+    flat = obs.reshape((A * N,) + obs.shape[2:])
+    logits, values = policy_apply(params_target, flat)
+    logits = logits.reshape(A, N, -1)
+    values = values.reshape(A, N)
+    _, bv = policy_apply(params_target, traj["bootstrap_obs"])
+    bv = jax.lax.stop_gradient(bv)
+
+    if acfg.correction == "vtrace":
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+        tlp = jnp.take_along_axis(
+            logp, traj["actions"][..., None], axis=-1)[..., 0]
+        vt = vtrace_mod.vtrace(traj["behavior_logprob"],
+                               jax.lax.stop_gradient(tlp),
+                               traj["rewards"], traj["dones"],
+                               jax.lax.stop_gradient(values), bv, cfg.gamma,
+                               acfg.rho_max)
+        ent = -(jnp.exp(logp) * logp).sum(-1)
+        pg = -(tlp * vt.pg_advantages).mean()
+        vl = jnp.square(values - vt.vs).mean()
+        return pg + cfg.value_coef * vl - cfg.entropy_coef * ent.mean()
+
+    rets = losses.n_step_returns(traj["rewards"], traj["dones"], bv,
+                                 cfg.gamma)
+    adv = rets - jax.lax.stop_gradient(values)
+    if acfg.correction == "trunc_is":
+        st = losses.truncated_is_a2c_loss(
+            logits, values, traj["actions"], adv, rets,
+            traj["behavior_logprob"], acfg.rho_max,
+            cfg.value_coef, cfg.entropy_coef)
+        return st.total
+    if acfg.correction == "epsilon":
+        # GA3C: pi(a|s) <- pi(a|s) + eps inside the log
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+        p_a = jnp.exp(jnp.take_along_axis(
+            logp, traj["actions"][..., None], axis=-1))[..., 0]
+        lp = jnp.log(p_a + acfg.epsilon)
+        ent = -(jnp.exp(logp) * logp).sum(-1)
+        pg = -(lp * jax.lax.stop_gradient(adv)).mean()
+        vl = jnp.square(values - rets).mean()
+        return pg + cfg.value_coef * vl - cfg.entropy_coef * ent.mean()
+    st = losses.a2c_loss(logits, values, traj["actions"], adv, rets,
+                         cfg.value_coef, cfg.entropy_coef)
+    return st.total
+
+
+def make_async_step(policy_apply: Callable, env: Env, opt: Optimizer,
+                    cfg: HTSConfig, acfg: AsyncConfig):
+    """Stale-policy actor-learner step: rollout uses params from k updates
+    ago (a FIFO of snapshots in the carry), learner differentiates the
+    current params on that stale data."""
+    rcfg = RolloutConfig(cfg.alpha, cfg.n_envs)
+    master = jax.random.key(cfg.seed)
+    grad_fn = jax.grad(
+        lambda p, traj: _stale_loss(policy_apply, p, traj, cfg, acfg))
+
+    def step(carry, _):
+        params, opt_state, history, env_state, obs, j = carry
+        # behavior = oldest snapshot (k updates behind)
+        behavior = jax.tree.map(lambda h: h[0], history)
+        traj, env_state, obs = rollout_interval(
+            policy_apply, env, behavior, env_state, obs, master,
+            j * cfg.alpha, rcfg)
+        grads = grad_fn(params, traj)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        # roll the snapshot FIFO
+        history = jax.tree.map(
+            lambda h, p: jnp.concatenate([h[1:], p[None]], axis=0),
+            history, params)
+        metrics = {"rewards": traj["rewards"], "dones": traj["dones"]}
+        return (params, opt_state, history, env_state, obs, j + 1), metrics
+
+    return step
+
+
+def async_init_carry(params, opt: Optimizer, env: Env, cfg: HTSConfig,
+                     acfg: AsyncConfig):
+    keys = jax.random.split(jax.random.key(cfg.seed ^ 0x5EED), cfg.n_envs)
+    env_state, obs = env.reset(keys)
+    history = jax.tree.map(
+        lambda p: jnp.broadcast_to(p[None], (acfg.staleness,) + p.shape),
+        params)
+    return (params, opt.init(params), history, env_state, obs,
+            jnp.zeros((), jnp.int32))

@@ -1,0 +1,131 @@
+"""The two data storages (paper Fig. 1(e)) — double-buffered trajectory
+storage.
+
+Two views:
+
+* ``HostStorage`` / ``DoubleBuffer`` — preallocated numpy ring storage with
+  the paper's swap discipline for the threaded host runtime: the roles of
+  the two storages switch only when the write storage is full AND the read
+  storage is exhausted (that barrier is what bounds staleness to one).
+
+* ``device_rollout_buffer`` — a functional pytree used by the mesh runtime,
+  where the "swap" is positional in the scan carry (the freshly produced
+  rollout becomes next iteration's read buffer).
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------------------ host
+class HostStorage:
+    """Preallocated (capacity, ...) numpy arrays + a write cursor."""
+
+    def __init__(self, capacity: int, specs: Dict[str, tuple]):
+        # specs: name -> (shape_tail, dtype)
+        self.capacity = capacity
+        self.data = {k: np.zeros((capacity,) + tuple(s), d)
+                     for k, (s, d) in specs.items()}
+        self.write_idx = 0
+        self.read_count = 0
+
+    def write(self, **items) -> None:
+        i = self.write_idx
+        assert i < self.capacity, "storage overflow"
+        for k, v in items.items():
+            self.data[k][i] = v
+        self.write_idx += 1
+
+    @property
+    def full(self) -> bool:
+        return self.write_idx >= self.capacity
+
+    def mark_read(self) -> None:
+        self.read_count += 1
+
+    @property
+    def exhausted(self) -> bool:
+        return self.read_count >= 1   # learner does >=1 pass then releases
+
+    def reset(self) -> None:
+        self.write_idx = 0
+        self.read_count = 0
+
+
+class DoubleBuffer:
+    """Two HostStorages with the HTS-RL swap barrier.
+
+    Executors call ``write``; the learner calls ``acquire_read`` /
+    ``release_read``. ``swap`` blocks until (write full) & (read exhausted),
+    which is exactly the synchronization in Sec. 4.1 — it bounds the
+    behavior/target lag at one and is the price of determinism.
+    """
+
+    def __init__(self, capacity: int, specs: Dict[str, tuple]):
+        self.storages = [HostStorage(capacity, specs),
+                         HostStorage(capacity, specs)]
+        self.write_role = 0
+        self.cv = threading.Condition()
+        self.generation = 0
+        self._first = True
+
+    @property
+    def write_storage(self) -> HostStorage:
+        return self.storages[self.write_role]
+
+    @property
+    def read_storage(self) -> HostStorage:
+        return self.storages[1 - self.write_role]
+
+    def writer_wait_until_writable(self, timeout=None) -> bool:
+        with self.cv:
+            return self.cv.wait_for(
+                lambda: not self.write_storage.full, timeout=timeout)
+
+    def write(self, **items) -> None:
+        with self.cv:
+            self.write_storage.write(**items)
+            if self.write_storage.full:
+                self.cv.notify_all()
+
+    def reader_acquire(self, timeout=None) -> Optional[HostStorage]:
+        """Block until a full storage is available to read; returns it."""
+        with self.cv:
+            ok = self.cv.wait_for(lambda: self.write_storage.full,
+                                  timeout=timeout)
+            if not ok:
+                return None
+            return self.write_storage
+
+    def swap(self) -> None:
+        """Called by the coordinator once learner + executors both finished
+        their interval: the just-written storage becomes readable and the
+        (now exhausted) read storage is recycled for writing."""
+        with self.cv:
+            self.read_storage.reset()
+            self.write_role = 1 - self.write_role
+            self.generation += 1
+            self.cv.notify_all()
+
+
+# ---------------------------------------------------------------- device
+def device_rollout_buffer(n_envs: int, alpha: int, obs_shape, obs_dtype,
+                          action_dtype=jnp.int32):
+    """Zero-initialized (alpha, n_envs, ...) trajectory pytree for the mesh
+    runtime's scan carry. The double buffer is positional: the learner reads
+    the carry slot while the rollout fills a fresh pytree; the new pytree
+    replaces the carry slot at the end of the interval."""
+    return {
+        "obs": jnp.zeros((alpha, n_envs) + tuple(obs_shape), obs_dtype),
+        "actions": jnp.zeros((alpha, n_envs), action_dtype),
+        "rewards": jnp.zeros((alpha, n_envs), jnp.float32),
+        "dones": jnp.ones((alpha, n_envs), jnp.float32),
+        "behavior_logprob": jnp.zeros((alpha, n_envs), jnp.float32),
+        "bootstrap_obs": jnp.zeros((n_envs,) + tuple(obs_shape), obs_dtype),
+    }

@@ -1,0 +1,65 @@
+"""One-step delayed gradient (paper Sec. 4.1, Eq. 6; appendix C).
+
+    theta_{j+1} = theta_j + eta * grad_{theta_{j-1}} J(theta_{j-1}, D^{theta_{j-1}})
+
+The gradient is computed at the *behavior* parameters (one update old) on
+the data those parameters generated — so the pg estimator itself stays
+on-policy — and only its application point is delayed by one. With the
+double-buffer schedule the delay is exactly one by construction, keeping
+the O(1/sqrt(T)) rate of the undelayed method (Langford et al., 2009).
+
+``DelayedGradState`` carries (params_cur, params_prev, opt_state). The
+``update`` is a pure function usable under jit/pjit; ``grads`` must have
+been taken at ``state.params_prev``.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import Optimizer, apply_updates
+
+
+class DelayedGradState(NamedTuple):
+    params: Any         # theta_j  (target policy — receives updates)
+    params_prev: Any    # theta_{j-1} (behavior policy — gradient point)
+    opt_state: Any
+    step: jnp.ndarray
+
+
+def init(params, opt: Optimizer) -> DelayedGradState:
+    return DelayedGradState(
+        params=params,
+        params_prev=jax.tree.map(jnp.copy, params),
+        opt_state=opt.init(params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def update(state: DelayedGradState, grads, opt: Optimizer,
+           skip: jnp.ndarray | None = None) -> DelayedGradState:
+    """Apply a gradient taken at params_prev to params.
+
+    skip: optional bool — when True the parameter update is suppressed but
+    the behavior snapshot still advances (used for the bootstrap interval
+    where the read storage is still empty)."""
+    updates, opt_state = opt.update(grads, state.opt_state, state.params)
+    new_params = apply_updates(state.params, updates)
+    if skip is not None:
+        keep = lambda new, old: jax.tree.map(
+            lambda n, o: jnp.where(skip, o, n), new, old)
+        new_params = keep(new_params, state.params)
+        opt_state = keep(opt_state, state.opt_state)
+    return DelayedGradState(
+        params=new_params,
+        params_prev=state.params,     # behavior policy advances by one
+        opt_state=opt_state,
+        step=state.step + 1,
+    )
+
+
+def behavior_lag(state: DelayedGradState) -> int:
+    """The structural guarantee: behavior is exactly one update behind."""
+    return 1

@@ -1,0 +1,35 @@
+"""Executor-owned randomness (paper Sec. 4.1, 'Asynchronous actors and
+executors').
+
+Actors batch whichever observations happen to be in the state buffer, so
+*which actor* samples an action for a given observation is racy. The paper
+makes sampling deterministic anyway by attaching a pseudo-random seed to
+each observation at the executor (whose own stream is deterministic).
+
+Here the seed is a jax PRNG key derived only from (run_seed, env_id, step)
+— an order-independent function, so any actor, any batch composition, any
+interleaving produces the same action for the same observation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def master_key(run_seed: int):
+    return jax.random.key(run_seed)
+
+
+def obs_key(master, env_id, step):
+    """Key for the action sampled for (env_id, step). Both may be traced."""
+    return jax.random.fold_in(jax.random.fold_in(master, env_id), step)
+
+
+def obs_keys(master, env_ids, step):
+    """Vectorized: env_ids (n,) -> keys (n,)."""
+    return jax.vmap(lambda e: obs_key(master, e, step))(env_ids)
+
+
+def sample_action(key, logits):
+    """Categorical sample — the only stochastic op in the rollout path."""
+    return jax.random.categorical(key, logits.astype(jnp.float32), axis=-1)

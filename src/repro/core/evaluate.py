@@ -1,0 +1,130 @@
+"""The paper's evaluation protocol (Sec. 5, following Henderson et al.
+2017 / Colas et al. 2018) as a reusable module.
+
+* ``final_metric``          — mean over the last ``n_episodes`` completed
+  evaluation episodes across the last ``n_policies`` policies (paper: 100
+  episodes = 10 episodes x last 10 policies).
+* ``final_time_metric``     — final_metric at a wall-clock budget: the
+  training stream is truncated at ``time_limit`` (virtual or real
+  seconds) before applying final_metric.
+* ``required_time_metric``  — first time the running average of the most
+  recent ``window`` completed episodes reaches ``target``.
+* ``bootstrap_ci``          — percentile bootstrap CI over episode
+  returns (paper: 10k resamples, 95%).
+* ``evaluate_policy``       — runs no-op-started greedy/sampled episodes
+  (the paper's 30-no-op Atari convention, parameterized).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import determinism
+from repro.envs.interfaces import Env
+
+
+def episode_returns_from_stream(rewards, dones) -> np.ndarray:
+    """(T, N) reward/done streams -> array of completed episode returns
+    in completion order (row-major over time, then env)."""
+    r = np.asarray(rewards, np.float64)
+    d = np.asarray(dones)
+    acc = np.zeros(r.shape[1])
+    out = []
+    for t in range(r.shape[0]):
+        acc += r[t]
+        done_envs = np.nonzero(d[t] > 0)[0]
+        for e in done_envs:
+            out.append(acc[e])
+            acc[e] = 0.0
+    return np.asarray(out)
+
+
+def final_metric(rewards, dones, n_episodes: int = 100) -> float:
+    eps = episode_returns_from_stream(rewards, dones)
+    if len(eps) == 0:
+        return float("nan")
+    return float(eps[-n_episodes:].mean())
+
+
+def final_time_metric(rewards, dones, step_times,
+                      time_limit: float, n_episodes: int = 100) -> float:
+    """step_times: per-row wall/virtual duration (T,). Truncate the stream
+    at the cumulative time budget, then final_metric."""
+    ct = np.cumsum(np.asarray(step_times, np.float64))
+    cut = int(np.searchsorted(ct, time_limit, side="right"))
+    return final_metric(np.asarray(rewards)[:cut],
+                        np.asarray(dones)[:cut], n_episodes)
+
+
+def required_time_metric(rewards, dones, step_times, target: float,
+                         window: int = 100) -> float:
+    """Seconds (same unit as step_times) until the running mean of the
+    last ``window`` completed episodes first reaches ``target``; inf if
+    never."""
+    r = np.asarray(rewards, np.float64)
+    d = np.asarray(dones)
+    ct = np.cumsum(np.asarray(step_times, np.float64))
+    acc = np.zeros(r.shape[1])
+    recent: list = []
+    for t in range(r.shape[0]):
+        acc += r[t]
+        for e in np.nonzero(d[t] > 0)[0]:
+            recent.append(acc[e])
+            acc[e] = 0.0
+        if recent and np.mean(recent[-window:]) >= target:
+            return float(ct[t])
+    return float("inf")
+
+
+def bootstrap_ci(samples: Sequence[float], n_boot: int = 10_000,
+                 alpha: float = 0.05, seed: int = 0
+                 ) -> Tuple[float, float, float]:
+    """(mean, lo, hi) percentile bootstrap CI (paper: Facebook Bootstrapped
+    settings — 10k resamples, 95%)."""
+    x = np.asarray(samples, np.float64)
+    if len(x) == 0:
+        return float("nan"), float("nan"), float("nan")
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, len(x), size=(n_boot, len(x)))
+    means = x[idx].mean(axis=1)
+    return (float(x.mean()),
+            float(np.percentile(means, 100 * alpha / 2)),
+            float(np.percentile(means, 100 * (1 - alpha / 2))))
+
+
+def evaluate_policy(policy_apply: Callable, params, env: Env,
+                    n_episodes: int = 10, max_steps: int = 1000,
+                    noop_max: int = 0, noop_action: int = 0,
+                    greedy: bool = True, seed: int = 0) -> np.ndarray:
+    """Run evaluation episodes (single env, sequential). The paper's
+    Atari convention applies up to ``noop_max`` no-op actions at episode
+    start. Returns the per-episode returns."""
+    master = determinism.master_key(seed)
+    out = []
+    for ep in range(n_episodes):
+        key = jax.random.fold_in(master, ep)
+        state, obs = env.reset(key)
+        n_noop = int(jax.random.randint(jax.random.fold_in(key, 1), (),
+                                        0, noop_max + 1)) if noop_max else 0
+        ret, done = 0.0, False
+        for t in range(max_steps):
+            if t < n_noop:
+                a = jnp.int32(noop_action)
+            else:
+                logits, _ = policy_apply(params, obs[None])
+                if greedy:
+                    a = jnp.argmax(logits[0]).astype(jnp.int32)
+                else:
+                    a = determinism.sample_action(
+                        determinism.obs_key(master, ep, t), logits[0])
+            state, obs, r, d = env.step(state, a,
+                                        jax.random.fold_in(key, 100 + t))
+            ret += float(r)
+            if float(d) > 0:
+                done = True
+                break
+        out.append(ret)
+    return np.asarray(out)

@@ -1,0 +1,244 @@
+"""Faithful threaded HTS-RL (paper Fig. 1(e) / Fig. 2(d)) on a single host.
+
+Process layout (paper -> here): executor processes -> one thread per
+environment replica; actor processes -> ``n_actors`` threads batching
+whatever observations are in the state buffer; learner -> the coordinator
+thread. JAX releases the GIL inside compiled computations, so threads give
+the same concurrency the paper gets from processes (see DESIGN.md §2).
+
+Key properties implemented exactly as in the paper:
+  * state buffer / action buffer between executors and actors (queues),
+    actors poll and batch asynchronously;
+  * per-observation executor-attached seeds -> deterministic actions
+    regardless of actor count/batching (Sec. 4.1 'full determinism');
+  * two data storages with the swap barrier (core/buffers.py);
+  * learner computes the gradient at theta_{j-1} on D^{theta_{j-1}} while
+    executors collect D^{theta_j} — one-step delayed gradient (Eq. 6);
+  * batch synchronization every alpha steps.
+
+``step_time`` (optional) injects simulated environment step durations via
+``time.sleep`` for wall-clock throughput experiments.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import delayed_grad, determinism
+from repro.core.buffers import DoubleBuffer
+from repro.core.mesh_runtime import HTSConfig, _interval_loss
+from repro.envs.interfaces import Env
+from repro.envs.steptime import StepTimeModel
+from repro.optim import Optimizer
+
+
+@dataclass
+class HostConfig:
+    n_actors: int = 4
+    step_time: Optional[StepTimeModel] = None
+    time_scale: float = 1.0          # multiply simulated durations
+    actor_compute: float = 0.0       # optional simulated actor latency
+
+
+class HostHTSRL:
+    def __init__(self, env: Env, policy_apply: Callable, params,
+                 opt: Optimizer, cfg: HTSConfig, host: HostConfig):
+        self.env = env
+        self.cfg = cfg
+        self.host = host
+        self.opt = opt
+        self.policy_apply = policy_apply
+        self.master = jax.random.key(cfg.seed)
+        self.dg = delayed_grad.init(params, opt)
+
+        self._env_step = jax.jit(env.step)
+        self._env_reset = jax.jit(env.reset)
+
+        # fixed-batch actor forward (padded to n_envs -> one compile)
+        def actor_fwd(p, obs, seeds):
+            logits, _ = policy_apply(p, obs)
+            keys = jax.vmap(jax.random.wrap_key_data)(seeds)
+            actions = jax.vmap(determinism.sample_action)(keys, logits)
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+            blp = jnp.take_along_axis(logp, actions[:, None], axis=-1)[:, 0]
+            return actions, blp
+
+        self._actor_fwd = jax.jit(actor_fwd)
+        self._grad = jax.jit(jax.grad(
+            lambda p, traj: _interval_loss(policy_apply, p, traj, cfg)[0]))
+        self._update = jax.jit(
+            lambda dg, grads: delayed_grad.update(dg, grads, opt))
+
+        obs_shape = env.obs_shape
+        spec = {
+            "obs": (obs_shape, np.float32 if obs_shape else np.int32),
+            "actions": ((), np.int32),
+            "rewards": ((), np.float32),
+            "dones": ((), np.float32),
+            "behavior_logprob": ((), np.float32),
+        }
+        self.buffer = DoubleBuffer(cfg.alpha * cfg.n_envs, spec)
+        self.bootstrap_obs = np.zeros((cfg.n_envs,) + tuple(obs_shape),
+                                      spec["obs"][1])
+        # per-env current state/obs
+        keys = jax.random.split(jax.random.key(cfg.seed ^ 0x5EED),
+                                cfg.n_envs)
+        self.env_states, self.obs = [], []
+        for i in range(cfg.n_envs):
+            s, o = self._env_reset(keys[i])
+            self.env_states.append(s)
+            self.obs.append(np.asarray(o))
+        self.rewards_log: list = []
+        self.dones_log: list = []
+        self.sps_steps = 0
+        self.wall_time = 0.0
+
+    # ------------------------------------------------------------ actors
+    def _actor_loop(self, state_q: "queue.Queue", action_slots, params):
+        n = self.cfg.n_envs
+        while True:
+            try:
+                first = state_q.get(timeout=5.0)
+            except queue.Empty:
+                return
+            if first is None:
+                return
+            batch = [first]
+            while len(batch) < n:
+                try:
+                    batch.append(state_q.get_nowait())
+                except queue.Empty:
+                    break
+            if batch[-1] is None:
+                state_q.put(None)      # keep sentinel for other actors
+                batch = batch[:-1]
+                if not batch:
+                    return
+            env_ids = [b[0] for b in batch]
+            obs = np.stack([b[2] for b in batch])
+            seeds = np.stack([b[3] for b in batch])
+            pad = n - len(batch)
+            if pad:
+                obs = np.concatenate([obs, np.zeros((pad,) + obs.shape[1:],
+                                                    obs.dtype)])
+                seeds = np.concatenate([seeds, seeds[-1:].repeat(pad, 0)])
+            if self.host.actor_compute:
+                time.sleep(self.host.actor_compute * self.host.time_scale)
+            actions, blp = self._actor_fwd(params, jnp.asarray(obs),
+                                           jnp.asarray(seeds))
+            actions = np.asarray(actions)
+            blp = np.asarray(blp)
+            for i, eid in enumerate(env_ids):
+                action_slots[eid].put((int(actions[i]), float(blp[i])))
+
+    # --------------------------------------------------------- executors
+    def _executor_loop(self, env_id: int, interval_j: int,
+                       state_q: "queue.Queue", action_slots):
+        cfg, host = self.cfg, self.host
+        obs = self.obs[env_id]
+        state = self.env_states[env_id]
+        for t in range(cfg.alpha):
+            gstep = interval_j * cfg.alpha + t
+            key = determinism.obs_key(self.master, env_id, gstep)
+            seed = np.asarray(jax.random.key_data(key))
+            state_q.put((env_id, t, obs, seed))
+            action, blp = action_slots[env_id].get()
+            if host.step_time is not None:
+                dt = host.step_time.sample(env_id, gstep, cfg.seed)
+                time.sleep(dt * host.time_scale)
+            skey = determinism.obs_key(self.master, env_id + 1_000_003,
+                                       gstep)
+            state, nobs, r, d = self._env_step(state, jnp.asarray(action),
+                                               skey)
+            nobs = np.asarray(nobs)
+            self.buffer.write_storage.data["obs"][t * cfg.n_envs + env_id] = obs
+            st = self.buffer.write_storage
+            idx = t * cfg.n_envs + env_id
+            st.data["actions"][idx] = action
+            st.data["rewards"][idx] = float(r)
+            st.data["dones"][idx] = float(d)
+            st.data["behavior_logprob"][idx] = blp
+            obs = nobs
+        with self.buffer.cv:
+            self.buffer.write_storage.write_idx = \
+                min(self.buffer.write_storage.write_idx + cfg.alpha,
+                    self.buffer.write_storage.capacity)
+        self.obs[env_id] = obs
+        self.env_states[env_id] = state
+        self.bootstrap_obs[env_id] = obs
+
+    # ------------------------------------------------------------- learn
+    def _learn(self, read_traj):
+        grads = self._grad(self.dg.params_prev, read_traj)
+        self.dg = self._update(self.dg, grads)
+
+    def _storage_to_traj(self, storage, bootstrap_obs):
+        # NOTE: explicit .copy() — jnp.asarray on the CPU backend can alias
+        # the numpy buffer zero-copy, and both the storages (after a swap)
+        # and bootstrap_obs are mutated in place by the next interval's
+        # executors while the learner is still reading this snapshot.
+        cfg = self.cfg
+        out = {}
+        for k, arr in storage.data.items():
+            out[k] = jnp.asarray(
+                arr.reshape((cfg.alpha, cfg.n_envs) + arr.shape[1:]).copy())
+        out["bootstrap_obs"] = jnp.asarray(bootstrap_obs.copy())
+        return out
+
+    # --------------------------------------------------------------- run
+    def run(self, n_intervals: int):
+        cfg = self.cfg
+        t_start = time.perf_counter()
+        prev_traj = None
+        prev_bootstrap = None
+        for j in range(n_intervals):
+            state_q: "queue.Queue" = queue.Queue()
+            action_slots = {i: queue.Queue() for i in range(cfg.n_envs)}
+            behavior = self.dg.params     # theta_j
+            actors = [threading.Thread(
+                target=self._actor_loop, args=(state_q, action_slots,
+                                               behavior), daemon=True)
+                for _ in range(self.host.n_actors)]
+            execs = [threading.Thread(
+                target=self._executor_loop, args=(i, j, state_q,
+                                                  action_slots), daemon=True)
+                for i in range(cfg.n_envs)]
+            for th in actors + execs:
+                th.start()
+            # learner runs concurrently on the *previous* interval's data
+            if prev_traj is not None:
+                self._learn(prev_traj)
+            for th in execs:
+                th.join()
+            state_q.put(None)
+            for th in actors:
+                th.join()
+            # interval done: record, snapshot read data, swap storages
+            st = self.buffer.write_storage
+            prev_traj = self._storage_to_traj(st, self.bootstrap_obs)
+            r = st.data["rewards"].reshape(cfg.alpha, cfg.n_envs)
+            d = st.data["dones"].reshape(cfg.alpha, cfg.n_envs)
+            self.rewards_log.append(r.copy())
+            self.dones_log.append(d.copy())
+            self.sps_steps += cfg.alpha * cfg.n_envs
+            self.buffer.swap()
+        # trailing learner pass on the final interval's data
+        if prev_traj is not None:
+            self._learn(prev_traj)
+        self.wall_time = time.perf_counter() - t_start
+        return {
+            "params": self.dg.params,
+            "dg": self.dg,
+            "steps": self.sps_steps,
+            "wall_time": self.wall_time,
+            "sps": self.sps_steps / max(self.wall_time, 1e-9),
+            "rewards": np.stack(self.rewards_log),
+            "dones": np.stack(self.dones_log),
+        }

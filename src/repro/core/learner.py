@@ -1,0 +1,214 @@
+"""The HTS-RL learner at LLM scale: A2C/PPO updates over token
+trajectories with any assigned backbone as the policy/value network.
+
+``train_step`` is the learner half of the fused HTS-RL interval (the
+gradient is taken at ``dg.params_prev`` — the behavior policy — per the
+one-step delayed gradient), and is what the multi-pod dry-run lowers for
+the ``train_4k`` shape. ``prefill_step``/``serve_step`` are the actor
+side (what actors run while executors step environments), lowered for the
+``prefill_32k`` / ``decode_32k`` / ``long_500k`` shapes.
+
+The per-block forward inside the scan is wrapped in ``jax.checkpoint``
+for training so the backward pass rematerializes instead of storing every
+intermediate (80-layer x 1M-token batches would otherwise need PBs of
+activation memory).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import delayed_grad, losses
+from repro.models import backbone
+from repro.optim import Optimizer
+from repro.sharding.constraints import constrain
+
+
+def policy_hidden(params, cfg: ModelConfig, batch, remat: bool = True):
+    """(hidden (B,S,D), aux)."""
+    hidden, _, aux = backbone.forward(
+        params, cfg, batch["tokens"],
+        positions=batch.get("positions"),
+        mrope_positions=batch.get("mrope_positions"),
+        patch_embeds=batch.get("patch_embeds"),
+        audio_embeds=batch.get("audio_embeds"),
+        remat=remat)
+    return hidden, aux
+
+
+def policy_outputs(params, cfg: ModelConfig, batch, remat: bool = True):
+    """(logits (B,S,V) f32, values (B,S) f32, aux). Materializes the full
+    logits tensor — fine at smoke-test scale; the production loss path is
+    the chunked one below."""
+    hidden, aux = policy_hidden(params, cfg, batch, remat)
+    logits, values = backbone.logits_and_value(params, cfg, hidden)
+    return logits, values, aux
+
+
+def _chunked_rl_loss(params, cfg: ModelConfig, hidden, batch,
+                     algorithm: str, value_coef: float, entropy_coef: float,
+                     ppo_clip: float, chunk: int):
+    """Sequence-chunked loss: the (B, S, V) logits tensor is never
+    materialized — at train_4k x 200k-vocab scale it would be hundreds of
+    TB in f32. Each chunk computes logits -> per-token loss sums and is
+    rematerialized in the backward pass (jax.checkpoint around the chunk
+    body inside the scan)."""
+    from repro.models import layers as L
+
+    B, S, D = hidden.shape
+    chunk = min(chunk, S)
+    while S % chunk:          # largest divisor <= requested chunk
+        chunk -= 1
+    n_chunks = S // chunk
+    Sc = n_chunks * chunk
+    lm_head, value_head = params["lm_head"], params["value_head"]
+
+    def split(x, width=None):
+        w = width if width is not None else chunk
+        return jnp.moveaxis(
+            x[:, :Sc].reshape(B, n_chunks, w, *x.shape[2:]), 1, 0)
+
+    h_c = split(hidden)
+    act_c = split(batch["actions"])
+    adv_c = split(batch["advantages"])
+    ret_c = split(batch["returns"])
+    blp_c = split(batch["behavior_logprob"])
+    mask = batch.get("loss_mask")
+    mask_c = split(mask) if mask is not None else jnp.ones_like(adv_c)
+
+    def chunk_sums(h, act, adv, ret, blp, m):
+        h = constrain(h, "batch", None, None)
+        logits = jnp.einsum("bsd,dv->bsv", h, lm_head).astype(jnp.float32)
+        logits = constrain(logits, "batch", None, "vocab")
+        logits = L.softcap(logits, cfg.final_softcap)
+        values = jnp.einsum("bsd,dk->bsk", h.astype(jnp.float32),
+                            value_head)[..., 0]
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        lp = jnp.take_along_axis(logp, act[..., None], axis=-1)[..., 0]
+        ent = -jnp.sum(jnp.exp(logp) * logp, axis=-1)
+        adv = jax.lax.stop_gradient(adv.astype(jnp.float32))
+        if algorithm == "ppo":
+            ratio = jnp.exp(lp - blp.astype(jnp.float32))
+            un = ratio * adv
+            cl = jnp.clip(ratio, 1 - ppo_clip, 1 + ppo_clip) * adv
+            pg = -(jnp.minimum(un, cl) * m)
+        else:
+            pg = -(lp * adv * m)
+        vl = jnp.square(values - ret.astype(jnp.float32)) * m
+        return (pg.sum(), vl.sum(), (ent * m).sum(), m.sum())
+
+    chunk_sums = jax.checkpoint(chunk_sums)
+
+    def body(carry, xs):
+        sums = chunk_sums(*xs)
+        return jax.tree.map(jnp.add, carry, sums), None
+
+    init = (jnp.zeros(()), jnp.zeros(()), jnp.zeros(()), jnp.zeros(()))
+    (pg, vl, ent, cnt), _ = jax.lax.scan(
+        body, init, (h_c, act_c, adv_c, ret_c, blp_c, mask_c))
+    denom = jnp.maximum(cnt, 1.0)
+    pg, vl, ent = pg / denom, vl / denom, ent / denom
+    total = pg + value_coef * vl - entropy_coef * ent
+    return losses.LossStats(total, pg, vl, ent)
+
+
+def rl_loss(params, cfg: ModelConfig, batch, algorithm: str = "a2c",
+            value_coef: float = 0.5, entropy_coef: float = 0.01,
+            ppo_clip: float = 0.2, loss_chunk: int = 512):
+    hidden, aux = policy_hidden(params, cfg, batch)
+    hidden = constrain(hidden, "batch", None, None)
+    st = _chunked_rl_loss(params, cfg, hidden, batch, algorithm,
+                          value_coef, entropy_coef, ppo_clip, loss_chunk)
+    return st.total + aux, st
+
+
+def make_train_step(cfg: ModelConfig, opt: Optimizer,
+                    algorithm: str = "a2c",
+                    n_microbatches: int = 1) -> Callable:
+    """(dg_state, batch) -> (dg_state', stats). Pure; pjit-able.
+
+    n_microbatches > 1: gradient accumulation — the global batch is
+    split on its leading axis and the backward runs per slice, dividing
+    activation memory by the microbatch count at no collective cost
+    (grads are summed locally; the parameter update happens once)."""
+
+    def grad_one(params, batch):
+        grad_fn = jax.value_and_grad(
+            lambda p: rl_loss(p, cfg, batch, algorithm), has_aux=True)
+        (_, st), grads = grad_fn(params)
+        return grads, st
+
+    def train_step(dg: delayed_grad.DelayedGradState, batch):
+        if n_microbatches <= 1:
+            grads, st = grad_one(dg.params_prev, batch)
+        else:
+            def split(x):
+                B = x.shape[0] if x.ndim else 1
+                if x.ndim >= 1 and B % n_microbatches == 0:
+                    return jnp.moveaxis(
+                        x.reshape((n_microbatches, B // n_microbatches)
+                                  + x.shape[1:]), 0, 0)
+                return jnp.broadcast_to(x, (n_microbatches,) + x.shape)
+
+            def split_batch(b):
+                out = {}
+                for k, v in b.items():
+                    if k == "mrope_positions":   # (3, B, S)
+                        out[k] = jnp.moveaxis(
+                            v.reshape(v.shape[0], n_microbatches, -1,
+                                      v.shape[2]), 1, 0)
+                    else:
+                        out[k] = split(v)
+                return out
+
+            micro = split_batch(batch)
+
+            def body(carry, mb):
+                g_acc, st_acc = carry
+                g, st = grad_one(dg.params_prev, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                st_acc = jax.tree.map(jnp.add, st_acc, st)
+                return (g_acc, st_acc), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), dg.params_prev)
+            st0 = losses.LossStats(*(jnp.zeros(()) for _ in range(4)))
+            (grads, st), _ = jax.lax.scan(body, (g0, st0), micro)
+            grads = jax.tree.map(lambda g: g / n_microbatches, grads)
+            st = jax.tree.map(lambda x: x / n_microbatches, st)
+        new_dg = delayed_grad.update(dg, grads, opt)
+        stats = {"loss": st.total, "pg": st.pg, "value": st.value,
+                 "entropy": st.entropy}
+        return new_dg, stats
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int) -> Callable:
+    def prefill_step(params, batch):
+        return backbone.prefill(
+            params, cfg, batch["tokens"], max_len,
+            positions=batch.get("positions"),
+            mrope_positions=batch.get("mrope_positions"),
+            patch_embeds=batch.get("patch_embeds"),
+            audio_embeds=batch.get("audio_embeds"))
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    """One-token decode; the actor's hot path."""
+
+    def serve_step(params, token, cache, pos, extras=None):
+        extras = extras or {}
+        logits, value, new_cache = backbone.decode_step(
+            params, cfg, token, cache, pos,
+            mrope_positions=extras.get("mrope_positions"),
+            enc_out=extras.get("enc_out"))
+        return logits, value, new_cache
+
+    return serve_step

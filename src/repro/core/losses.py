@@ -1,0 +1,126 @@
+"""Actor-critic losses: n-step returns, GAE, A2C (paper Eq. 4), PPO-clip.
+
+Trajectory layout is time-major ``(T, B, ...)`` for the RL runtimes and
+token-major ``(B, S)`` for the sequence-model learner; both reduce to the
+same math. All loss arithmetic is f32.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class LossStats(NamedTuple):
+    total: jnp.ndarray
+    pg: jnp.ndarray
+    value: jnp.ndarray
+    entropy: jnp.ndarray
+
+
+def n_step_returns(rewards, dones, bootstrap_value, gamma: float):
+    """rewards/dones: (T, B); bootstrap_value: (B,). Returns (T, B).
+
+    R_t = r_t + gamma * (1 - done_t) * R_{t+1}, R_T seeded by the critic.
+    """
+    def step(ret, inp):
+        r, d = inp
+        ret = r + gamma * (1.0 - d) * ret
+        return ret, ret
+
+    _, rets = jax.lax.scan(step, bootstrap_value.astype(jnp.float32),
+                           (rewards.astype(jnp.float32),
+                            dones.astype(jnp.float32)), reverse=True)
+    return rets
+
+
+def gae(rewards, dones, values, bootstrap_value, gamma: float,
+        lam: float = 0.95):
+    """Generalized advantage estimation. values: (T, B). Returns (adv, returns)."""
+    values = values.astype(jnp.float32)
+    next_values = jnp.concatenate(
+        [values[1:], bootstrap_value[None].astype(jnp.float32)], axis=0)
+    nd = 1.0 - dones.astype(jnp.float32)
+    deltas = rewards.astype(jnp.float32) + gamma * nd * next_values - values
+
+    def step(acc, inp):
+        delta, mask = inp
+        acc = delta + gamma * lam * mask * acc
+        return acc, acc
+
+    _, adv = jax.lax.scan(step, jnp.zeros_like(bootstrap_value, jnp.float32),
+                          (deltas, nd), reverse=True)
+    return adv, adv + values
+
+
+def _entropy(logits):
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    return -jnp.sum(jnp.exp(logp) * logp, axis=-1)
+
+
+def _logprob(logits, actions):
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    return jnp.take_along_axis(logp, actions[..., None], axis=-1)[..., 0]
+
+
+def a2c_loss(logits, values, actions, advantages, returns,
+             value_coef: float = 0.5, entropy_coef: float = 0.01,
+             mask=None) -> LossStats:
+    """Paper Eq. (4). logits: (..., A); others: (...,). Advantages are
+    treated as constants (stop-gradient on the critic inside pg term)."""
+    adv = jax.lax.stop_gradient(advantages.astype(jnp.float32))
+    lp = _logprob(logits, actions)
+    ent = _entropy(logits)
+    if mask is None:
+        mask = jnp.ones_like(lp)
+    m = mask.astype(jnp.float32)
+    denom = jnp.maximum(m.sum(), 1.0)
+    pg = -(lp * adv * m).sum() / denom
+    v = (jnp.square(values.astype(jnp.float32) - returns.astype(jnp.float32))
+         * m).sum() / denom
+    e = (ent * m).sum() / denom
+    total = pg + value_coef * v - entropy_coef * e
+    return LossStats(total, pg, v, e)
+
+
+def ppo_loss(logits, values, actions, advantages, returns,
+             behavior_logprob, clip_eps: float = 0.2,
+             value_coef: float = 0.5, entropy_coef: float = 0.01,
+             mask=None) -> LossStats:
+    adv = jax.lax.stop_gradient(advantages.astype(jnp.float32))
+    adv = (adv - adv.mean()) / (adv.std() + 1e-8)
+    lp = _logprob(logits, actions)
+    ratio = jnp.exp(lp - behavior_logprob.astype(jnp.float32))
+    ent = _entropy(logits)
+    if mask is None:
+        mask = jnp.ones_like(lp)
+    m = mask.astype(jnp.float32)
+    denom = jnp.maximum(m.sum(), 1.0)
+    un = ratio * adv
+    cl = jnp.clip(ratio, 1 - clip_eps, 1 + clip_eps) * adv
+    pg = -(jnp.minimum(un, cl) * m).sum() / denom
+    v = (jnp.square(values.astype(jnp.float32) - returns.astype(jnp.float32))
+         * m).sum() / denom
+    e = (ent * m).sum() / denom
+    total = pg + value_coef * v - entropy_coef * e
+    return LossStats(total, pg, v, e)
+
+
+def truncated_is_a2c_loss(logits, values, actions, advantages, returns,
+                          behavior_logprob, rho_max: float = 1.0,
+                          value_coef: float = 0.5,
+                          entropy_coef: float = 0.01) -> LossStats:
+    """Truncated importance-sampling corrected A2C (the Tab. A1 ablation
+    alternative to the delayed gradient)."""
+    adv = jax.lax.stop_gradient(advantages.astype(jnp.float32))
+    lp = _logprob(logits, actions)
+    rho = jnp.minimum(jnp.exp(jax.lax.stop_gradient(lp) -
+                              behavior_logprob.astype(jnp.float32)), rho_max)
+    ent = _entropy(logits)
+    pg = -(rho * lp * adv).mean()
+    v = jnp.square(values.astype(jnp.float32) -
+                   returns.astype(jnp.float32)).mean()
+    e = ent.mean()
+    total = pg + value_coef * v - entropy_coef * e
+    return LossStats(total, pg, v, e)

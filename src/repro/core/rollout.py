@@ -1,0 +1,57 @@
+"""Vectorized executor/actor rollout (one synchronization interval).
+
+``rollout_interval`` advances ``n_envs`` environment replicas ``alpha``
+steps under a fixed behavior policy, producing the trajectory pytree the
+learner consumes. Action sampling uses executor-derived keys
+(core/determinism.py) so the result is independent of actor count and
+batching — the jit'd equivalent of the paper's asynchronous
+actor/executor interaction, which is *defined* to be
+observation-order-independent.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import determinism
+from repro.envs.interfaces import Env
+
+
+class RolloutConfig(NamedTuple):
+    alpha: int                 # synchronization interval (steps)
+    n_envs: int
+
+
+def rollout_interval(policy_apply: Callable, env: Env, params, env_state,
+                     obs, master_key, start_step, cfg: RolloutConfig):
+    """Returns (traj, env_state', obs').
+
+    traj = {obs, actions, rewards, dones, behavior_logprob: (alpha, n_envs),
+            bootstrap_obs: (n_envs,)+obs_shape}.
+    policy_apply(params, obs) -> (logits (n, A), value (n,)).
+    """
+    env_ids = jnp.arange(cfg.n_envs)
+
+    def step(carry, t):
+        env_state, obs = carry
+        gstep = start_step + t
+        logits, _ = policy_apply(params, obs)
+        keys = determinism.obs_keys(master_key, env_ids, gstep)
+        actions = jax.vmap(determinism.sample_action)(keys, logits)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+        blp = jnp.take_along_axis(logp, actions[:, None], axis=-1)[:, 0]
+        step_keys = jax.vmap(
+            lambda e: determinism.obs_key(master_key, e + 1_000_003, gstep)
+        )(env_ids)
+        env_state, next_obs, reward, done = env.step(env_state, actions,
+                                                     step_keys)
+        out = {"obs": obs, "actions": actions, "rewards": reward,
+               "dones": done, "behavior_logprob": blp}
+        return (env_state, next_obs), out
+
+    (env_state, obs), traj = jax.lax.scan(
+        step, (env_state, obs), jnp.arange(cfg.alpha))
+    traj["bootstrap_obs"] = obs
+    return traj, env_state, obs

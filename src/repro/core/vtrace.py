@@ -1,0 +1,47 @@
+"""V-trace off-policy correction (Espeholt et al., 2018) — the IMPALA
+baseline's answer to the stale-policy problem that HTS-RL avoids by design.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class VTraceReturns(NamedTuple):
+    vs: jnp.ndarray           # (T, B) value targets
+    pg_advantages: jnp.ndarray
+
+
+def vtrace(behavior_logprob, target_logprob, rewards, dones, values,
+           bootstrap_value, gamma: float, rho_max: float = 1.0,
+           c_max: float = 1.0) -> VTraceReturns:
+    """All inputs (T, B); bootstrap_value (B,). Standard V-trace targets:
+
+        vs_t = V(x_t) + sum_{i>=t} gamma^{i-t} (prod c) delta_i
+        delta_i = rho_i (r_i + gamma V(x_{i+1}) - V(x_i))
+    """
+    rho = jnp.minimum(jnp.exp(target_logprob - behavior_logprob), rho_max)
+    c = jnp.minimum(jnp.exp(target_logprob - behavior_logprob), c_max)
+    values = values.astype(jnp.float32)
+    nd = 1.0 - dones.astype(jnp.float32)
+    next_values = jnp.concatenate(
+        [values[1:], bootstrap_value[None].astype(jnp.float32)], axis=0)
+    deltas = rho * (rewards.astype(jnp.float32) + gamma * nd * next_values -
+                    values)
+
+    def step(acc, inp):
+        delta, c_t, mask = inp
+        acc = delta + gamma * mask * c_t * acc
+        return acc, acc
+
+    _, dv = jax.lax.scan(step, jnp.zeros_like(bootstrap_value, jnp.float32),
+                         (deltas, c, nd), reverse=True)
+    vs = values + dv
+    next_vs = jnp.concatenate(
+        [vs[1:], bootstrap_value[None].astype(jnp.float32)], axis=0)
+    pg_adv = rho * (rewards.astype(jnp.float32) + gamma * nd * next_vs -
+                    values)
+    return VTraceReturns(jax.lax.stop_gradient(vs),
+                         jax.lax.stop_gradient(pg_adv))

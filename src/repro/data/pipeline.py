@@ -1,0 +1,83 @@
+"""Rollout -> learner-batch pipeline.
+
+Two producers feed the HTS-RL learner:
+
+* ``traj_to_batch`` — converts an (alpha, n_envs) trajectory pytree from
+  the rollout into the flat (B, S) token batch the LLM-scale learner
+  consumes (advantages/returns computed here, on the behavior values).
+
+* ``TokenStream`` — a deterministic synthetic token source for the
+  training examples / benchmarks when no environment is in the loop
+  (same hidden-Markov generator as envs/token_env, batched).
+
+Host staging for the threaded runtime is double-buffered in
+core/buffers.py; this module is pure device-side transforms.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import losses
+
+
+def traj_to_batch(traj: Dict, values: jnp.ndarray, bootstrap_value,
+                  gamma: float = 0.99, lam: float = 0.95,
+                  use_gae: bool = True) -> Dict:
+    """traj: {obs/actions/rewards/dones/behavior_logprob (T, N, ...)} ->
+    learner batch with (N, T) layout (envs as batch, time as sequence)."""
+    if use_gae:
+        adv, rets = losses.gae(traj["rewards"], traj["dones"], values,
+                               bootstrap_value, gamma, lam)
+    else:
+        rets = losses.n_step_returns(traj["rewards"], traj["dones"],
+                                     bootstrap_value, gamma)
+        adv = rets - values
+
+    def tn(x):
+        return jnp.swapaxes(x, 0, 1)
+
+    return {
+        "tokens": tn(traj["obs"]).astype(jnp.int32),
+        "actions": tn(traj["actions"]).astype(jnp.int32),
+        "advantages": tn(adv),
+        "returns": tn(rets),
+        "behavior_logprob": tn(traj["behavior_logprob"]),
+        "loss_mask": jnp.ones_like(tn(adv)),
+    }
+
+
+class TokenStream:
+    """Deterministic batched token stream (B, S) with a hidden Markov
+    transition table; next-token targets become RL actions with reward 1
+    for the correct continuation (the token_env contract, vectorized)."""
+
+    def __init__(self, vocab: int, batch: int, seq: int, seed: int = 0):
+        self.vocab, self.batch, self.seq = vocab, batch, seq
+        self.table = jax.random.permutation(
+            jax.random.key(seed * 7 + 1), jnp.arange(vocab))
+        self._step = 0
+        self.key = jax.random.key(seed)
+
+    def next_batch(self) -> Dict:
+        key = jax.random.fold_in(self.key, self._step)
+        self._step += 1
+        start = jax.random.randint(key, (self.batch,), 0, self.vocab)
+
+        def unroll(tok, _):
+            nxt = self.table[tok]
+            return nxt, tok
+
+        _, toks = jax.lax.scan(unroll, start, None, length=self.seq + 1)
+        toks = jnp.swapaxes(toks, 0, 1)            # (B, S+1)
+        tokens, targets = toks[:, :-1], toks[:, 1:]
+        return {
+            "tokens": tokens,
+            "actions": targets,
+            "advantages": jnp.ones(tokens.shape, jnp.float32),
+            "returns": jnp.ones(tokens.shape, jnp.float32),
+            "behavior_logprob": jnp.full(tokens.shape, -1.0, jnp.float32),
+            "loss_mask": jnp.ones(tokens.shape, jnp.float32),
+        }

@@ -1,0 +1,45 @@
+"""Catch: the classic pixel-control test environment (Atari stand-in).
+
+A ball falls from a random column of a ROWS x COLS board; the paddle on the
+bottom row moves left/stay/right. Reward +1 on catch, -1 on miss, episode
+length = ROWS - 1 steps. Observation: (ROWS, COLS, 1) float image.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.interfaces import Env, with_autoreset
+
+ROWS, COLS = 10, 5
+
+
+def _obs(state):
+    board = jnp.zeros((ROWS, COLS), jnp.float32)
+    board = board.at[state["ball_r"], state["ball_c"]].set(1.0)
+    board = board.at[ROWS - 1, state["paddle"]].set(1.0)
+    return board[..., None]
+
+
+def _reset(key):
+    state = {
+        "ball_r": jnp.zeros((), jnp.int32),
+        "ball_c": jax.random.randint(key, (), 0, COLS),
+        "paddle": jnp.full((), COLS // 2, jnp.int32),
+    }
+    return state, _obs(state)
+
+
+def _step(state, action, key):
+    move = action - 1                       # {0,1,2} -> {-1,0,1}
+    paddle = jnp.clip(state["paddle"] + move, 0, COLS - 1)
+    ball_r = state["ball_r"] + 1
+    ns = {"ball_r": ball_r, "ball_c": state["ball_c"], "paddle": paddle}
+    done = (ball_r >= ROWS - 1)
+    caught = (paddle == state["ball_c"])
+    reward = jnp.where(done, jnp.where(caught, 1.0, -1.0), 0.0)
+    return ns, _obs(ns), reward, done.astype(jnp.float32)
+
+
+def make() -> Env:
+    return with_autoreset("catch", _reset, _step, (ROWS, COLS, 1), 3)

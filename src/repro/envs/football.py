@@ -1,0 +1,151 @@
+"""Mini-football "academy" drill (GFootball stand-in).
+
+A striker and a defender on a [0,1]^2 pitch, goal on the right edge.
+Actions: 8 movement directions + shoot. The defender chases the ball
+carrier deterministically. A shot succeeds with probability decreasing in
+distance-to-goal and defender proximity (sampled from the executor key —
+deterministic under HTS-RL seeding). Reward +1 on goal; episode ends on
+goal, on interception, or at the horizon — giving the same
+score-until-terminal structure as GFootball academy scenarios.
+
+Observation: 12-dim "extracted map" float vector (positions, deltas,
+distances), matching the paper's non-pixel GFootball input option.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.interfaces import Env, with_autoreset
+
+HORIZON = 100
+GOAL = jnp.array([1.0, 0.5], jnp.float32)
+DIRS = jnp.array([[0, 1], [1, 1], [1, 0], [1, -1],
+                  [0, -1], [-1, -1], [-1, 0], [-1, 1]], jnp.float32)
+DIRS = DIRS / jnp.linalg.norm(DIRS, axis=-1, keepdims=True)
+SPEED = 0.05
+DEF_SPEED = 0.035
+
+
+def _obs(state):
+    p, d = state["player"], state["defender"]
+    to_goal = GOAL - p
+    to_def = d - p
+    return jnp.concatenate([
+        p, d, to_goal, to_def,
+        jnp.array([jnp.linalg.norm(to_goal), jnp.linalg.norm(to_def)]),
+        jnp.array([state["t"] / HORIZON, 1.0]),
+    ]).astype(jnp.float32)
+
+
+def _reset(key):
+    k1, k2 = jax.random.split(key)
+    state = {
+        "player": jnp.array([0.2, 0.5]) + 0.05 * jax.random.normal(k1, (2,)),
+        "defender": jnp.array([0.7, 0.5]) + 0.05 * jax.random.normal(k2, (2,)),
+        "t": jnp.zeros((), jnp.int32),
+    }
+    return state, _obs(state)
+
+
+def _step(state, action, key):
+    is_shot = action >= 8
+    mv = DIRS[jnp.minimum(action, 7)] * SPEED
+    p = jnp.clip(state["player"] + jnp.where(is_shot, 0.0, 1.0) * mv, 0.0, 1.0)
+    # defender chases
+    dvec = p - state["defender"]
+    dn = dvec / (jnp.linalg.norm(dvec) + 1e-6)
+    d = jnp.clip(state["defender"] + DEF_SPEED * dn, 0.0, 1.0)
+    t = state["t"] + 1
+
+    dist_goal = jnp.linalg.norm(GOAL - p)
+    dist_def = jnp.linalg.norm(d - p)
+    p_goal = jnp.clip(1.2 - 1.5 * dist_goal, 0.0, 0.95) * \
+        jnp.clip(dist_def / 0.2, 0.0, 1.0)
+    shot_scores = jax.random.uniform(key) < p_goal
+    goal = is_shot & shot_scores
+    intercepted = (dist_def < 0.03) & ~goal
+    done = goal | intercepted | (t >= HORIZON) | is_shot
+    reward = jnp.where(goal, 1.0, 0.0)
+    ns = {"player": p, "defender": d, "t": t}
+    return ns, _obs(ns), reward, done.astype(jnp.float32)
+
+
+def make() -> Env:
+    return with_autoreset("minifootball", _reset, _step, (12,), 9)
+
+
+# ------------------------------------------------- multi-player variant
+def make_multi(n_players: int = 2) -> Env:
+    """Paper Tab. 3: training MULTIPLE players against the defender with a
+    shared score. Joint action space (9^n, factored per player); the ball
+    carrier is the player closest to the goal, teammates drag the defender
+    (so coordination — spreading out — raises the scoring probability).
+    Observation: per-player positions + defender + ball-carrier index.
+    """
+    A = 9 ** n_players
+    obs_dim = 2 * n_players + 2 + 2 + n_players + 1
+
+    def _mobs(state):
+        ps = state["players"]                      # (n, 2)
+        d = state["defender"]
+        dists = jnp.linalg.norm(GOAL[None] - ps, axis=-1)
+        carrier = jnp.argmin(dists)
+        return jnp.concatenate([
+            ps.reshape(-1), d, GOAL - ps[carrier],
+            jax.nn.one_hot(carrier, n_players),
+            jnp.array([state["t"] / HORIZON]),
+        ]).astype(jnp.float32)
+
+    def _mreset(key):
+        ks = jax.random.split(key, n_players + 1)
+        ps = jnp.stack([jnp.array([0.2, 0.3 + 0.4 * i / max(n_players - 1, 1)])
+                        + 0.05 * jax.random.normal(ks[i], (2,))
+                        for i in range(n_players)])
+        state = {"players": ps,
+                 "defender": jnp.array([0.7, 0.5]) +
+                 0.05 * jax.random.normal(ks[-1], (2,)),
+                 "t": jnp.zeros((), jnp.int32)}
+        return state, _mobs(state)
+
+    def _mstep(state, action, key):
+        # decode joint action -> per-player {move dir 0..7, shoot=8}
+        acts = []
+        a = action
+        for _ in range(n_players):
+            acts.append(a % 9)
+            a = a // 9
+        ps = state["players"]
+        new_ps = []
+        shoots = []
+        for i, ai in enumerate(acts):
+            is_shot = ai >= 8
+            mv = DIRS[jnp.minimum(ai, 7)] * SPEED
+            new_ps.append(jnp.clip(
+                ps[i] + jnp.where(is_shot, 0.0, 1.0) * mv, 0.0, 1.0))
+            shoots.append(is_shot)
+        ps = jnp.stack(new_ps)
+        dists = jnp.linalg.norm(GOAL[None] - ps, axis=-1)
+        carrier = jnp.argmin(dists)
+        # defender chases the carrier
+        dvec = ps[carrier] - state["defender"]
+        d = jnp.clip(state["defender"] + DEF_SPEED * dvec /
+                     (jnp.linalg.norm(dvec) + 1e-6), 0.0, 1.0)
+        t = state["t"] + 1
+        shot = jnp.stack(shoots)[carrier]          # only the carrier shoots
+        dist_goal = dists[carrier]
+        dist_def = jnp.linalg.norm(d - ps[carrier])
+        # teammates near the defender pull attention: bonus to p_goal
+        others = jnp.linalg.norm(ps - d[None], axis=-1)
+        drag = jnp.clip(0.15 * (others < 0.25).sum() / n_players, 0.0, 0.3)
+        p_goal = jnp.clip(1.2 - 1.5 * dist_goal + drag, 0.0, 0.95) * \
+            jnp.clip(dist_def / 0.2, 0.0, 1.0)
+        goal = shot & (jax.random.uniform(key) < p_goal)
+        intercepted = (dist_def < 0.03) & ~goal
+        done = goal | intercepted | (t >= HORIZON) | shot
+        reward = jnp.where(goal, 1.0, 0.0)
+        ns = {"players": ps, "defender": d, "t": t}
+        return ns, _mobs(ns), reward, done.astype(jnp.float32)
+
+    return with_autoreset(f"minifootball{n_players}p", _mreset, _mstep,
+                          (obs_dim,), A)

@@ -1,0 +1,61 @@
+"""GridMaze: deterministic navigation with pixel observations (Atari-like
+horizon/credit structure, fully deterministic transition function).
+
+N x N grid with a fixed wall pattern; agent starts top-left, goal
+bottom-right. Actions: up/down/left/right. Reward: +1 at goal, -0.01 per
+step. Horizon 4*N. Observation: (N, N, 3) image (walls, agent, goal).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.interfaces import Env, with_autoreset
+
+N = 9
+HORIZON = 4 * N
+
+
+def _walls():
+    w = jnp.zeros((N, N), jnp.float32)
+    w = w.at[2, 1:N - 2].set(1.0)
+    w = w.at[5, 2:N].set(1.0)
+    w = w.at[7, 1:4].set(1.0)
+    return w
+
+
+WALLS = _walls()
+MOVES = jnp.array([[-1, 0], [1, 0], [0, -1], [0, 1]], jnp.int32)
+
+
+def _obs(state):
+    agent = jnp.zeros((N, N), jnp.float32).at[state["r"], state["c"]].set(1.0)
+    goal = jnp.zeros((N, N), jnp.float32).at[N - 1, N - 1].set(1.0)
+    return jnp.stack([WALLS, agent, goal], axis=-1)
+
+
+def _reset(key):
+    del key
+    state = {"r": jnp.zeros((), jnp.int32), "c": jnp.zeros((), jnp.int32),
+             "t": jnp.zeros((), jnp.int32)}
+    return state, _obs(state)
+
+
+def _step(state, action, key):
+    del key
+    mv = MOVES[action]
+    nr = jnp.clip(state["r"] + mv[0], 0, N - 1)
+    nc = jnp.clip(state["c"] + mv[1], 0, N - 1)
+    blocked = WALLS[nr, nc] > 0
+    nr = jnp.where(blocked, state["r"], nr)
+    nc = jnp.where(blocked, state["c"], nc)
+    t = state["t"] + 1
+    at_goal = (nr == N - 1) & (nc == N - 1)
+    done = at_goal | (t >= HORIZON)
+    reward = jnp.where(at_goal, 1.0, -0.01)
+    ns = {"r": nr, "c": nc, "t": t}
+    return ns, _obs(ns), reward, done.astype(jnp.float32)
+
+
+def make() -> Env:
+    return with_autoreset("gridmaze", _reset, _step, (N, N, 3), 4)

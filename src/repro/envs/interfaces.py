@@ -1,0 +1,58 @@
+"""Vectorized pure-JAX environment interface.
+
+An ``Env`` is a bundle of pure functions (so it vmaps/jits/shards):
+
+    reset(key)               -> (state, obs)
+    step(state, action, key) -> (state, obs, reward, done)
+
+``step`` auto-resets: when an episode terminates the returned obs/state are
+already the first of the next episode and ``done=1`` marks the boundary.
+The ``key`` passed to step is only used by stochastic envs and for the
+auto-reset; with HTS-RL determinism it is derived from (run_seed, env_id,
+step) at the executor (see core/determinism.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Env(NamedTuple):
+    name: str
+    reset: Callable          # key -> (state, obs)
+    step: Callable           # (state, action, key) -> (state, obs, r, done)
+    obs_shape: Tuple[int, ...]
+    n_actions: int
+
+
+def with_autoreset(name, reset_fn, inner_step, obs_shape, n_actions) -> Env:
+    """Wrap a raw step (that reports done without resetting) with
+    auto-reset semantics."""
+
+    def step(state, action, key):
+        ns, obs, r, done = inner_step(state, action, key)
+        rs, robs = reset_fn(jax.random.fold_in(key, 7))
+        state_out = jax.tree.map(
+            lambda a, b: jnp.where(_bcast(done, a), b, a), ns, rs)
+        obs_out = jnp.where(_bcast(done, obs), robs, obs)
+        return state_out, obs_out, r, done
+
+    return Env(name, reset_fn, step, obs_shape, n_actions)
+
+
+def _bcast(done, x):
+    return jnp.reshape(done, done.shape + (1,) * (x.ndim - done.ndim)) \
+        if x.ndim > done.ndim else done
+
+
+def vectorize(env: Env, n: int) -> Env:
+    """vmap an Env over n replicas (keys (n,), actions (n,))."""
+    return Env(
+        name=f"{env.name}x{n}",
+        reset=jax.vmap(env.reset),
+        step=jax.vmap(env.step),
+        obs_shape=env.obs_shape,
+        n_actions=env.n_actions,
+    )

@@ -1,0 +1,44 @@
+"""Token environment: next-token prediction as an MDP, so the assigned
+sequence-model backbones are *policies* trained by the HTS-RL learner.
+
+A hidden deterministic transition table T: V -> V (a permutation composed
+with a lossy projection, derived from the env seed) generates a token
+stream. The observation is the current token; the action is a vocabulary
+token; reward +1 when the action equals the true next token. This has the
+observation/action shapes of language modeling while remaining a genuine
+RL problem (no supervised targets are exposed).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.interfaces import Env, with_autoreset
+
+HORIZON = 64
+
+
+def make(vocab: int = 256, seed: int = 0) -> Env:
+    table = jax.random.permutation(jax.random.key(seed * 7 + 1),
+                                   jnp.arange(vocab))
+    # make it lossy so the chain has merging paths (harder than a cycle)
+    table = jnp.where(jnp.arange(vocab) % 17 == 0, table[0], table)
+
+    def _obs(state):
+        return state["tok"]
+
+    def _reset(key):
+        state = {"tok": jax.random.randint(key, (), 0, vocab),
+                 "t": jnp.zeros((), jnp.int32)}
+        return state, _obs(state)
+
+    def _step(state, action, key):
+        del key
+        nxt = table[state["tok"]]
+        reward = (action == nxt).astype(jnp.float32)
+        t = state["t"] + 1
+        ns = {"tok": nxt, "t": t}
+        done = (t >= HORIZON).astype(jnp.float32)
+        return ns, _obs(ns), reward, done
+
+    return with_autoreset(f"token{vocab}", _reset, _step, (), vocab)

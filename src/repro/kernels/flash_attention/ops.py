@@ -1,0 +1,47 @@
+"""jit'd public wrapper for the flash attention kernel.
+
+Accepts the model's (B, S, H, Dh) layout, transposes to the kernel's
+(B, H, S, Dh), pads the sequence to a block multiple, and dispatches to
+the Pallas kernel (interpret=True on CPU) or the jnp oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "cap",
+                                             "bq", "bk", "use_pallas",
+                                             "interpret"))
+def attend(q, k, v, *, causal: bool = True, window: int = 0,
+           cap: float = 0.0, bq: int = 128, bk: int = 128,
+           use_pallas: bool = True, interpret: bool = True):
+    """q: (B, S, H, Dh); k, v: (B, S, KV, Dh) -> (B, S, H, Dh)."""
+    B, Sq, H, Dh = q.shape
+    Sk = k.shape[1]
+    qt = jnp.transpose(q, (0, 2, 1, 3))
+    kt = jnp.transpose(k, (0, 2, 1, 3))
+    vt = jnp.transpose(v, (0, 2, 1, 3))
+    bq_ = min(bq, Sq)
+    bk_ = min(bk, Sk)
+    pq = (-Sq) % bq_
+    pk = (-Sk) % bk_
+    kv_len = Sk if pk else None
+    if pq:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    if use_pallas:
+        ot = flash_attention(qt, kt, vt, causal=causal, window=window,
+                             cap=cap, kv_len=kv_len, bq=bq_, bk=bk_,
+                             interpret=interpret)
+    else:
+        ot = flash_attention_ref(qt, kt, vt, causal=causal, window=window,
+                                 cap=cap, kv_len=kv_len)
+    return jnp.transpose(ot[:, :, :Sq], (0, 2, 1, 3))

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the flash attention kernel.
+
+Naive materialized attention — O(S^2) memory, fine at test shapes.
+Layout matches the kernel: q (B, H, Sq, Dh); k, v (B, KV, Sk, Dh),
+GQA query-head h uses kv head h // (H // KV).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        cap: float = 0.0, kv_len=None):
+    B, H, Sq, Dh = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    R = H // KV
+    kr = jnp.repeat(k, R, axis=1)
+    vr = jnp.repeat(v, R, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) * Dh ** -0.5
+    if cap:
+        s = cap * jnp.tanh(s / cap)
+    qpos = jnp.arange(Sq)
+    kpos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    if kv_len is not None:
+        mask &= (kpos < kv_len)[None, :]
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32)
+                      ).astype(q.dtype)

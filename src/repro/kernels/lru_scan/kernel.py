@@ -1,0 +1,67 @@
+"""Pallas TPU kernel for the RG-LRU linear recurrence.
+
+TPU-native re-think of a GPU scan: instead of a two-pass Blelchoch scan
+with inter-block carries in global memory, we exploit the TPU grid's
+SEQUENTIAL execution order — grid (B, D//bd, S//chunk) with the sequence
+chunks as the fastest axis. The running state h for one (b, d-block) lives
+in VMEM scratch across chunk steps; within a chunk the recurrence is an
+unrolled-by-8 fori loop over rows already resident in VMEM.
+
+BlockSpecs: a, b, y tiles (1, chunk, bd); h0 tile (1, bd).
+VMEM footprint = 3 * chunk * bd * 4B + bd * 4B  (chunk=256, bd=512 -> 1.5 MB).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, h0_ref, y_ref, h_ref, *, chunk):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        h_ref[...] = h0_ref[0].astype(jnp.float32)
+
+    a = a_ref[0].astype(jnp.float32)          # (chunk, bd)
+    b = b_ref[0].astype(jnp.float32)
+
+    def body(t, h):
+        h = a[t] * h + b[t]
+        y_ref[0, t] = h.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, body, h_ref[...], unroll=8)
+    h_ref[...] = h
+
+
+def lru_scan(a, b, h0=None, *, chunk: int = 256, bd: int = 512,
+             interpret: bool = True):
+    """a, b: (B, S, D); h0: (B, D) or None -> (h (B,S,D), h_last (B,D))."""
+    B, S, D = a.shape
+    chunk = min(chunk, S)
+    bd = min(bd, D)
+    assert S % chunk == 0 and D % bd == 0
+    if h0 is None:
+        h0 = jnp.zeros((B, D), jnp.float32)
+    grid = (B, D // bd, S // chunk)
+
+    y = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, bd), lambda bi, di, si: (bi, si, di)),
+            pl.BlockSpec((1, chunk, bd), lambda bi, di, si: (bi, si, di)),
+            pl.BlockSpec((1, bd), lambda bi, di, si: (bi, di)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, bd),
+                               lambda bi, di, si: (bi, si, di)),
+        out_shape=jax.ShapeDtypeStruct((B, S, D), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bd,), jnp.float32)],
+        interpret=interpret,
+    )(a, b, h0)
+    return y, y[:, -1].astype(jnp.float32)

@@ -1,0 +1,18 @@
+"""jit'd wrapper for the LRU scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.lru_scan.kernel import lru_scan
+from repro.kernels.lru_scan.ref import lru_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "chunk", "bd",
+                                             "interpret"))
+def scan(a, b, h0=None, *, use_pallas: bool = True, chunk: int = 256,
+         bd: int = 512, interpret: bool = True):
+    if use_pallas:
+        return lru_scan(a, b, h0, chunk=chunk, bd=bd, interpret=interpret)
+    return lru_scan_ref(a, b, h0)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the RG-LRU linear-recurrence scan kernel.
+
+    h_t = a_t * h_{t-1} + b_t      (elementwise over channels)
+
+a, b: (B, S, D) f32; h0: (B, D) f32 or None. Returns (h (B,S,D), h_last).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lru_scan_ref(a, b, h0=None):
+    B, S, D = a.shape
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    if h0 is not None:
+        bf = bf.at[:, 0].add(af[:, 0] * h0.astype(jnp.float32))
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (af, bf), axis=1)
+    return h.astype(a.dtype), h[:, -1]

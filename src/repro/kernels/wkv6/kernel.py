@@ -1,0 +1,86 @@
+"""Pallas TPU kernel for the RWKV-6 WKV recurrence.
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+The recurrence is inherently sequential in t (this is also true of the
+official CUDA kernel); parallelism comes from (B, H). Grid
+(B, H, T//chunk) with chunks as the fastest (sequential) axis; the
+(N, N) state lives in VMEM scratch across chunk steps.
+
+BlockSpecs: r/k/v/w tiles (1, chunk, 1, N); u tile (1, N); o tile like r.
+VMEM = 4 * chunk * N * 4B + N^2 * 4B   (chunk=128, N=64 -> 148 KB).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref, s_out_ref,
+            s_ref, *, chunk, n_chunks):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    r = r_ref[0, :, 0].astype(jnp.float32)      # (chunk, N)
+    k = k_ref[0, :, 0].astype(jnp.float32)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    w = w_ref[0, :, 0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)            # (N,)
+
+    def body(t, s):
+        kv = k[t][:, None] * v[t][None, :]      # (N, N)
+        o = (r[t][:, None] * (s + u[:, None] * kv)).sum(axis=0)
+        o_ref[0, t, 0] = o.astype(o_ref.dtype)
+        return w[t][:, None] * s + kv
+
+    s = jax.lax.fori_loop(0, chunk, body, s_ref[...])
+    s_ref[...] = s
+
+    @pl.when(ci == n_chunks - 1)
+    def _final():
+        s_out_ref[0, 0] = s_ref[...]
+
+
+def wkv6(r, k, v, w, u, s0=None, *, chunk: int = 128,
+         interpret: bool = True):
+    """r,k,v,w: (B, T, H, N); u: (H, N); s0: (B, H, N, N) f32 or None.
+
+    Returns (o (B,T,H,N), s_T (B,H,N,N) f32)."""
+    B, T, H, N = r.shape
+    chunk = min(chunk, T)
+    assert T % chunk == 0
+    if s0 is None:
+        s0 = jnp.zeros((B, H, N, N), jnp.float32)
+    grid = (B, H, T // chunk)
+
+    o, sT = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk, n_chunks=T // chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, N), lambda b, h, c: (h, 0)),
+            pl.BlockSpec((1, 1, N, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, N, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, H, N), r.dtype),
+            jax.ShapeDtypeStruct((B, H, N, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, N), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, s0)
+    return o, sT

@@ -1,0 +1,18 @@
+"""jit'd wrapper for the WKV6 kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.wkv6.kernel import wkv6
+from repro.kernels.wkv6.ref import wkv6_ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "chunk",
+                                             "interpret"))
+def mix(r, k, v, w, u, s0=None, *, use_pallas: bool = True,
+        chunk: int = 128, interpret: bool = True):
+    if use_pallas:
+        return wkv6(r, k, v, w, u, s0, chunk=chunk, interpret=interpret)
+    return wkv6_ref(r, k, v, w, u, s0)

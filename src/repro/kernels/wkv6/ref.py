@@ -1,0 +1,6 @@
+"""Pure-jnp oracle for the WKV6 (RWKV-6 "Finch") recurrence kernel.
+
+Re-exports the model's reference implementation — the kernel and the model
+share one source of truth for the math.
+"""
+from repro.models.rwkv6 import wkv6_ref  # noqa: F401

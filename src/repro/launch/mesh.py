@@ -1,0 +1,30 @@
+"""Production mesh definitions (TPU v5e numbers).
+
+A FUNCTION, not a module constant — importing this module must never touch
+jax device state (smoke tests run on 1 CPU device; only dryrun.py forces
+512 host devices).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh():
+    """Whatever devices exist locally, as a 1D 'data' mesh (examples/tests)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+
+# TPU v5e hardware constants used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link (~per-chip sustained)
+CHIPS_PER_POD = 256

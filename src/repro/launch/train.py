@@ -1,0 +1,91 @@
+"""Training launcher: HTS-RL learner over any assigned architecture.
+
+    PYTHONPATH=src python -m repro.launch.train --arch starcoder2-3b \
+        --reduced --steps 50 --batch 8 --seq 64
+
+On this container it runs the reduced config on 1 CPU device; on a real
+cluster the same code path pjit's over make_production_mesh() (pass
+--mesh pod, requires the devices to exist). The data source is the
+deterministic TokenStream; swap in traj_to_batch-fed rollouts for a live
+environment (see examples/llm_policy_hts.py for the full HTS-RL loop).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.checkpoint import io as ckpt_io
+from repro.configs.base import get_config
+from repro.core import delayed_grad, learner
+from repro.data.pipeline import TokenStream
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import backbone
+from repro.optim import adam, rmsprop
+from repro.sharding import rules
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="starcoder2-3b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--lr", type=float, default=1e-4)
+    ap.add_argument("--opt", default="adam", choices=["adam", "rmsprop"])
+    ap.add_argument("--algorithm", default="a2c", choices=["a2c", "ppo"])
+    ap.add_argument("--mesh", default="host", choices=["host", "pod",
+                                                       "multipod"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--log-every", type=int, default=5)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    opt = adam(args.lr) if args.opt == "adam" else rmsprop(args.lr)
+
+    if args.mesh == "host":
+        mesh = make_host_mesh()
+    else:
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multipod"))
+
+    params = backbone.init_params(cfg, jax.random.key(0))
+    dg = delayed_grad.init(params, opt)
+    step_fn = learner.make_train_step(cfg, opt, args.algorithm)
+
+    pspecs = rules.param_pspecs(jax.eval_shape(lambda: params), mesh)
+    dg_specs = rules.dg_state_pspecs(
+        jax.eval_shape(lambda: dg), pspecs, mesh)
+    stream = TokenStream(cfg.vocab_size, args.batch, args.seq)
+    sample = stream.next_batch()
+    b_specs = rules.batch_specs(jax.eval_shape(lambda: sample), mesh)
+    out_specs = (dg_specs,
+                 jax.tree.map(lambda _: P(),
+                              jax.eval_shape(step_fn, dg, sample)[1]))
+
+    with jax.set_mesh(mesh):
+        jstep = jax.jit(step_fn, in_shardings=(dg_specs, b_specs),
+                        out_shardings=out_specs, donate_argnums=(0,))
+        t0 = time.time()
+        for i in range(args.steps):
+            batch = stream.next_batch()
+            dg, stats = jstep(dg, batch)
+            if i % args.log_every == 0 or i == args.steps - 1:
+                print(f"step {i:4d} loss={float(stats['loss']):.4f} "
+                      f"pg={float(stats['pg']):.4f} "
+                      f"ent={float(stats['entropy']):.4f} "
+                      f"({(time.time() - t0) / (i + 1):.3f}s/step)",
+                      flush=True)
+        if args.ckpt_dir:
+            ckpt_io.save(f"{args.ckpt_dir}/step_{args.steps:08d}", dg,
+                         {"arch": args.arch, "steps": args.steps})
+            print(f"checkpoint -> {args.ckpt_dir}/step_{args.steps:08d}")
+
+
+if __name__ == "__main__":
+    main()

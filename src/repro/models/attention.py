@@ -1,0 +1,472 @@
+"""GQA attention: full / sliding-window / local-global, RoPE / M-RoPE / NoPE.
+
+The full-sequence path (train / prefill) is a blocked flash-style
+attention written in pure jnp (``lax.scan`` over query and key blocks with
+an online softmax). This keeps the peak live score tensor at
+(B, H, q_block, k_block) instead of (B, H, S, S) — mandatory for the 32k
+prefill shape to fit the per-device memory budget, and it doubles as the
+oracle structure mirrored by the Pallas kernel in
+``repro.kernels.flash_attention``.
+
+Decode (one query token against a cache) uses a direct einsum — the score
+tensor is (B, H, 1, S), which is small even at S=512k.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.sharding.constraints import constrain
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ModelConfig):
+    dt = layers.cdtype(cfg)
+    dh = cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = cfg.d_model ** -0.5
+    return {
+        "wq": (jax.random.normal(k1, (cfg.d_model, cfg.n_heads, dh)) * s).astype(dt),
+        "wk": (jax.random.normal(k2, (cfg.d_model, cfg.n_kv_heads, dh)) * s).astype(dt),
+        "wv": (jax.random.normal(k3, (cfg.d_model, cfg.n_kv_heads, dh)) * s).astype(dt),
+        "wo": (jax.random.normal(k4, (cfg.n_heads, dh, cfg.d_model))
+               * (cfg.n_heads * dh) ** -0.5).astype(dt),
+    }
+
+
+def _pad_to(x, n, axis):
+    pad = n - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _tile_mask(qpos, kpos, k_valid, causal: bool, window: int):
+    mask = k_valid[None, :]
+    if causal:
+        mask = mask & (kpos[None, :] <= qpos[:, None])
+    if window:
+        mask = mask & (kpos[None, :] > qpos[:, None] - window)
+    return mask                       # (qb, kb)
+
+
+def _tile_penalty(qpos, kpos, k_valid, causal: bool, window: int):
+    """(qb, kb) f32 additive mask: 0 where attendable, NEG_INF where not.
+
+    Kept at (qb, kb) — never broadcast to the full (B,G,R,qb,kb) tile — so
+    when scan partial-eval hoists this data-independent value out of the
+    backward, the stacked residual is a few MB of per-tile penalties, not
+    an O(S^2 * B * H) constant broadcast."""
+    mask = _tile_mask(qpos, kpos, k_valid, causal, window)
+    return jnp.where(mask, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _flash_fwd(qp, kp, vp, q_pos, k_pos, k_valid, causal, window, cap,
+               scale):
+    """qp: (B,nq,qb,G,R,Dh); kp/vp: (B,nk,kb,G,Dh).
+
+    Returns out (nq,B,G,R,qb,Dh) f32 and lse (nq,B,G,R,qb) f32."""
+    B, nq, q_block, G, R, Dh = qp.shape
+    nk, k_block = kp.shape[1], kp.shape[2]
+
+    def q_step(_, qi):
+        qblk = qp[:, qi]
+        qpos = q_pos[qi]
+
+        def k_step(carry, ki):
+            m, l, acc = carry
+            kblk, vblk = kp[:, ki], vp[:, ki]
+            s = jnp.einsum("bqgrd,bkgd->bgrqk", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            if cap:
+                s = layers.softcap(s, cap)
+            pen = _tile_penalty(qpos, k_pos[ki], k_valid[ki], causal,
+                                window)
+            s = s + pen[None, None, None]
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bgrqk,bkgd->bgrqd", p.astype(vblk.dtype), vblk,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, G, R, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, G, R, q_block), jnp.float32)
+        a0 = jnp.zeros((B, G, R, q_block, Dh), jnp.float32)
+        if causal:
+            hi = (qi * q_block + q_block + k_block - 1) // k_block
+            hi = jnp.minimum(hi, nk)
+        else:
+            hi = nk
+        if window and causal:
+            # sliding window: only ~window/k_block kv blocks can be
+            # visible to this q block — iterate exactly those (the trip
+            # count itself shrinks: 8x fewer iterations for h2o's
+            # 4096-window 32k prefill, honest in both wall-clock and the
+            # HLO cost model). Only valid with causal masking: a
+            # non-causal window still admits unbounded future keys.
+            lo = jnp.maximum((qi * q_block - window) // k_block, 0)
+            nk_win = min(nk, (window + q_block) // k_block + 1)
+            ks = lo + jnp.arange(nk_win)
+        elif window:
+            lo = jnp.maximum((qi * q_block - window) // k_block, 0)
+            ks = jnp.arange(nk)
+        else:
+            lo = 0
+            ks = jnp.arange(nk)
+        (m, l, acc), _ = jax.lax.scan(
+            lambda c, ki: jax.lax.cond((ki < hi) & (ki >= lo), k_step,
+                                       lambda c2, _ki: (c2, None), c, ki),
+            (m0, l0, a0), ks)
+        l_safe = jnp.maximum(l, 1e-30)
+        out = acc / l_safe[..., None]
+        lse = m + jnp.log(l_safe)
+        return None, (out, lse)
+
+    _, (outs, lses) = jax.lax.scan(q_step, None, jnp.arange(nq))
+    return outs, lses
+
+
+def _make_flash(causal: bool, window: int, cap: float, q_block: int,
+                k_block: int):
+    """Flash attention with a flash backward (custom_vjp): the backward
+    pass recomputes each (q_block x k_block) probability tile from
+    (q, k, v, lse) instead of storing O(S^2) score tensors — without this,
+    differentiating the forward scans stores every tile and the train_4k
+    shapes need TBs per chip."""
+
+    def fwd_public(qp, kp, vp, q_pos, k_pos, k_valid, scale):
+        outs, _ = _flash_fwd(qp, kp, vp, q_pos, k_pos, k_valid, causal,
+                             window, cap, scale)
+        return outs
+
+    @jax.custom_vjp
+    def flash(qp, kp, vp, q_pos, k_pos, k_valid, scale):
+        return fwd_public(qp, kp, vp, q_pos, k_pos, k_valid, scale)
+
+    def flash_fwd(qp, kp, vp, q_pos, k_pos, k_valid, scale):
+        outs, lses = _flash_fwd(qp, kp, vp, q_pos, k_pos, k_valid, causal,
+                                window, cap, scale)
+        return outs, (qp, kp, vp, outs, lses, q_pos, k_pos, k_valid, scale)
+
+    def _tile_ds(qblk, kblk, dout_q, vblk, lse_q, Dvec, qpos, kpos, kval,
+                 scale):
+        """Recompute one probability tile and its score gradient."""
+        s_pre = jnp.einsum("bqgrd,bkgd->bgrqk", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+        s = layers.softcap(s_pre, cap) if cap else s_pre
+        pen = _tile_penalty(qpos, kpos, kval, causal, window)
+        # exp(NEG_INF - lse) underflows to exactly 0 -> masked entries drop
+        p = jnp.exp(s + pen[None, None, None] - lse_q[..., None])
+        dp = jnp.einsum("bgrqd,bkgd->bgrqk", dout_q, vblk,
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - Dvec[..., None])
+        if cap:
+            ds = ds * (1.0 - jnp.square(s / cap))
+        ds = ds * scale
+        return p, ds
+
+    def flash_bwd(res, douts):
+        qp, kp, vp, outs, lses, q_pos, k_pos, k_valid, scale = res
+        # Tie the recompute to the cotangent: without this barrier, the
+        # scan-transpose partial-eval notices that the probability tiles
+        # depend only on primal residuals, hoists their recomputation into
+        # the *forward* pass, and stacks every (q,k) tile as a scan
+        # residual — exactly the O(S^2) memory the flash backward exists
+        # to avoid.
+        (douts, qp, kp, vp, outs, lses, q_pos, k_pos, k_valid) = \
+            jax.lax.optimization_barrier(
+                (douts, qp, kp, vp, outs, lses, q_pos, k_pos, k_valid))
+        B, nq, q_block, G, R, Dh = qp.shape
+        nk, k_block = kp.shape[1], kp.shape[2]
+        # D_i = rowsum(dout * out): (nq, B, G, R, qb)
+        Dv = jnp.sum(douts * outs, axis=-1)
+
+        def q_pass(_, qi):
+            qblk = qp[:, qi]
+            dout_q = douts[qi]
+            lse_q = lses[qi]
+            D_q = Dv[qi]
+            qpos = q_pos[qi]
+
+            def k_step(dq_acc, ki):
+                p, ds = _tile_ds(qblk, kp[:, ki], dout_q, vp[:, ki], lse_q,
+                                 D_q, qpos, k_pos[ki], k_valid[ki], scale)
+                dq_acc = dq_acc + jnp.einsum(
+                    "bgrqk,bkgd->bqgrd", ds, kp[:, ki],
+                    preferred_element_type=jnp.float32)
+                return dq_acc, None
+
+            if causal:
+                hi = (qi * q_block + q_block + k_block - 1) // k_block
+                hi = jnp.minimum(hi, nk)
+            else:
+                hi = nk
+            if window and causal:
+                lo = jnp.maximum((qi * q_block - window) // k_block, 0)
+                nk_win = min(nk, (window + q_block) // k_block + 1)
+                ks = lo + jnp.arange(nk_win)
+            elif window:
+                lo = jnp.maximum((qi * q_block - window) // k_block, 0)
+                ks = jnp.arange(nk)
+            else:
+                lo = 0
+                ks = jnp.arange(nk)
+            dq0 = jnp.zeros((B, q_block, G, R, Dh), jnp.float32)
+            dq, _ = jax.lax.scan(
+                lambda c, ki: jax.lax.cond(
+                    (ki < hi) & (ki >= lo), k_step,
+                    lambda c2, _ki: (c2, None), c, ki),
+                dq0, ks)
+            return None, dq
+
+        _, dq = jax.lax.scan(q_pass, None, jnp.arange(nq))
+        dq = jnp.moveaxis(dq, 0, 1)          # (B, nq, qb, G, R, Dh)
+
+        def kv_pass(_, ki):
+            kblk, vblk = kp[:, ki], vp[:, ki]
+            kpos = k_pos[ki]
+            kval = k_valid[ki]
+
+            def q_step(carry, qi):
+                dk_acc, dv_acc = carry
+                p, ds = _tile_ds(qp[:, qi], kblk, douts[qi], vblk, lses[qi],
+                                 Dv[qi], q_pos[qi], kpos, kval, scale)
+                dv_acc = dv_acc + jnp.einsum(
+                    "bgrqk,bgrqd->bkgd", p, douts[qi],
+                    preferred_element_type=jnp.float32)
+                dk_acc = dk_acc + jnp.einsum(
+                    "bgrqk,bqgrd->bkgd", ds, qp[:, qi],
+                    preferred_element_type=jnp.float32)
+                return (dk_acc, dv_acc), None
+
+            if causal:
+                lo = (ki * k_block) // q_block
+            else:
+                lo = 0
+            if window and causal:
+                # queries past ki*kb + window can't see this kv block
+                # (causal only: non-causal windows admit future queries)
+                hi_q = jnp.minimum(
+                    (ki * k_block + k_block - 1 + window) // q_block + 1,
+                    nq)
+                nq_win = min(nq, (window + k_block) // q_block + 2)
+                qs = jnp.maximum(hi_q - nq_win, 0) + jnp.arange(nq_win)
+            else:
+                hi_q = nq
+                qs = jnp.arange(nq)
+            z = jnp.zeros((B, k_block, G, Dh), jnp.float32)
+            (dk, dv), _ = jax.lax.scan(
+                lambda c, qi: jax.lax.cond(
+                    (qi >= lo) & (qi < hi_q), q_step,
+                    lambda c2, _qi: (c2, None), c, qi),
+                (z, z), qs)
+            return None, (dk, dv)
+
+        _, (dk, dv) = jax.lax.scan(kv_pass, None, jnp.arange(nk))
+        dk = jnp.moveaxis(dk, 0, 1)
+        dv = jnp.moveaxis(dv, 0, 1)
+        return (dq.astype(qp.dtype), dk.astype(kp.dtype),
+                dv.astype(vp.dtype), None, None, None, None)
+
+    flash.defvjp(flash_fwd, flash_bwd)
+    return flash
+
+
+_FLASH_CACHE: dict = {}
+
+
+def blocked_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                      cap: float = 0.0, q_offset=0,
+                      q_block: int = 512, k_block: int = 1024,
+                      kv_len: Optional[jnp.ndarray] = None,
+                      tp_mode: str = "auto"):
+    """Flash-style blocked attention with a flash backward.
+
+    q: (B, Sq, H, Dh); k, v: (B, Sk, KV, Dh). GQA handled by grouping query
+    heads (no materialized KV repeat). Returns (B, Sq, H, Dh).
+
+    window > 0 masks keys older than ``window`` positions behind the query.
+    kv_len (optional scalar) masks keys at positions >= kv_len.
+    """
+    B, Sq, H, Dh = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = KV
+    R = H // KV
+    scale = Dh ** -0.5
+
+    q_block = min(q_block, Sq)
+    k_block = min(k_block, Sk)
+    nq = -(-Sq // q_block)
+    nk = -(-Sk // k_block)
+    qp = _pad_to(q, nq * q_block, 1).reshape(B, nq, q_block, G, R, Dh)
+    kp = _pad_to(k, nk * k_block, 1).reshape(B, nk, k_block, G, Dh)
+    vp = _pad_to(v, nk * k_block, 1).reshape(B, nk, k_block, G, Dh)
+
+    q_pos = (jnp.arange(nq * q_block) + q_offset).reshape(nq, q_block)
+    k_pos = jnp.arange(nk * k_block).reshape(nk, k_block)
+    k_valid = (k_pos < (Sk if kv_len is None else kv_len))
+
+    if tp_mode == "replicate":
+        qp = constrain(qp, "batch")
+        kp = constrain(kp, "batch")
+        vp = constrain(vp, "batch")
+    else:
+        qp = constrain(qp, "batch", None, None, "kv_heads", None,
+                       "head_dim")
+        kp = constrain(kp, "batch", None, None, "kv_heads", "head_dim")
+        vp = constrain(vp, "batch", None, None, "kv_heads", "head_dim")
+
+    key = (causal, window, cap, q_block, k_block)
+    if key not in _FLASH_CACHE:
+        _FLASH_CACHE[key] = _make_flash(*key)
+    outs = _FLASH_CACHE[key](qp, kp, vp, q_pos, k_pos, k_valid, scale)
+
+    out = jnp.moveaxis(outs.astype(q.dtype), 0, 1)        # (B,nq,G,R,qb,Dh)
+    out = jnp.transpose(out, (0, 1, 4, 2, 3, 5)).reshape(
+        B, nq * q_block, H, Dh)
+    return out[:, :Sq]
+
+
+def decode_attention(q, k_cache, v_cache, *, pos, window: int = 0,
+                     cap: float = 0.0):
+    """One-token attention against a cache.
+
+    q: (B, 1, H, Dh); caches: (B, S, KV, Dh); pos: scalar index of the
+    current token (cache entries at >= pos+1 are invalid).
+    """
+    B, _, H, Dh = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    R = H // KV
+    qg = q.reshape(B, KV, R, Dh)
+    s = jnp.einsum("bgrd,bkgd->bgrk", qg, k_cache,
+                   preferred_element_type=jnp.float32) * Dh ** -0.5
+    if cap:
+        s = layers.softcap(s, cap)
+    kpos = jnp.arange(S)
+    mask = kpos <= pos
+    if window:
+        mask = mask & (kpos > pos - window)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrk,bkgd->bgrd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, Dh).astype(q.dtype)
+
+
+def attend(params, x, cfg: ModelConfig, *, mixer_kind: str,
+           positions=None, mrope_positions=None, causal=True,
+           cache=None, cache_pos=None, kv_override=None):
+    """Full attention layer: qkv proj, rope, blocked/decode attention, out proj.
+
+    cache: dict(k, v) of (B, S_cache, KV, Dh) -> decode/one-step mode when
+    x has sequence length 1 and cache_pos is given. Returns (out, new_cache).
+    kv_override: (B, S_enc, d_model) encoder states for cross-attention.
+    """
+    B, S, _ = x.shape
+    dh = cfg.resolved_head_dim
+    window = cfg.window if mixer_kind == "attn_local" else 0
+    use_rope = (cfg.rope_on_global or mixer_kind == "attn_local")
+
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    kin = x if kv_override is None else kv_override
+    k = jnp.einsum("bsd,dhk->bshk", kin, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", kin, params["wv"])
+
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    if use_rope and kv_override is None:
+        if cfg.mrope and mrope_positions is not None:
+            q = layers.apply_mrope(q, mrope_positions, cfg.rope_theta)
+            k = layers.apply_mrope(k, mrope_positions, cfg.rope_theta)
+        else:
+            q = layers.apply_rope(q, positions, cfg.rope_theta)
+            k = layers.apply_rope(k, positions, cfg.rope_theta)
+
+    def _full_attn(q_, k_, v_, causal_, window_):
+        # TP head-repeat: materialize GQA so attention is head-parallel
+        # (applies to the compute path only — caches keep GQA size)
+        if cfg.attn_tp_repeat:
+            R_ = cfg.n_heads // cfg.n_kv_heads
+            if R_ > 1 and k_.shape[2] != cfg.n_heads:
+                k_ = jnp.repeat(k_, R_, axis=2)
+                v_ = jnp.repeat(v_, R_, axis=2)
+        if cfg.use_pallas_attention:
+            from repro.kernels.flash_attention import ops as fa_ops
+            return fa_ops.attend(q_, k_, v_, causal=causal_,
+                                 window=window_, cap=cfg.attn_softcap)
+        return blocked_attention(
+            q_, k_, v_, causal=causal_, window=window_,
+            cap=cfg.attn_softcap,
+            tp_mode="replicate" if cfg.attn_replicate_tp else "auto")
+
+    if kv_override is not None:
+        # cross-attention: bidirectional, no cache (encoder kv recomputed —
+        # see backbone docstring for the cost note)
+        if S == 1:
+            out = decode_attention(q, k, v, pos=k.shape[1] - 1,
+                                   cap=cfg.attn_softcap)
+        else:
+            out = _full_attn(q, k, v, False, 0)
+        new_cache = cache
+    elif cache is not None and cache_pos is not None and S == 1:
+        # decode: write current k/v into the cache, attend over it.
+        # Ring mode (local layers, cache length == window): the write slot
+        # is pos % window and no extra window masking is needed — entries
+        # age out by being overwritten.
+        W = cache["k"].shape[1]
+        ring = bool(window) and W == window
+        slot = jax.lax.rem(cache_pos, W) if ring else cache_pos
+        kc = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+        vc = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+        new_cache = {"k": kc, "v": vc}
+        out = decode_attention(
+            q, kc, vc,
+            pos=jnp.minimum(cache_pos, W - 1) if ring else cache_pos,
+            window=0 if ring else window, cap=cfg.attn_softcap)
+    else:
+        out = _full_attn(q, k, v, causal, window)
+        new_cache = cache
+        if cache is not None:
+            # prefill: populate cache
+            W = cache["k"].shape[1]
+            ring = bool(window) and W == window
+            if ring and S >= W:
+                # last W entries land at slots (abs_pos % W): a roll
+                kc = jnp.roll(k[:, -W:], shift=S % W, axis=1)
+                vc = jnp.roll(v[:, -W:], shift=S % W, axis=1)
+                new_cache = {"k": kc.astype(cache["k"].dtype),
+                             "v": vc.astype(cache["v"].dtype)}
+            else:
+                kc = jax.lax.dynamic_update_slice(cache["k"], k,
+                                                  (0, 0, 0, 0))
+                vc = jax.lax.dynamic_update_slice(cache["v"], v,
+                                                  (0, 0, 0, 0))
+                new_cache = {"k": kc, "v": vc}
+
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, new_cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None,
+               window: int = 0):
+    """window > 0 with cfg.ring_cache -> ring cache of exactly ``window``
+    entries (local-attention layers never need more)."""
+    dh = cfg.resolved_head_dim
+    dt = dtype or layers.cdtype(cfg)
+    length = max_len
+    if window and cfg.ring_cache and window < max_len:
+        length = window
+    return {
+        "k": jnp.zeros((batch, length, cfg.n_kv_heads, dh), dt),
+        "v": jnp.zeros((batch, length, cfg.n_kv_heads, dh), dt),
+    }

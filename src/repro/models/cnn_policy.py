@@ -1,0 +1,103 @@
+"""The paper's policy network (appendix F): conv 32x8x8/4, conv 64x4x4/2,
+conv 64x3x3/1, fc 512, then policy + value heads. Also a small MLP policy
+for vector observations (mini-football "extracted map") and a tabular
+embedding policy for the token env.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_cnn import CNNPolicyConfig
+
+
+def _conv_out(n, k, s):
+    return (n - k) // s + 1
+
+
+def init_cnn(key, cfg: CNNPolicyConfig, n_actions: int,
+             obs_shape: Tuple[int, ...]):
+    ks = jax.random.split(key, 8)
+    h, w, cin = obs_shape
+    params = {}
+    for i, (f, k, s) in enumerate(zip(cfg.conv_filters, cfg.conv_sizes,
+                                      cfg.conv_strides)):
+        fan_in = k * k * cin
+        params[f"conv{i}_w"] = jax.random.normal(
+            ks[i], (k, k, cin, f)) * math.sqrt(2.0 / fan_in)
+        params[f"conv{i}_b"] = jnp.zeros((f,))
+        h, w, cin = _conv_out(h, k, s), _conv_out(w, k, s), f
+    flat = h * w * cin
+    params["fc_w"] = jax.random.normal(ks[5], (flat, cfg.hidden)) * \
+        math.sqrt(2.0 / flat)
+    params["fc_b"] = jnp.zeros((cfg.hidden,))
+    params["pi_w"] = jax.random.normal(ks[6], (cfg.hidden, n_actions)) * 0.01
+    params["pi_b"] = jnp.zeros((n_actions,))
+    params["v_w"] = jax.random.normal(ks[7], (cfg.hidden, 1)) * 1.0
+    params["v_b"] = jnp.zeros((1,))
+    return params
+
+
+def apply_cnn(params, obs, cfg: CNNPolicyConfig):
+    """obs: (B, H, W, C) -> (logits (B, A), value (B,))."""
+    x = obs.astype(jnp.float32)
+    for i, s in enumerate(cfg.conv_strides):
+        x = jax.lax.conv_general_dilated(
+            x, params[f"conv{i}_w"], window_strides=(s, s), padding="VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC")) + params[f"conv{i}_b"]
+        x = jax.nn.relu(x)
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc_w"] + params["fc_b"])
+    logits = x @ params["pi_w"] + params["pi_b"]
+    value = (x @ params["v_w"] + params["v_b"])[:, 0]
+    return logits, value
+
+
+def init_mlp_policy(key, obs_dim: int, n_actions: int, hidden: int = 128):
+    ks = jax.random.split(key, 4)
+    return {
+        "w1": jax.random.normal(ks[0], (obs_dim, hidden)) * math.sqrt(2.0 / obs_dim),
+        "b1": jnp.zeros((hidden,)),
+        "w2": jax.random.normal(ks[1], (hidden, hidden)) * math.sqrt(2.0 / hidden),
+        "b2": jnp.zeros((hidden,)),
+        "pi_w": jax.random.normal(ks[2], (hidden, n_actions)) * 0.01,
+        "pi_b": jnp.zeros((n_actions,)),
+        "v_w": jax.random.normal(ks[3], (hidden, 1)),
+        "v_b": jnp.zeros((1,)),
+    }
+
+
+def apply_mlp_policy(params, obs):
+    x = obs.astype(jnp.float32)
+    if x.ndim == 1:
+        x = x[None]
+    x = jax.nn.tanh(x @ params["w1"] + params["b1"])
+    x = jax.nn.tanh(x @ params["w2"] + params["b2"])
+    logits = x @ params["pi_w"] + params["pi_b"]
+    value = (x @ params["v_w"] + params["v_b"])[:, 0]
+    return logits, value
+
+
+def init_token_policy(key, vocab: int, hidden: int = 128):
+    ks = jax.random.split(key, 3)
+    return {
+        "embed": jax.random.normal(ks[0], (vocab, hidden)) * 0.1,
+        "w": jax.random.normal(ks[1], (hidden, hidden)) * math.sqrt(2.0 / hidden),
+        "b": jnp.zeros((hidden,)),
+        "pi_w": jax.random.normal(ks[2], (hidden, vocab)) * 0.01,
+        "pi_b": jnp.zeros((vocab,)),
+        "v_w": jnp.zeros((hidden, 1)),
+        "v_b": jnp.zeros((1,)),
+    }
+
+
+def apply_token_policy(params, obs):
+    """obs: (B,) int32 tokens."""
+    x = params["embed"][obs]
+    x = jax.nn.tanh(x @ params["w"] + params["b"])
+    logits = x @ params["pi_w"] + params["pi_b"]
+    value = (x @ params["v_w"] + params["v_b"])[:, 0]
+    return logits, value

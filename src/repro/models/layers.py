@@ -1,0 +1,173 @@
+"""Shared layers: norms, RoPE / M-RoPE, MLPs, embeddings, softcap.
+
+Everything is functional: ``init_*(key, cfg, ...) -> params`` and
+``apply(params, x, ...) -> y``. Params are nested dicts of jnp arrays.
+Matmul weights live in ``cfg.dtype`` (bf16 by default); norm scales and
+router weights stay f32 for stability.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------- norms
+def init_norm(cfg: ModelConfig, dim: int):
+    p = {"scale": jnp.ones((dim,), jnp.float32)}
+    if cfg.norm_kind == "layernorm":
+        p["bias"] = jnp.zeros((dim,), jnp.float32)
+    return p
+
+
+def apply_norm(params, x, cfg: ModelConfig, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if cfg.norm_kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * params["scale"] + params["bias"]
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * params["scale"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    freqs = rope_freqs(x.shape[-1], theta)                 # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    ang = ang[..., None, :]                                 # (..., S, 1, Dh/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+                sections=(2, 3, 3)) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE.
+
+    x: (B, S, H, Dh); positions: (3, B, S) -- temporal/height/width streams.
+    The head_dim/2 frequency slots are split into ``sections`` (proportional
+    1/4-3/8-3/8 split like Qwen2-VL's [16,24,24] for Dh=128), each rotated by
+    its own position stream.
+    """
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)                  # (half,)
+    total = sum(sections)
+    bounds, acc = [], 0
+    for s in sections[:-1]:
+        acc += int(half * s / total)
+        bounds.append(acc)
+    slot = jnp.zeros((half,), jnp.int32)
+    for i, b in enumerate(bounds):
+        slot = jnp.where(jnp.arange(half) >= b, i + 1, slot)
+    # pick the position stream per frequency slot: (B, S, half)
+    pos = jnp.moveaxis(positions, 0, -1).astype(jnp.float32)  # (B, S, 3)
+    pos_per_slot = pos[..., slot]                              # (B, S, half)
+    ang = pos_per_slot * freqs                                 # (B, S, half)
+    ang = ang[..., None, :]                                    # (B, S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------- precision-gated dots
+_PG_CACHE: dict = {}
+
+
+def _make_pg_dot(transpose_w: bool):
+    """matmul whose WEIGHT gradient is cast to the weight dtype (bf16)
+    before leaving the backward pass — the cast lands *before* the
+    data-axis partial-sum all-reduce GSPMD inserts, halving gradient
+    communication bytes (standard mixed-precision practice; opt-in via
+    ModelConfig.grad_comm_bf16)."""
+
+    @jax.custom_vjp
+    def dot(x, w):
+        return jnp.einsum("...d,fd->...f" if transpose_w else "...d,df->...f",
+                          x, w)
+
+    def fwd(x, w):
+        return dot(x, w), (x, w)
+
+    def bwd(res, g):
+        x, w = res
+        if transpose_w:
+            dx = jnp.einsum("...f,fd->...d", g, w)
+            dw = jnp.einsum("...f,...d->fd", g, x)
+        else:
+            dx = jnp.einsum("...f,df->...d", g, w)
+            dw = jnp.einsum("...d,...f->df", x, g)
+        return dx.astype(x.dtype), dw.astype(w.dtype)
+
+    dot.defvjp(fwd, bwd)
+    return dot
+
+
+def pg_dot(x, w, *, transpose_w: bool = False, enable: bool = False):
+    if not enable:
+        return jnp.einsum("...d,fd->...f" if transpose_w else "...d,df->...f",
+                          x, w)
+    key = transpose_w
+    if key not in _PG_CACHE:
+        _PG_CACHE[key] = _make_pg_dot(transpose_w)
+    return _PG_CACHE[key](x, w)
+
+
+# ---------------------------------------------------------------- MLP
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None):
+    d_ff = d_ff or cfg.d_ff
+    dt = cdtype(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale_in = cfg.d_model ** -0.5
+    scale_out = d_ff ** -0.5
+    p = {
+        "w_in": (jax.random.normal(k1, (cfg.d_model, d_ff)) * scale_in).astype(dt),
+        "w_out": (jax.random.normal(k2, (d_ff, cfg.d_model)) * scale_out).astype(dt),
+    }
+    if cfg.mlp_kind == "swiglu":
+        p["w_gate"] = (jax.random.normal(k3, (cfg.d_model, d_ff)) * scale_in).astype(dt)
+    return p
+
+
+def apply_mlp(params, x, cfg: ModelConfig):
+    pg = getattr(cfg, "grad_comm_bf16", False)
+    h = pg_dot(x, params["w_in"], enable=pg)
+    if cfg.mlp_kind == "swiglu":
+        g = pg_dot(x, params["w_gate"], enable=pg)
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    return pg_dot(h, params["w_out"], enable=pg)
+
+
+# ---------------------------------------------------------------- embed
+def init_embed(key, cfg: ModelConfig):
+    dt = cdtype(cfg)
+    emb = (jax.random.normal(key, (cfg.vocab_size, cfg.d_model)) *
+           cfg.d_model ** -0.5).astype(dt)
+    return {"table": emb}
+
+
+def apply_embed(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)

@@ -1,0 +1,114 @@
+"""Dropless MoE via sort + ``jax.lax.ragged_dot`` under ``shard_map``.
+
+The capacity-based GShard dispatch (models/moe.py) drops tokens when an
+expert overflows its capacity slots and burns FLOPs on padding. The
+dropless formulation routes *every* token:
+
+    1. top-k expert choice per token (deterministic tie-break),
+    2. stable sort of the (token, k) pairs by expert id,
+    3. one grouped matmul per weight via ``ragged_dot``
+       (lhs (M, D), rhs (E, D, F), group_sizes (E,)),
+    4. unsort + combine with the gate weights.
+
+Under SPMD a global sort would all-to-all the whole token stream, so the
+sort/ragged_dot runs **per data shard** inside ``shard_map`` (each shard
+routes its own tokens through replicated-or-gathered expert weights —
+expert weights are gathered once per layer instead of tokens being
+permuted globally). This is the Megablocks-style trade: dispatch-tensor
+free, no capacity hyperparameter, exact top-k semantics.
+
+Selectable per-config with ``moe_impl="dropless"`` (default "capacity" is
+the paper-era GShard formulation, kept as the baseline).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.sharding.constraints import _active_mesh
+
+
+def _dropless_local(x, router_w, w_in, w_gate, w_out, *, n_experts: int,
+                    top_k: int, mlp_kind: str, aux_weight: float):
+    """One shard's tokens through all experts. x: (T, D) bf16."""
+    T, D = x.shape
+    E, K = n_experts, top_k
+    logits = x.astype(jnp.float32) @ router_w                  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)              # (T, K)
+    if K > 1:
+        gate_vals = gate_vals / jnp.maximum(
+            gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    flat_expert = gate_idx.reshape(-1)                         # (T*K,)
+    flat_token = jnp.repeat(jnp.arange(T), K)
+    order = jnp.argsort(flat_expert, stable=True)              # (T*K,)
+    sorted_tokens = flat_token[order]
+    xs = x[sorted_tokens]                                      # (T*K, D)
+    group_sizes = jnp.bincount(flat_expert, length=E).astype(jnp.int32)
+
+    h = jax.lax.ragged_dot(xs, w_in, group_sizes)              # (T*K, F)
+    if w_gate is not None:
+        g = jax.lax.ragged_dot(xs, w_gate, group_sizes)
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    eo = jax.lax.ragged_dot(h, w_out, group_sizes)             # (T*K, D)
+
+    # unsort and combine with gates
+    inv = jnp.zeros_like(order).at[order].set(jnp.arange(order.shape[0]))
+    eo = eo[inv].reshape(T, K, D)
+    y = jnp.einsum("tkd,tk->td", eo.astype(jnp.float32),
+                   gate_vals).astype(x.dtype)
+
+    me = probs.mean(axis=0)
+    ce = jax.nn.one_hot(gate_idx[:, 0], E).mean(axis=0)
+    aux = E * jnp.sum(me * ce) * aux_weight
+    return y, aux
+
+
+def apply_moe_dropless(params, x, cfg: ModelConfig):
+    """x: (B, S, D) -> (y, aux). Routes per data shard under shard_map
+    when a mesh is active; plain local computation otherwise."""
+    B, S, D = x.shape
+    xt = x.reshape(B * S, D)
+    w_gate = params.get("w_gate")
+    fn = functools.partial(
+        _dropless_local, n_experts=cfg.n_experts, top_k=cfg.top_k,
+        mlp_kind=cfg.mlp_kind, aux_weight=cfg.router_aux_weight)
+
+    am = _active_mesh()
+    data_axes = tuple(a for a in ("pod", "data")
+                      if am is not None and a in am.axis_names)
+    total = 1
+    for a in data_axes:
+        total *= am.shape[a]
+    if am is not None and data_axes and (B * S) % total == 0:
+        spec_tok = P(data_axes if len(data_axes) > 1 else data_axes[0])
+        rep = P()
+
+        @functools.partial(
+            jax.shard_map, mesh=am,
+            in_specs=(spec_tok, rep, rep, rep, rep),
+            out_specs=(spec_tok, rep),
+            check_vma=False)
+        def sharded(xt_, rw, wi, wg, wo):
+            y, aux = fn(xt_, rw, wi, wg, wo)
+            return y, jax.lax.pmean(aux, data_axes)
+
+        y, aux = sharded(xt, params["router"], params["w_in"], w_gate,
+                         params["w_out"])
+    else:
+        y, aux = fn(xt, params["router"], params["w_in"], w_gate,
+                    params["w_out"])
+
+    y = y.reshape(B, S, D)
+    if cfg.shared_expert and "shared" in params:
+        y = y + layers.apply_mlp(params["shared"], x, cfg)
+    return y, aux

@@ -1,0 +1,146 @@
+"""RecurrentGemma / Griffin recurrent block: temporal conv + RG-LRU.
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(x_t W_a + b_a)               (recurrence gate)
+    i_t = sigmoid(x_t W_x + b_x)               (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)     (data-dependent decay)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Sequence mode uses ``jax.lax.associative_scan`` (log-depth linear
+recurrence — the TPU-native replacement for a GPU sequential kernel);
+decode mode is the O(1) single-step update. A chunked Pallas kernel
+(``repro.kernels.lru_scan``) implements the same recurrence with explicit
+VMEM tiling for the train/prefill shapes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.sharding.constraints import constrain
+
+
+def init_rglru(key, cfg: ModelConfig):
+    dt = layers.cdtype(cfg)
+    D = cfg.d_model
+    ks = jax.random.split(key, 7)
+    s = D ** -0.5
+    # Lambda init so that a^c in [0.9, 0.999] at r=1 (Griffin appendix)
+    lam = jax.random.uniform(ks[0], (D,), jnp.float32, 0.9 ** 2, 0.999 ** 2)
+    a_param = jnp.log(jnp.expm1(-jnp.log(lam) / (2 * cfg.rglru_c)))  # softplus^-1
+    return {
+        "w_x_branch": (jax.random.normal(ks[1], (D, D)) * s).astype(dt),
+        "w_gate_branch": (jax.random.normal(ks[2], (D, D)) * s).astype(dt),
+        "conv_w": (jax.random.normal(ks[3], (cfg.conv_width, D)) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((D,), jnp.float32),
+        "w_a": (jax.random.normal(ks[4], (D, D)) * s).astype(jnp.float32),
+        "b_a": jnp.zeros((D,), jnp.float32),
+        "w_i": (jax.random.normal(ks[5], (D, D)) * s).astype(jnp.float32),
+        "b_i": jnp.zeros((D,), jnp.float32),
+        "lambda_param": a_param,
+        "w_out": (jax.random.normal(ks[6], (D, D)) * s).astype(dt),
+    }
+
+
+def _gates(params, x, cfg: ModelConfig):
+    """a_t (decay) and gated input, both f32. x: (..., D)."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ params["w_a"] + params["b_a"])
+    i = jax.nn.sigmoid(xf @ params["w_i"] + params["b_i"])
+    log_a = -cfg.rglru_c * jax.nn.softplus(params["lambda_param"]) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2 * log_a), 1e-12)) * (i * xf)
+    return a, gated
+
+
+def _combine(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a1 * a2, a2 * b1 + b2
+
+
+def rglru_scan(params, x, cfg: ModelConfig, h0=None, chunk: int = 512):
+    """x: (B, S, D) -> (y, h_last). Associative linear recurrence, chunked
+    into checkpointed segments (the associative-scan backward otherwise
+    stores O(S log S) full-width intermediates)."""
+    B, S, D = x.shape
+    a, b = _gates(params, x, cfg)                       # (B,S,D) f32
+    if h0 is not None:
+        # fold the initial state in as a virtual step 0 contribution
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk -= 1
+    n_chunks = S // chunk
+
+    def chunk_fn(h, ab):
+        a_c, b_c = ab                                   # (chunk, B, D)
+        b_c = b_c.at[0].add(a_c[0] * h)
+        _, hs = jax.lax.associative_scan(_combine, (a_c, b_c), axis=0)
+        return hs[-1], hs
+
+    chunk_fn = jax.checkpoint(chunk_fn)
+    a_t = constrain(jnp.moveaxis(a, 1, 0).reshape(n_chunks, chunk, B, D),
+                    None, None, "batch", "dsq")
+    b_t = constrain(jnp.moveaxis(b, 1, 0).reshape(n_chunks, chunk, B, D),
+                    None, None, "batch", "dsq")
+    h_last, hs = jax.lax.scan(chunk_fn, jnp.zeros((B, D), jnp.float32),
+                              (a_t, b_t))
+    h = jnp.moveaxis(hs.reshape(S, B, D), 0, 1)
+    return h.astype(x.dtype), h_last
+
+
+def rglru_step(params, x, cfg: ModelConfig, h):
+    """One decode step. x: (B, 1, D); h: (B, D) f32."""
+    a, b = _gates(params, x[:, 0], cfg)
+    h_new = a * h + b
+    return h_new.astype(x.dtype)[:, None], h_new
+
+
+def _causal_conv(params, x, cfg: ModelConfig, conv_cache=None):
+    """Depthwise causal temporal conv, width cfg.conv_width.
+
+    x: (B,S,D). conv_cache: (B, width-1, D) previous inputs (decode)."""
+    W = cfg.conv_width
+    if conv_cache is not None:
+        xc = jnp.concatenate([conv_cache.astype(x.dtype), x], axis=1)
+    else:
+        xc = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    y = jnp.zeros_like(x, dtype=jnp.float32)
+    S = x.shape[1]
+    for i in range(W):
+        y = y + xc[:, i:i + S].astype(jnp.float32) * params["conv_w"][i].astype(jnp.float32)
+    y = y + params["conv_b"]
+    new_cache = xc[:, -(W - 1):] if W > 1 else None
+    return y.astype(x.dtype), new_cache
+
+
+def apply_rglru_block(params, x, cfg: ModelConfig, cache=None):
+    """Griffin recurrent block. x: (B,S,D).
+
+    cache: {"h": (B,D) f32, "conv": (B, width-1, D)} or None.
+    Returns (y, new_cache)."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,de->bse", x, params["w_gate_branch"]))
+    u = jnp.einsum("bsd,de->bse", x, params["w_x_branch"])
+    conv_cache = cache["conv"] if cache is not None else None
+    u, new_conv = _causal_conv(params, u, cfg, conv_cache)
+    if cache is not None and x.shape[1] == 1:
+        y, h_last = rglru_step(params, u, cfg, cache["h"])
+    else:
+        h0 = cache["h"] if cache is not None else None
+        y, h_last = rglru_scan(params, u, cfg, h0)
+    out = jnp.einsum("bse,ed->bsd", gate * y, params["w_out"])
+    new_cache = {"h": h_last, "conv": new_conv} if new_conv is not None else {
+        "h": h_last}
+    return out, new_cache
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int):
+    return {
+        "h": jnp.zeros((batch, cfg.d_model), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_model),
+                          layers.cdtype(cfg)),
+    }

@@ -1,0 +1,152 @@
+"""RWKV-6 "Finch" time-mix with data-dependent decay. [arXiv:2404.05892]
+
+Per head (dim N), state S in R^{N x N}:
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+with data-dependent decay w_t = exp(-exp(w0 + tanh(x W_w1) W_w2))
+(the low-rank "Finch" decay). Token-shift lerp on r/k/v/w/g inputs.
+
+Simplifications vs. the released model (documented, not silent): the
+token-shift lerp coefficients are static per-channel (Finch makes them
+data-dependent via a second LoRA); output gating uses SiLU as in the
+paper. The recurrence itself — the part that matters for the system —
+is exact.
+
+Sequence mode is a ``lax.scan`` over time (this is also what the official
+CUDA kernel does — the recurrence is inherently sequential in t); the
+Pallas kernel (``repro.kernels.wkv6``) tiles (B*H) over the grid with the
+time loop in VMEM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.sharding.constraints import constrain
+
+DECAY_RANK = 64
+
+
+def init_rwkv6(key, cfg: ModelConfig):
+    dt = layers.cdtype(cfg)
+    D = cfg.d_model
+    H = cfg.n_heads
+    N = cfg.resolved_head_dim
+    assert H * N == D, "rwkv6 requires n_heads * head_dim == d_model"
+    ks = jax.random.split(key, 10)
+    s = D ** -0.5
+    return {
+        "mu": 0.5 * jnp.ones((5, D), jnp.float32),        # shift lerp r,k,v,w,g
+        "w_r": (jax.random.normal(ks[0], (D, D)) * s).astype(dt),
+        "w_k": (jax.random.normal(ks[1], (D, D)) * s).astype(dt),
+        "w_v": (jax.random.normal(ks[2], (D, D)) * s).astype(dt),
+        "w_g": (jax.random.normal(ks[3], (D, D)) * s).astype(dt),
+        "w_o": (jax.random.normal(ks[4], (D, D)) * s).astype(dt),
+        "w0": jnp.full((D,), -6.0, jnp.float32),          # slow decay init
+        "w_lora_a": (jax.random.normal(ks[5], (D, DECAY_RANK)) * s).astype(jnp.float32),
+        "w_lora_b": (jax.random.normal(ks[6], (DECAY_RANK, D)) *
+                     DECAY_RANK ** -0.5).astype(jnp.float32),
+        "u": (jax.random.normal(ks[7], (H, N)) * 0.1).astype(jnp.float32),
+        "ln_scale": jnp.ones((H, N), jnp.float32),        # per-head groupnorm
+    }
+
+
+def _token_shift(x, mu, x_prev=None):
+    """lerp(x, shift(x), mu) for 5 streams. x: (B,S,D); mu: (5,D)."""
+    if x_prev is None:
+        xs = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        xs = jnp.concatenate([x_prev.astype(x.dtype), x], axis=1)[:, :-1]
+    return x[None] + mu[:, None, None, :].astype(x.dtype) * (xs - x)[None]
+
+
+def wkv6_ref(r, k, v, w, u, s0=None, chunk: int = 64):
+    """Reference WKV6 recurrence (also the Pallas oracle).
+
+    r,k,v,w: (B, T, H, N) — w is the *decay* in (0,1), f32.
+    u: (H, N). s0: (B, H, N, N) or None. Returns (o (B,T,H,N), sT).
+
+    The time loop is split into checkpointed chunks: differentiating a
+    plain T-step scan stores the (B,H,N,N) state every step (PBs at
+    train_4k scale); with chunking the backward stores only chunk-boundary
+    states and rematerializes inside each chunk.
+    """
+    B, T, H, N = r.shape
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
+    s_init = (jnp.zeros((B, H, N, N), jnp.float32) if s0 is None
+              else s0.astype(jnp.float32))
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                              # (B,H,N)
+        kv = kt[..., :, None] * vt[..., None, :]          # (B,H,N,N)
+        o = jnp.einsum("bhn,bhnm->bhm", rt, s + u[None, :, :, None] * kv)
+        s_new = wt[..., :, None] * s + kv
+        return s_new, o
+
+    chunk = min(chunk, T)
+    while T % chunk:
+        chunk -= 1
+    n_chunks = T // chunk
+
+    def chunk_fn(s, xs_chunk):
+        return jax.lax.scan(step, s, xs_chunk)
+
+    chunk_fn = jax.checkpoint(chunk_fn)
+
+    xs = tuple(constrain(
+        jnp.moveaxis(t, 1, 0).reshape(n_chunks, chunk, B, H, N),
+        None, None, "batch", "heads", None) for t in (rf, kf, vf, wf))
+
+    def outer(s, xs_c):
+        return chunk_fn(s, xs_c)
+
+    sT, o = jax.lax.scan(outer, s_init, xs)
+    o = o.reshape(T, B, H, N)
+    return jnp.moveaxis(o, 0, 1).astype(r.dtype), sT
+
+
+def _project(params, x, cfg: ModelConfig, x_prev=None):
+    """token shift + projections. Returns r,k,v,w (B,S,H,N), g (B,S,D)."""
+    B, S, D = x.shape
+    H, N = cfg.n_heads, cfg.resolved_head_dim
+    xr, xk, xv, xw, xg = _token_shift(x, params["mu"], x_prev)
+    r = (xr @ params["w_r"]).reshape(B, S, H, N)
+    k = (xk @ params["w_k"]).reshape(B, S, H, N)
+    v = (xv @ params["w_v"]).reshape(B, S, H, N)
+    g = jax.nn.silu(xg @ params["w_g"])
+    dec = params["w0"] + jnp.tanh(
+        xw.astype(jnp.float32) @ params["w_lora_a"]) @ params["w_lora_b"]
+    w = jnp.exp(-jnp.exp(dec)).reshape(B, S, H, N)        # (0,1) f32
+    return r, k, v, w, g
+
+
+def _head_norm(params, o):
+    """per-head rms groupnorm. o: (B,S,H,N) f32."""
+    ms = jnp.mean(jnp.square(o), axis=-1, keepdims=True)
+    return o * jax.lax.rsqrt(ms + 1e-6) * params["ln_scale"]
+
+
+def apply_rwkv6_block(params, x, cfg: ModelConfig, cache=None):
+    """x: (B,S,D). cache: {"state": (B,H,N,N) f32, "xprev": (B,1,D)}.
+
+    Returns (y, new_cache)."""
+    B, S, D = x.shape
+    x_prev = cache["xprev"] if cache is not None else None
+    s0 = cache["state"] if cache is not None else None
+    r, k, v, w, g = _project(params, x, cfg, x_prev)
+    o, sT = wkv6_ref(r, k, v, w, params["u"], s0)
+    o = _head_norm(params, o.astype(jnp.float32))
+    o = (o.reshape(B, S, D).astype(x.dtype) * g)
+    y = o @ params["w_o"]
+    new_cache = {"state": sT, "xprev": x[:, -1:]}
+    return y, new_cache
+
+
+def init_rwkv6_cache(cfg: ModelConfig, batch: int):
+    H, N = cfg.n_heads, cfg.resolved_head_dim
+    return {
+        "state": jnp.zeros((batch, H, N, N), jnp.float32),
+        "xprev": jnp.zeros((batch, 1, cfg.d_model), layers.cdtype(cfg)),
+    }

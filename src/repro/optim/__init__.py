@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (  # noqa: F401
+    adam, rmsprop, sgd, clip_by_global_norm, chain, apply_updates,
+    Optimizer)
+from repro.optim import schedules  # noqa: F401

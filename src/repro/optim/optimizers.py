@@ -1,0 +1,109 @@
+"""Minimal optax-style optimizers (optax is not available offline).
+
+Each optimizer is a pair of pure functions packed in an ``Optimizer``:
+    init(params) -> state
+    update(grads, state, params) -> (updates, state)
+``apply_updates(params, updates)`` adds (gradient-ascent convention is the
+caller's business; losses here are minimized, so updates are negative).
+
+RMSProp matches the paper's hyperparameter tables (Tab. A3/A6): momentum 0,
+configurable eps. Optimizer state is f32 and shards like the params.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def _tmap(f, *trees):
+    return jax.tree.map(f, *trees)
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        return _tmap(lambda g: -lr * g, grads), state
+
+    return Optimizer(init, update)
+
+
+def rmsprop(lr: float, decay: float = 0.99, eps: float = 1e-5,
+            momentum: float = 0.0) -> Optimizer:
+    """RMSProp as used by the paper (Kostrikov A2C / TorchBeast IMPALA)."""
+
+    def init(params):
+        sq = _tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        if momentum:
+            mom = _tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            return {"sq": sq, "mom": mom}
+        return {"sq": sq}
+
+    def update(grads, state, params=None):
+        gf = _tmap(lambda g: g.astype(jnp.float32), grads)
+        sq = _tmap(lambda s, g: decay * s + (1 - decay) * g * g,
+                   state["sq"], gf)
+        upd = _tmap(lambda g, s: -lr * g / (jnp.sqrt(s) + eps), gf, sq)
+        new = {"sq": sq}
+        if momentum:
+            mom = _tmap(lambda m, u: momentum * m + u, state["mom"], upd)
+            upd = mom
+            new["mom"] = mom
+        return upd, new
+
+    return Optimizer(init, update)
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        z = _tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {"m": z, "v": jax.tree.map(jnp.copy, z),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        t = state["t"] + 1
+        gf = _tmap(lambda g: g.astype(jnp.float32), grads)
+        m = _tmap(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], gf)
+        v = _tmap(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], gf)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+        upd = _tmap(lambda m_, v_: -lr * (m_ / bc1) /
+                    (jnp.sqrt(v_ / bc2) + eps), m, v)
+        return upd, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(max_norm: float) -> Callable:
+    """Gradient transform applied before an optimizer."""
+
+    def clip(grads):
+        leaves = jax.tree.leaves(grads)
+        gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                          for g in leaves))
+        scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+        return _tmap(lambda g: g * scale.astype(g.dtype), grads), gn
+
+    return clip
+
+
+def chain(clip_fn: Callable, opt: Optimizer) -> Optimizer:
+    def update(grads, state, params=None):
+        grads, _ = clip_fn(grads)
+        return opt.update(grads, state, params)
+
+    return Optimizer(opt.init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+                        params, updates)

@@ -1,0 +1,52 @@
+"""Learning-rate schedules (pure functions step -> lr multiplier)."""
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax.numpy as jnp
+
+
+def constant(lr: float) -> Callable:
+    return lambda step: jnp.full((), lr, jnp.float32)
+
+
+def linear_decay(lr: float, total_steps: int, floor: float = 0.0) -> Callable:
+    def f(step):
+        frac = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        return lr * (1.0 - frac) + floor * frac
+    return f
+
+
+def warmup_cosine(lr: float, warmup_steps: int, total_steps: int,
+                  floor_ratio: float = 0.1) -> Callable:
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * step / max(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps) /
+                        max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = lr * (floor_ratio + (1 - floor_ratio) *
+                    0.5 * (1 + jnp.cos(math.pi * prog)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return f
+
+
+def scheduled(opt_factory: Callable, schedule: Callable):
+    """Wrap an optimizer factory (lr -> Optimizer) with a schedule: the
+    state carries a step counter and the lr is re-derived each update."""
+    from repro.optim.optimizers import Optimizer
+    import jax
+
+    base = opt_factory(1.0)     # unit-lr optimizer; scale updates
+
+    def init(params):
+        return {"inner": base.init(params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        upd, inner = base.update(grads, state["inner"], params)
+        lr = schedule(state["step"])
+        upd = jax.tree.map(lambda u: u * lr, upd)
+        return upd, {"inner": inner, "step": state["step"] + 1}
+
+    return Optimizer(init, update)

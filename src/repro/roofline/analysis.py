@@ -1,0 +1,231 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+  compute term    = HLO_FLOPs_per_chip / peak_FLOP/s
+  memory term     = HLO_bytes_per_chip / HBM_bw
+  collective term = collective_bytes_per_chip / link_bw
+
+``cost_analysis()`` reports post-SPMD per-device flops (MAC=2 convention)
+and bytes. Collective bytes are NOT in cost_analysis: we parse the
+post-optimization HLO (``compiled.as_text()``) and sum the *output* tensor
+sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops (all-reduce counted twice: it moves ~2x its size in
+a ring). Ops inside while-loop bodies (scan-over-layers) are multiplied by
+the loop trip count, which we recover from the loop's induction-variable
+compare against a constant.
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List, Optional
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c128": 16, "token": 0, "opaque": 0,
+    "u4": 1, "s4": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_CALL_RE = re.compile(r"(?:calls=|to_apply=|body=|condition=)%?([\w\.\-]+)")
+
+
+def _shape_bytes(txt: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(txt):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_op: Dict[str, float] = field(default_factory=dict)
+    count_by_op: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_op.values())
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        m = re.match(r"\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s+\([^)]*\)\s*->", line)
+        if m and "{" in line:
+            cur = m.group(1)
+            comps[cur] = []
+        elif cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def _loop_trip_count(body_lines: List[str], cond_name: str,
+                     comps: Dict[str, List[str]]) -> int:
+    """Best-effort trip count from the condition's compare-with-constant."""
+    for line in comps.get(cond_name, []):
+        m = re.search(r"compare\(.*\).*direction=LT", line)
+        if m:
+            c = re.search(r"constant\((\d+)\)", "\n".join(comps[cond_name]))
+            if c:
+                return int(c.group(1))
+    c = re.search(r"constant\((\d+)\)", "\n".join(comps.get(cond_name, [])))
+    return int(c.group(1)) if c else 1
+
+
+def parse_collectives(hlo: str) -> CollectiveStats:
+    comps = _split_computations(hlo)
+    # find while loops in entry and their (body, trip count)
+    entry = None
+    for name in comps:
+        if re.search(r"^main|entry", name) or name.endswith(".1"):
+            pass
+    # entry computation: the one marked ENTRY in the original text
+    m = re.search(r"ENTRY\s+%?([\w\.\-]+)", hlo)
+    entry = m.group(1) if m else next(iter(comps), None)
+
+    stats = CollectiveStats()
+
+    def scan_comp(name: str, multiplier: int, seen):
+        if name in seen or name not in comps:
+            return
+        seen = seen | {name}
+        for line in comps[name]:
+            stripped = line.strip()
+            op = None
+            for cname in COLLECTIVES:
+                if re.search(rf"=\s*(\([^)]*\)|\S+)\s+{cname}(-start|-done)?\(",
+                             line):
+                    op = cname
+                    break
+            if op and "-done(" not in line:
+                lhs = line.split(f" {op}")[0]
+                b = _shape_bytes(lhs)
+                mult = 2 if op == "all-reduce" else 1
+                stats.bytes_by_op[op] = stats.bytes_by_op.get(op, 0.0) + \
+                    b * mult * multiplier
+                stats.count_by_op[op] = stats.count_by_op.get(op, 0) + \
+                    multiplier
+            if " while(" in line:
+                bm = re.search(r"body=%?([\w\.\-]+)", line)
+                cm = re.search(r"condition=%?([\w\.\-]+)", line)
+                if bm:
+                    trips = _loop_trip_count(comps.get(bm.group(1), []),
+                                             cm.group(1) if cm else "", comps)
+                    scan_comp(bm.group(1), multiplier * max(trips, 1), seen)
+            else:
+                for cal in _CALL_RE.findall(line):
+                    if cal in comps and not any(
+                            c in line for c in COLLECTIVES):
+                        scan_comp(cal, multiplier, seen)
+
+    if entry:
+        scan_comp(entry, 1, frozenset())
+    return stats
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    collective_bytes_per_chip: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float            # 6 * N_active * tokens, global
+    useful_flops_ratio: float     # model_flops / (HLO flops * chips)
+    peak_memory_per_chip: float
+    collective_detail: Dict[str, float] = field(default_factory=dict)
+    note: str = ""
+
+    def to_json(self) -> str:
+        return json.dumps(asdict(self), indent=1)
+
+
+def build_roofline(arch, shape, mesh_name, chips, cost, collectives,
+                   model_flops, peak_memory) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    coll = collectives.total_bytes
+    compute_s = flops / PEAK_FLOPS_BF16
+    memory_s = byts / HBM_BW
+    coll_s = coll / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    bottleneck = max(terms, key=terms.get)
+    ratio = model_flops / max(flops * chips, 1.0)
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_chip=flops, bytes_per_chip=byts,
+        collective_bytes_per_chip=coll, compute_s=compute_s,
+        memory_s=memory_s, collective_s=coll_s, bottleneck=bottleneck,
+        model_flops=model_flops, useful_flops_ratio=ratio,
+        peak_memory_per_chip=peak_memory,
+        collective_detail=dict(collectives.bytes_by_op),
+    )
+
+
+def count_params(cfg) -> float:
+    """Total and active parameter counts (analytic, from the config)."""
+    D, F, V, L = cfg.d_model, cfg.d_ff, cfg.vocab_size, cfg.n_layers
+    dh = cfg.resolved_head_dim
+    attn = D * dh * (cfg.n_heads * 2 + cfg.n_kv_heads * 2)
+    gate = 1 if cfg.mlp_kind != "swiglu" else 2
+    mlp_dense = D * F * (gate + 1)
+    total = active = 0.0
+    for (mixer, ffn) in cfg.layer_kinds:
+        if mixer in ("attn_full", "attn_local"):
+            total += attn
+            active += attn
+        elif mixer == "rglru":
+            total += 6 * D * D
+            active += 6 * D * D
+        elif mixer == "rwkv":
+            total += 5 * D * D + D * D
+            active += 5 * D * D + D * D
+        if ffn == "moe":
+            e_mlp = D * cfg.d_ff * 3
+            total += cfg.n_experts * e_mlp + D * cfg.n_experts
+            active += cfg.top_k * e_mlp + D * cfg.n_experts
+            if cfg.shared_expert:
+                total += e_mlp
+                active += e_mlp
+        else:
+            total += mlp_dense
+            active += mlp_dense
+    emb = V * D
+    total += emb * 2          # embed + untied lm head
+    active += emb * 2
+    if cfg.is_encoder_decoder:
+        enc = cfg.n_enc_layers * (attn + mlp_dense)
+        xattn = cfg.n_layers * attn
+        total += enc + xattn
+        active += enc + xattn
+    return total, active
+
+
+def model_flops_for(cfg, shape_kind: str, seq_len: int, batch: int) -> float:
+    """6*N_active*tokens for training; 2*N_active*tokens for inference
+    forward (prefill); decode: 2*N_active per token * batch."""
+    _, active = count_params(cfg)
+    if shape_kind == "train":
+        return 6.0 * active * seq_len * batch
+    if shape_kind == "prefill":
+        return 2.0 * active * seq_len * batch
+    return 2.0 * active * batch       # one decoded token per request

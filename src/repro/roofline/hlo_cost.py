@@ -1,0 +1,324 @@
+"""Loop-aware HLO cost model.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop *body once*,
+which under scan-over-layers understates FLOPs/bytes by the layer count.
+This walker parses the post-optimization HLO text, recovers trip counts
+from ``backend_config={"known_trip_count":...}`` (with a fallback to the
+loop condition's compare-against-constant), and accumulates:
+
+  * flops: 2 * prod(dot output dims) * prod(contracting dims)  (+ convs)
+  * bytes: operand + output bytes of top-level instructions (HBM-traffic
+    proxy under the assumption one fusion = one pass over its operands)
+  * transcendentals: elements of exp/log/tanh/... ops
+
+Also detects the XLA:CPU float-normalization artifact: f32 buffers that
+are whole-array converts of bf16 values (the CPU backend cannot execute
+bf16 math, so it stashes upcast copies). These don't exist on the TPU
+pipeline; their sizes are reported so the dry-run can publish a
+TPU-adjusted peak-memory estimate alongside the raw number.
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "u4": 1, "s4": 1,
+}
+
+TRANSCENDENTAL = ("exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+                  "logistic", "sine", "cosine", "exp(")
+
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\([^()]*\)|\S+)\s+([\w\-]+)\((.*)$")
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*->.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def _shape_info(txt: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(txt):
+        if dt not in DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",") if d)
+        out.append((dt, shape))
+    return out
+
+
+def _nbytes(txt: str) -> int:
+    total = 0
+    for dt, shape in _shape_info(txt):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _nelems(txt: str) -> int:
+    total = 0
+    for _, shape in _shape_info(txt):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n
+    return total
+
+
+@dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    collective_bytes: Dict[str, float] = field(default_factory=dict)
+    upcast_f32_bytes: float = 0.0       # CPU float-normalization artifacts
+
+    def add(self, other: "Costs", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.transcendentals += other.transcendentals * mult
+        for k, v in other.collective_bytes.items():
+            self.collective_bytes[k] = self.collective_bytes.get(k, 0.0) + \
+                v * mult
+
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+class HloCostModel:
+    def __init__(self, hlo: str):
+        self.comps: Dict[str, List[str]] = {}
+        self.entry: Optional[str] = None
+        cur = None
+        for line in hlo.splitlines():
+            m = _COMP_HDR.match(line)
+            if m:
+                cur = m.group(1)
+                self.comps[cur] = []
+                if line.strip().startswith("ENTRY"):
+                    self.entry = cur
+            elif cur is not None:
+                self.comps[cur].append(line)
+        m = re.search(r"ENTRY\s+%?([\w\.\-]+)", hlo)
+        if m:
+            self.entry = m.group(1)
+        self._symtabs: Dict[str, Dict[str, str]] = {}
+        self._cache: Dict[str, Costs] = {}
+        self.upcast_f32_bytes = 0.0
+        self._find_upcasts(hlo)
+
+    # -------------------------------------------------------------- utils
+    def _symtab(self, comp: str) -> Dict[str, str]:
+        if comp in self._symtabs:
+            return self._symtabs[comp]
+        tab: Dict[str, str] = {}
+        for line in self.comps.get(comp, []):
+            m = _DEF_RE.match(line)
+            if m:
+                tab[m.group(1)] = m.group(2)
+        self._symtabs[comp] = tab
+        return tab
+
+    def _trip_count(self, line: str, cond: Optional[str]) -> int:
+        m = _TRIP_RE.search(line)
+        if m:
+            return int(m.group(1))
+        if cond and cond in self.comps:
+            c = re.search(r"constant\((\d+)\)", "\n".join(self.comps[cond]))
+            if c:
+                return int(c.group(1))
+        return 1
+
+    def _dot_flops(self, comp: str, line: str) -> float:
+        m = _DEF_RE.match(line)
+        if not m:
+            return 0.0
+        out_elems = _nelems(m.group(2))
+        # contracting dims from lhs operand shape
+        ops = re.match(r"\s*%?([\w\.\-]+)", m.group(4))
+        cd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+        if not ops or not cd:
+            return 2.0 * out_elems          # fallback
+        lhs_shape_txt = self._symtab(comp).get(ops.group(1), "")
+        info = _shape_info(lhs_shape_txt)
+        if not info:
+            return 2.0 * out_elems
+        _, lhs_shape = info[0]
+        k = 1
+        for d in cd.group(1).split(","):
+            if d and int(d) < len(lhs_shape):
+                k *= lhs_shape[int(d)]
+        return 2.0 * out_elems * k
+
+    def _conv_flops(self, comp: str, line: str) -> float:
+        m = _DEF_RE.match(line)
+        if not m:
+            return 0.0
+        out_elems = _nelems(m.group(2))
+        ops = [o.group(1) for o in
+               re.finditer(r"%?([\w\.\-]+)", m.group(4))][:2]
+        if len(ops) < 2:
+            return 2.0 * out_elems
+        rhs_txt = self._symtab(comp).get(ops[1], "")
+        info = _shape_info(rhs_txt)
+        if not info:
+            return 2.0 * out_elems
+        _, ks = info[0]
+        k = 1
+        for d in ks[:-1]:                   # all but output-feature dim
+            k *= d
+        return 2.0 * out_elems * k
+
+    def _fusion_read_bytes(self, comp: str) -> int:
+        """Bytes a fusion actually reads: a parameter consumed only via
+        dynamic-slice contributes the slice size, not the whole buffer
+        (the stacked scan residuals are read one slice per iteration)."""
+        lines = self.comps.get(comp, [])
+        total = 0
+        params = {}
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if m and m.group(3) == "parameter":
+                params[m.group(1)] = m.group(2)
+        for pname, pshape in params.items():
+            slice_bytes = None
+            whole = False
+            for line in lines:
+                if f"%{pname}" in line and f"%{pname} =" not in line:
+                    dm = re.match(
+                        r"\s*(?:ROOT )?%?[\w\.\-]+ = (\S+) "
+                        r"dynamic-slice\(%" + re.escape(pname), line)
+                    if dm:
+                        b = _nbytes(dm.group(1))
+                        slice_bytes = (slice_bytes or 0) + b
+                    else:
+                        whole = True
+            if whole or slice_bytes is None:
+                total += _nbytes(pshape)
+            else:
+                total += slice_bytes
+        return total
+
+    def _find_upcasts(self, hlo: str) -> None:
+        """f32 whole-tensor converts of bf16 values > 256 MB: CPU
+        float-normalization stash artifacts (absent on TPU)."""
+        seen = set()
+        for line in hlo.splitlines():
+            m = re.match(
+                r"\s*(?:ROOT )?%?([\w\.\-]+) = f32\[([\d,]+)\][^=]*"
+                r"(convert|fusion)\(", line)
+            if not m:
+                continue
+            name, dims, kind = m.groups()
+            if kind == "fusion" and "convert" not in name:
+                continue
+            n = 1
+            for d in dims.split(","):
+                n *= int(d)
+            b = n * 4
+            if b > 256e6 and dims not in seen:
+                seen.add(dims)
+                self.upcast_f32_bytes += b / 2   # f32 copy minus bf16 size
+
+    # ------------------------------------------------------------ walking
+    def comp_costs(self, comp: str, count_bytes: bool = True) -> Costs:
+        key = (comp, count_bytes)
+        if key in self._cache:
+            return self._cache[key]
+        total = Costs()
+        self._cache[key] = total            # break cycles
+        for line in self.comps.get(comp, []):
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            name, out_shape, op, rest = m.groups()
+            if op in ("parameter", "constant", "get-tuple-element", "tuple",
+                      "bitcast", "after-all"):
+                continue
+            if op == "while":
+                bm = re.search(r"body=%?([\w\.\-]+)", line)
+                cm = re.search(r"condition=%?([\w\.\-]+)", line)
+                if bm:
+                    trips = self._trip_count(line,
+                                             cm.group(1) if cm else None)
+                    total.add(self.comp_costs(bm.group(1), count_bytes),
+                              trips)
+                continue
+            if op in ("call", "fusion", "conditional", "custom-call",
+                      "async-start", "map", "reduce", "sort", "scatter",
+                      "select-and-scatter", "reduce-window"):
+                # fused computations never touch HBM internally: count
+                # only their flops/transcendentals, not bytes
+                inner_bytes = count_bytes and op not in ("fusion",)
+                for cal in re.findall(
+                        r"(?:calls|to_apply|branch_computations)=\{?%?"
+                        r"([\w\.\-, %]+)", line):
+                    for c in re.split(r"[,\s%]+", cal):
+                        if c in self.comps:
+                            total.add(self.comp_costs(c, inner_bytes), 1.0)
+            coll = None
+            for cname in COLLECTIVES:
+                if op.startswith(cname):
+                    coll = cname
+                    break
+            if coll and not op.endswith("-done"):
+                mult = 2.0 if coll == "all-reduce" else 1.0
+                total.collective_bytes[coll] = \
+                    total.collective_bytes.get(coll, 0.0) + \
+                    _nbytes(out_shape) * mult
+                continue
+            if op == "dot":
+                total.flops += self._dot_flops(comp, line)
+            elif op == "convolution":
+                total.flops += self._conv_flops(comp, line)
+            elif any(t in op for t in TRANSCENDENTAL):
+                total.transcendentals += _nelems(out_shape)
+            # bytes: output + operand traffic for compute ops
+            if count_bytes and op == "dynamic-update-slice":
+                # in-place slice write: traffic = 2x the updated slice,
+                # not the whole buffer
+                onames = re.findall(r"%([\w\.\-]+)", rest)
+                if len(onames) >= 2:
+                    shp = self._symtab(comp).get(onames[1])
+                    if shp:
+                        total.bytes += 2 * _nbytes(shp)
+            elif count_bytes and op == "dynamic-slice":
+                total.bytes += 2 * _nbytes(out_shape)
+            elif count_bytes and op == "fusion":
+                total.bytes += _nbytes(out_shape)
+                cm = re.search(r"calls=%?([\w\.\-]+)", line)
+                if cm and cm.group(1) in self.comps:
+                    total.bytes += self._fusion_read_bytes(cm.group(1))
+            elif count_bytes and op in (
+                    "dot", "convolution", "copy", "convert",
+                    "broadcast", "reduce", "transpose", "concatenate",
+                    "pad", "slice", "reverse", "scatter", "gather",
+                    "select-n", "add", "multiply", "subtract", "divide",
+                    "maximum", "minimum", "exponential", "tanh", "rsqrt",
+                    "iota", "compare", "select"):
+                total.bytes += _nbytes(out_shape)
+                # operands: look up each named operand's shape
+                for o in re.finditer(r"%([\w\.\-]+)", rest.split(
+                        ", calls=")[0].split(", to_apply=")[0]):
+                    shp = self._symtab(comp).get(o.group(1))
+                    if shp:
+                        total.bytes += _nbytes(shp)
+        return total
+
+    def entry_costs(self) -> Costs:
+        if not self.entry:
+            return Costs()
+        c = Costs()
+        c.add(self.comp_costs(self.entry))
+        c.upcast_f32_bytes = self.upcast_f32_bytes
+        return c
+
+
+def analyze(hlo: str) -> Costs:
+    return HloCostModel(hlo).entry_costs()

@@ -1,0 +1,57 @@
+"""Logical activation-sharding constraints (MaxText-style).
+
+GSPMD propagates shardings from params/inputs, but through long remat'd
+scan chains it can settle on a batch-replicated layout for activations —
+catastrophic at train_4k scale. ``constrain(x, *logical)`` pins the layout
+at key points (residual stream, attention tiles, MoE dispatch) using the
+same divisibility-aware resolution as the param rules.
+
+No-op when no mesh is active (host RL runtimes, smoke tests on 1 device).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding import rules
+
+
+def _active_mesh():
+    try:
+        am = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return None
+    if am is None or not getattr(am, "axis_names", ()):
+        return None
+    return am
+
+
+def _axis_sizes(am):
+    return {a: am.shape[a] for a in am.axis_names}
+
+
+def constrain(x, *logical):
+    """Apply with_sharding_constraint(resolve(logical)) if a mesh is set."""
+    am = _active_mesh()
+    if am is None:
+        return x
+    sizes = _axis_sizes(am)
+    used = set()
+    spec = []
+    for dim, name in zip(x.shape, logical):
+        assigned = None
+        for cand in rules.MESH_MAP.get(name, ((),)):
+            cand = tuple(a for a in cand if a in sizes)
+            if not cand or any(a in used for a in cand):
+                continue
+            total = 1
+            for a in cand:
+                total *= sizes[a]
+            if total > 1 and dim % total == 0 and dim >= total:
+                assigned = cand if len(cand) > 1 else cand[0]
+                used.update(cand)
+                break
+        spec.append(assigned)
+    if not any(s is not None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*spec))

@@ -1,0 +1,279 @@
+"""Logical-axis sharding rules -> PartitionSpecs, divisibility-aware.
+
+Every parameter gets logical dimension names from its leaf name + rank;
+logical names map to candidate mesh axes in priority order. A mesh axis is
+assigned to a dim only if the dim size is divisible by the axis size and
+the axis is not already used in that spec — so e.g. llama4's 40 query
+heads (not divisible by model=16) automatically fall back to sharding
+head_dim, and a batch of 1 (long_500k) falls back to replication.
+
+Mesh layout (launch/mesh.py): single pod (data=16, model=16); multi-pod
+(pod=2, data=16, model=16). ``pod`` composes with ``data`` for batch
+sharding only — parameters/optimizer state are sharded over (data, model)
+within a pod and replicated across pods, so only the gradient all-reduce
+crosses the DCN.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+# logical name -> candidate mesh-axis groups, in priority order.
+MESH_MAP: Dict[str, Tuple[Tuple[str, ...], ...]] = {
+    "batch": (("pod", "data"), ("data",)),
+    "embed": (("data",),),          # FSDP: d_model param dim over data
+    "dsq": (("model",),),           # second d_model dim of square weights
+    "vocab": (("model",),),
+    "heads": (("model",),),
+    "kv_heads": (("model",),),
+    "head_dim": (("model",),),
+    "ffn": (("model",),),
+    "experts": (("model",),),
+    # KV-cache sequence dim: sharded over data axes when the batch dim
+    # couldn't use them (long_500k B=1 would otherwise replicate a
+    # multi-GB cache on every chip)
+    "seq_data": (("pod", "data"), ("data",)),
+    # residual-stream sequence dim: Megatron-style sequence parallelism
+    # over the tensor axis — shards the per-block remat stash 16x, without
+    # which the 80-layer train_4k residuals alone exceed HBM
+    "seq_model": (("model",),),
+    "frames": ((),),
+    None: ((),),
+}
+
+# leaf name (+ rank, after removing a stacked leading dim) -> logical dims
+PARAM_RULES: Dict[Tuple[str, int], Tuple[Optional[str], ...]] = {
+    ("table", 2): ("vocab", "embed"),
+    ("wq", 3): ("embed", "heads", "head_dim"),
+    ("wk", 3): ("embed", "kv_heads", "head_dim"),
+    ("wv", 3): ("embed", "kv_heads", "head_dim"),
+    ("wo", 3): ("heads", "head_dim", "embed"),
+    ("w_in", 2): ("embed", "ffn"),
+    ("w_gate", 2): ("embed", "ffn"),
+    ("w_out", 2): ("ffn", "embed"),
+    ("w_in", 3): ("experts", "embed", "ffn"),       # MoE expert weights
+    ("w_gate", 3): ("experts", "embed", "ffn"),
+    ("w_out", 3): ("experts", "ffn", "embed"),
+    ("router", 2): ("embed", "experts"),
+    ("w_x_branch", 2): ("embed", "dsq"),
+    ("w_gate_branch", 2): ("embed", "dsq"),
+    ("w_a", 2): ("embed", "dsq"),
+    ("w_i", 2): ("embed", "dsq"),
+    ("w_r", 2): ("embed", "dsq"),
+    ("w_k", 2): ("embed", "dsq"),
+    ("w_v", 2): ("embed", "dsq"),
+    ("w_g", 2): ("embed", "dsq"),
+    ("w_o", 2): ("embed", "dsq"),
+    ("w_lora_a", 2): ("embed", None),
+    ("w_lora_b", 2): (None, "dsq"),
+    ("conv_w", 2): (None, "embed"),
+    ("lm_head", 2): ("embed", "vocab"),
+    ("value_head", 2): ("embed", None),
+    ("fc_w", 2): ("embed", "ffn"),
+}
+
+
+def _mesh_axis_sizes(mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def resolve(logical: Tuple[Optional[str], ...], shape: Tuple[int, ...],
+            mesh) -> P:
+    """Greedy divisibility-aware assignment of mesh axes to dims."""
+    sizes = _mesh_axis_sizes(mesh)
+    used: set = set()
+    spec = []
+    for dim, name in zip(shape, logical):
+        assigned = None
+        for cand in MESH_MAP.get(name, ((),)):
+            cand = tuple(a for a in cand if a in sizes)
+            if not cand:
+                continue
+            total = 1
+            for a in cand:
+                total *= sizes[a]
+            if any(a in used for a in cand):
+                continue
+            if dim % total == 0 and dim >= total:
+                assigned = cand if len(cand) > 1 else cand[0]
+                used.update(cand)
+                break
+        spec.append(assigned)
+    # trim trailing Nones for tidiness
+    while spec and spec[-1] is None:
+        spec.pop()
+    return P(*spec)
+
+
+def _leaf_logical(name: str, ndim: int, stacked: bool):
+    base_ndim = ndim - (1 if stacked else 0)
+    rule = PARAM_RULES.get((name, base_ndim))
+    if rule is None:
+        # norms, biases, scalars, per-head vectors: replicate
+        rule = (None,) * base_ndim
+    return ((None,) + rule) if stacked else rule
+
+
+def param_pspecs(abstract_params, mesh) -> Any:
+    """PartitionSpec pytree matching an (abstract) param pytree.
+
+    Params under a 'blocks' subtree are scan-stacked: their leading dim is
+    the block index and stays unsharded.
+    """
+
+    def walk(path, leaf):
+        names = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        stacked = "blocks" in names or (
+            "encoder" in names and "layers" in names)
+        name = names[-1] if names else ""
+        logical = _leaf_logical(name, leaf.ndim, stacked)
+        return resolve(logical, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(walk, abstract_params)
+
+
+def opt_state_pspecs(opt_state_abstract, pspecs, mesh) -> Any:
+    """Optimizer state mirrors params: any subtree whose structure matches
+    the param tree gets the param specs; scalars are replicated."""
+    flat_p, treedef_p = jax.tree_util.tree_flatten(pspecs)
+
+    def match(sub):
+        try:
+            return jax.tree_util.tree_structure(sub) == treedef_p
+        except Exception:
+            return False
+
+    def walk(sub):
+        if isinstance(sub, dict):
+            return {k: (jax.tree.map(lambda _, s: s, v, pspecs)
+                        if match(v) else walk(v))
+                    for k, v in sub.items()}
+        if isinstance(sub, (tuple, list)):
+            t = type(sub)
+            return t(walk(v) for v in sub)
+        return P()
+
+    if match(opt_state_abstract):
+        return pspecs
+    return walk(opt_state_abstract)
+
+
+def dg_state_pspecs(dg_abstract, pspecs, mesh):
+    """Specs for DelayedGradState(params, params_prev, opt_state, step)."""
+    from repro.core.delayed_grad import DelayedGradState
+    return DelayedGradState(
+        params=pspecs,
+        params_prev=pspecs,
+        opt_state=opt_state_pspecs(dg_abstract.opt_state, pspecs, mesh),
+        step=P(),
+    )
+
+
+# ------------------------------------------------------------- activations
+def batch_pspec(mesh, batch_size: int) -> Optional[Any]:
+    """The mesh axes to shard a batch dim over (or None to replicate)."""
+    sizes = _mesh_axis_sizes(mesh)
+    for cand in MESH_MAP["batch"]:
+        cand = tuple(a for a in cand if a in sizes)
+        if not cand:
+            continue
+        total = 1
+        for a in cand:
+            total *= sizes[a]
+        if batch_size % total == 0 and batch_size >= total:
+            return cand if len(cand) > 1 else cand[0]
+    return None
+
+
+def batch_specs(batch_abstract, mesh) -> Any:
+    """Input batch dict: dim 0 is batch (except mrope_positions (3,B,S))."""
+
+    def walk(path, leaf):
+        names = [str(getattr(k, "key", k)) for k in path]
+        name = names[-1] if names else ""
+        if name == "mrope_positions":
+            b = batch_pspec(mesh, leaf.shape[1])
+            return P(None, b, *([None] * (leaf.ndim - 2)))
+        b = batch_pspec(mesh, leaf.shape[0]) if leaf.ndim else None
+        return P(b, *([None] * (leaf.ndim - 1))) if leaf.ndim else P()
+
+    return jax.tree_util.tree_map_with_path(walk, batch_abstract)
+
+
+def _kv_cache_spec(shape, mesh, stacked) -> P:
+    """shape = (B, S, KV, Dh). Assign axes by priority: batch -> data/pod;
+    kv_heads -> model; head_dim -> model; seq -> any remaining axes."""
+    sizes = _mesh_axis_sizes(mesh)
+    B, S, KV, Dh = shape
+    used: set = set()
+    spec = [None, None, None, None]
+    b = batch_pspec(mesh, B)
+    if b is not None:
+        spec[0] = b
+        used.update(b if isinstance(b, tuple) else (b,))
+    if "model" in sizes and "model" not in used:
+        if KV % sizes["model"] == 0:
+            # head-parallel decode attention: zero collectives
+            spec[2] = "model"
+            used.add("model")
+        elif S % sizes["model"] == 0:
+            # seq-sharded cache: decode attention pays only a small
+            # softmax-stats reduction, vs head_dim sharding which
+            # all-reduces the full (B,H,S) score tensor per layer
+            spec[1] = "model"
+            used.add("model")
+        elif Dh % sizes["model"] == 0:
+            spec[3] = "model"
+            used.add("model")
+    # sequence dim: any remaining axes whose product divides S
+    if spec[1] is None:
+        rem = [a for a in sizes if a not in used and S % sizes[a] == 0]
+        if rem:
+            spec[1] = tuple(rem) if len(rem) > 1 else rem[0]
+    elif spec[1] == "model":
+        rem = [a for a in sizes if a not in used and
+               (S // sizes["model"]) % sizes[a] == 0]
+        if rem:
+            spec[1] = tuple(["model"] + rem)
+    while spec and spec[-1] is None:
+        spec.pop()
+    out = P(*spec)
+    return P(None, *out) if stacked else out
+
+
+def cache_pspecs(cache_abstract, cfg, mesh) -> Any:
+    """Decode caches: shard batch over data when divisible; shard the
+    per-head dims over model (kv_heads first, head_dim fallback); RWKV/RGLRU
+    recurrent states shard heads/channels over model."""
+
+    def walk(path, leaf):
+        names = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        stacked = "blocks" in names
+        name = names[-1]
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        if name in ("k", "v"):
+            # priority resolution: batch first, then kv-head/model (cheap
+            # compute layout), then the sequence dim soaks up whatever
+            # axes are left — without this, archs whose kv_heads and
+            # head_dim don't divide the model axis (h2o: kv=8, dh=120)
+            # replicate a multi-GB cache on all 16 model chips.
+            return _kv_cache_spec(shape, mesh, stacked)
+        if name == "state":         # rwkv (B,H,N,N)
+            logical = ("batch", "heads", None, None)
+        elif name == "h":           # rglru (B,D)
+            logical = ("batch", "dsq")
+        elif name == "conv":        # (B,W-1,D)
+            logical = ("batch", None, "dsq")
+        elif name == "xprev":       # (B,1,D)
+            logical = ("batch", None, "dsq")
+        else:
+            logical = ("batch",) + (None,) * (len(shape) - 1)
+        spec = resolve(logical, shape, mesh)
+        if stacked:
+            spec = P(None, *spec)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(walk, cache_abstract)

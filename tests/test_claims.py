@@ -1,0 +1,49 @@
+"""Paper Claims 1 & 2: analytic models vs discrete-event simulation."""
+import numpy as np
+import pytest
+
+from repro.core import runtime_model, stale_sim
+
+
+def test_claim1_analytic_matches_simulation():
+    """Fig. 3(a,b): Eq. (7) tracks the simulated makespan within ~5%."""
+    K = 64000
+    for n, alpha, beta in [(16, 4, 2.0), (16, 16, 2.0), (8, 4, 1.0),
+                           (16, 4, 0.5)]:
+        pred = runtime_model.expected_runtime(K, n, alpha, beta)
+        sims = [runtime_model.simulate_runtime(K, n, alpha, beta, seed=s)
+                for s in range(3)]
+        sim = float(np.mean(sims))
+        assert abs(pred - sim) / sim < 0.08, (n, alpha, beta, pred, sim)
+
+
+def test_claim1_monotonicity():
+    """Runtime decreases with alpha, increases with variance (1/beta^2)."""
+    K = 32000
+    ts = [runtime_model.expected_runtime(K, 16, a, 2.0)
+          for a in (1, 4, 16, 64)]
+    assert all(x > y for x, y in zip(ts, ts[1:]))
+    # per-step variance at fixed mean 1: Gamma(k, rate=k), var = 1/k
+    tv = [runtime_model.expected_runtime(K, 16, 4, beta=k, step_shape=k)
+          for k in (16.0, 4.0, 1.0, 0.25)]   # increasing variance
+    assert all(x < y for x, y in zip(tv, tv[1:]))
+
+
+def test_claim2_mm1_latency():
+    """E[L] = n rho / (1 - n rho) matches the event-driven queue sim."""
+    lam0, mu = 100.0, 4000.0
+    for n in (4, 8, 16, 32):
+        pred = stale_sim.expected_latency(n, lam0, mu)
+        sim = stale_sim.simulate_latency(n, lam0, mu, horizon=3000.0)
+        assert abs(pred - sim) < max(0.3, 0.25 * pred), (n, pred, sim)
+
+
+def test_claim2_hts_latency_constant():
+    for n in (1, 4, 16, 64):
+        assert stale_sim.hts_latency(n) == 1
+
+
+def test_gamma_fit():
+    rng = np.random.default_rng(0)
+    samples = rng.gamma(4.0, 0.5, size=2000)
+    assert runtime_model.gamma_fit_pvalue(samples) > 0.05

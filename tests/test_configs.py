@@ -1,0 +1,56 @@
+"""Config registry + reduced-variant constraints."""
+import pytest
+
+from repro.configs.base import get_config, list_configs
+
+ASSIGNED = [
+    "llama4-scout-17b-a16e", "recurrentgemma-9b", "h2o-danube-3-4b",
+    "granite-moe-1b-a400m", "rwkv6-7b", "whisper-medium", "qwen2-vl-72b",
+    "starcoder2-3b", "stablelm-12b", "gemma2-27b",
+]
+
+
+def test_all_assigned_registered():
+    assert set(ASSIGNED) <= set(list_configs())
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_exact_assignment_numbers(name):
+    cfg = get_config(name)
+    expected = {
+        "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+        "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+        "h2o-danube-3-4b": (24, 3840, 32, 8, 10240, 32000),
+        "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+        "rwkv6-7b": (32, 4096, 64, 64, 14336, 65536),
+        "whisper-medium": (24, 1024, 16, 16, 4096, 51865),
+        "qwen2-vl-72b": (80, 8192, 64, 8, 29568, 152064),
+        "starcoder2-3b": (30, 3072, 24, 2, 12288, 49152),
+        "stablelm-12b": (40, 5120, 32, 8, 13824, 100352),
+        "gemma2-27b": (46, 4608, 32, 16, 36864, 256000),
+    }[name]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expected
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_reduced_constraints(name):
+    r = get_config(name).reduced()
+    assert r.n_layers <= 4 and r.d_model <= 512
+    assert (r.n_experts or 0) <= 4
+    assert r.layer_kinds  # tiles cleanly
+
+
+def test_moe_configs():
+    l4 = get_config("llama4-scout-17b-a16e")
+    assert l4.n_experts == 16 and l4.top_k == 1 and l4.shared_expert
+    gr = get_config("granite-moe-1b-a400m")
+    assert gr.n_experts == 32 and gr.top_k == 8
+
+
+def test_long_context_support_flags():
+    sub_quadratic = {"recurrentgemma-9b", "rwkv6-7b", "h2o-danube-3-4b",
+                     "gemma2-27b"}
+    for name in ASSIGNED:
+        assert get_config(name).sub_quadratic == (name in sub_quadratic)

@@ -1,0 +1,148 @@
+"""HTS-RL core invariants: delayed gradient, buffers, losses, V-trace."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import delayed_grad, losses, vtrace
+from repro.core.buffers import DoubleBuffer, HostStorage
+from repro.optim import sgd, rmsprop, adam, apply_updates
+
+
+def test_delayed_gradient_update_rule():
+    """theta_{j+1} = theta_j - eta * g(theta_{j-1}) exactly (SGD)."""
+    opt = sgd(0.1)
+    params = {"w": jnp.array([1.0, 2.0])}
+    dg = delayed_grad.init(params, opt)
+    g1 = {"w": jnp.array([1.0, 1.0])}
+    dg = delayed_grad.update(dg, g1, opt)
+    assert jnp.allclose(dg.params["w"], jnp.array([0.9, 1.9]))
+    assert jnp.allclose(dg.params_prev["w"], jnp.array([1.0, 2.0]))
+    g2 = {"w": jnp.array([0.5, 0.5])}
+    dg = delayed_grad.update(dg, g2, opt)
+    assert jnp.allclose(dg.params["w"], jnp.array([0.85, 1.85]))
+    # structural lag is exactly one update
+    assert jnp.allclose(dg.params_prev["w"], jnp.array([0.9, 1.9]))
+    assert delayed_grad.behavior_lag(dg) == 1
+
+
+def test_delayed_gradient_skip():
+    opt = rmsprop(0.1)
+    params = {"w": jnp.ones(3)}
+    dg = delayed_grad.init(params, opt)
+    dg2 = delayed_grad.update(dg, {"w": jnp.ones(3)}, opt,
+                              skip=jnp.bool_(True))
+    assert jnp.allclose(dg2.params["w"], params["w"])
+    assert jnp.allclose(dg2.opt_state["sq"]["w"],
+                        jnp.zeros(3))
+    assert int(dg2.step) == 1
+
+
+def test_double_buffer_swap_discipline():
+    spec = {"x": ((2,), np.float32)}
+    db = DoubleBuffer(4, spec)
+    w0 = db.write_storage
+    for i in range(4):
+        db.write(x=np.full(2, i, np.float32))
+    assert db.write_storage.full
+    assert db.write_storage is w0
+    db.swap()
+    # roles flipped; new write storage is the (reset) other one
+    assert db.write_storage is not w0
+    assert not db.write_storage.full
+    assert db.read_storage is w0
+    np.testing.assert_array_equal(db.read_storage.data["x"][3],
+                                  [3.0, 3.0])
+    assert db.generation == 1
+
+
+def test_n_step_returns_manual():
+    r = jnp.array([[1.0], [0.0], [2.0]])
+    d = jnp.zeros((3, 1))
+    bv = jnp.array([10.0])
+    rets = losses.n_step_returns(r, d, bv, gamma=0.5)
+    # R2 = 2 + .5*10 = 7; R1 = 0 + .5*7 = 3.5; R0 = 1 + .5*3.5 = 2.75
+    np.testing.assert_allclose(np.asarray(rets[:, 0]), [2.75, 3.5, 7.0])
+
+
+def test_n_step_returns_done_cuts_bootstrap():
+    r = jnp.array([[1.0], [1.0]])
+    d = jnp.array([[0.0], [1.0]])
+    rets = losses.n_step_returns(r, d, jnp.array([100.0]), gamma=0.9)
+    np.testing.assert_allclose(np.asarray(rets[:, 0]), [1.9, 1.0])
+
+
+def test_gae_reduces_to_nstep_when_lambda_1():
+    key = jax.random.key(0)
+    r = jax.random.normal(key, (5, 3))
+    d = jnp.zeros((5, 3))
+    v = jax.random.normal(jax.random.key(1), (5, 3))
+    bv = jax.random.normal(jax.random.key(2), (3,))
+    adv, rets = losses.gae(r, d, v, bv, gamma=0.9, lam=1.0)
+    rets2 = losses.n_step_returns(r, d, bv, gamma=0.9)
+    np.testing.assert_allclose(np.asarray(rets), np.asarray(rets2),
+                               atol=1e-5)
+
+
+def test_vtrace_on_policy_equals_nstep_targets():
+    """With behavior == target, V-trace vs = n-step returns (rho=c=1)."""
+    T, B = 6, 2
+    key = jax.random.key(3)
+    lp = jax.random.normal(key, (T, B)) * 0.1
+    r = jax.random.normal(jax.random.key(4), (T, B))
+    d = jnp.zeros((T, B))
+    v = jnp.zeros((T, B))
+    bv = jnp.zeros((B,))
+    out = vtrace.vtrace(lp, lp, r, d, v, bv, gamma=0.9)
+    rets = losses.n_step_returns(r, d, bv, gamma=0.9)
+    np.testing.assert_allclose(np.asarray(out.vs), np.asarray(rets),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_a2c_loss_zero_advantage_no_pg():
+    logits = jax.random.normal(jax.random.key(5), (4, 8))
+    values = jnp.zeros(4)
+    actions = jnp.zeros(4, jnp.int32)
+    st = losses.a2c_loss(logits, values, actions, jnp.zeros(4),
+                         jnp.zeros(4))
+    assert abs(float(st.pg)) < 1e-6
+
+
+def test_optimizers_descend_quadratic():
+    for opt in (sgd(0.1), rmsprop(0.05), adam(0.1)):
+        p = {"w": jnp.array([3.0])}
+        state = opt.init(p)
+        for _ in range(60):
+            g = {"w": 2 * p["w"]}
+            upd, state = opt.update(g, state, p)
+            p = apply_updates(p, upd)
+        assert abs(float(p["w"][0])) < 0.5
+
+
+def test_schedules():
+    from repro.optim import schedules, sgd, apply_updates
+    ws = schedules.warmup_cosine(1.0, warmup_steps=10, total_steps=100)
+    assert float(ws(0)) == 0.0
+    assert abs(float(ws(10)) - 1.0) < 1e-6
+    assert float(ws(100)) < float(ws(50)) < float(ws(10))
+    assert abs(float(ws(100)) - 0.1) < 1e-6     # floor_ratio
+
+    opt = schedules.scheduled(lambda lr: sgd(lr),
+                              schedules.linear_decay(0.1, 10))
+    p = {"w": jnp.array([1.0])}
+    st = opt.init(p)
+    upd, st = opt.update({"w": jnp.array([1.0])}, st, p)
+    assert abs(float(upd["w"][0]) + 0.1) < 1e-6  # full lr at step 0
+    assert int(st["step"]) == 1
+
+
+def test_pg_dot_grads_match_einsum():
+    from repro.models.layers import pg_dot
+    x = jax.random.normal(jax.random.key(0), (4, 8)).astype(jnp.bfloat16)
+    w = jax.random.normal(jax.random.key(1), (8, 16)).astype(jnp.bfloat16)
+    g0 = jax.grad(lambda w: pg_dot(x, w, enable=False).astype(
+        jnp.float32).sum())(w)
+    g1 = jax.grad(lambda w: pg_dot(x, w, enable=True).astype(
+        jnp.float32).sum())(w)
+    np.testing.assert_array_equal(np.asarray(g0, np.float32),
+                                  np.asarray(g1, np.float32))

@@ -1,0 +1,86 @@
+"""Environment contract tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.envs import catch, football, gridmaze, token_env
+from repro.envs.interfaces import vectorize
+
+ENVS = {
+    "catch": catch.make,
+    "gridmaze": gridmaze.make,
+    "football": football.make,
+    "token": token_env.make,
+}
+
+
+@pytest.mark.parametrize("name", list(ENVS))
+def test_env_contract(name):
+    env = ENVS[name]()
+    key = jax.random.key(0)
+    state, obs = env.reset(key)
+    assert obs.shape == env.obs_shape
+    total_done = 0
+    for t in range(150):
+        a = jnp.int32(t % env.n_actions)
+        state, obs, r, d = env.step(state, a, jax.random.fold_in(key, t))
+        assert obs.shape == env.obs_shape
+        assert jnp.isfinite(r)
+        total_done += int(d)
+    assert total_done >= 1, "episode should terminate within 150 steps"
+
+
+@pytest.mark.parametrize("name", list(ENVS))
+def test_env_determinism(name):
+    env = ENVS[name]()
+    key = jax.random.key(1)
+
+    def run():
+        state, obs = env.reset(key)
+        out = []
+        for t in range(40):
+            a = jnp.int32((t * 7) % env.n_actions)
+            state, obs, r, d = env.step(state, a,
+                                        jax.random.fold_in(key, t))
+            out.append((float(r), float(d)))
+        return out
+
+    assert run() == run()
+
+
+def test_vectorize():
+    env = vectorize(catch.make(), 3)
+    keys = jax.random.split(jax.random.key(0), 3)
+    state, obs = env.reset(keys)
+    assert obs.shape == (3,) + catch.make().obs_shape
+    a = jnp.zeros(3, jnp.int32)
+    state, obs, r, d = env.step(state, a, keys)
+    assert r.shape == (3,)
+
+
+def test_autoreset():
+    env = catch.make()
+    key = jax.random.key(2)
+    state, obs = env.reset(key)
+    for t in range(9):   # catch terminates after ROWS-1 = 9 steps
+        state, obs, r, d = env.step(state, jnp.int32(1),
+                                    jax.random.fold_in(key, t))
+    assert d == 1.0
+    # obs must already be a fresh episode (ball back at row 0)
+    assert float(obs[0].sum()) > 0     # ball visible in top row
+
+
+def test_multiplayer_football_contract():
+    env = football.make_multi(2)
+    assert env.n_actions == 81
+    key = jax.random.key(0)
+    state, obs = env.reset(key)
+    assert obs.shape == env.obs_shape
+    done_seen = False
+    for t in range(120):
+        a = jnp.int32((t * 13) % env.n_actions)
+        state, obs, r, d = env.step(state, a, jax.random.fold_in(key, t))
+        assert jnp.isfinite(r) and obs.shape == env.obs_shape
+        done_seen = done_seen or bool(d)
+    assert done_seen

@@ -1,0 +1,53 @@
+"""Paper Sec. 5 evaluation protocol module."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import evaluate
+from repro.envs import catch
+
+
+def test_episode_returns_from_stream():
+    r = np.array([[1.0, 0.5], [2.0, 0.5], [3.0, 0.5]])
+    d = np.array([[0, 1], [1, 0], [0, 1]])
+    eps = evaluate.episode_returns_from_stream(r, d)
+    np.testing.assert_allclose(eps, [0.5, 3.0, 1.0])
+
+
+def test_final_time_metric_truncates():
+    r = np.array([[1.0], [0.0], [100.0]])
+    d = np.array([[1], [1], [1]])
+    times = [1.0, 1.0, 1.0]
+    # budget 2.0 -> only first two episodes counted
+    assert evaluate.final_time_metric(r, d, times, 2.0) == 0.5
+    assert evaluate.final_time_metric(r, d, times, 10.0) > 30
+
+
+def test_required_time_metric():
+    r = np.array([[0.0], [0.0], [1.0], [1.0]])
+    d = np.ones((4, 1))
+    t = evaluate.required_time_metric(r, d, [1.0] * 4, target=0.5,
+                                      window=2)
+    assert t == 3.0
+    assert evaluate.required_time_metric(r, d, [1.0] * 4, target=2.0) \
+        == float("inf")
+
+
+def test_bootstrap_ci_contains_mean():
+    x = np.random.default_rng(0).normal(3.0, 1.0, size=200)
+    mean, lo, hi = evaluate.bootstrap_ci(x, n_boot=2000)
+    assert lo < mean < hi
+    assert lo < 3.0 < hi
+
+
+def test_evaluate_policy_runs():
+    env = catch.make()
+
+    def policy(params, obs):
+        B = obs.shape[0]
+        return jnp.zeros((B, env.n_actions)), jnp.zeros(B)
+
+    rets = evaluate.evaluate_policy(policy, None, env, n_episodes=3,
+                                    max_steps=20, noop_max=2)
+    assert rets.shape == (3,)
+    assert np.isfinite(rets).all()

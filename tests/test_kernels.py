@@ -1,0 +1,111 @@
+"""Pallas kernels (interpret=True) vs pure-jnp oracles: shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import attend
+from repro.kernels.lru_scan.ops import scan as lru_op
+from repro.kernels.wkv6.ops import mix as wkv_op
+from repro.models.rwkv6 import wkv6_ref
+
+FLASH_CASES = [
+    # (B, S, H, KV, Dh, causal, window, cap, bq, bk, dtype)
+    (1, 64, 2, 2, 32, True, 0, 0.0, 32, 32, jnp.float32),
+    (2, 128, 4, 2, 64, True, 0, 0.0, 64, 64, jnp.float32),
+    (1, 128, 4, 1, 32, True, 64, 0.0, 32, 64, jnp.float32),
+    (2, 64, 2, 2, 16, False, 0, 0.0, 32, 32, jnp.float32),
+    (1, 96, 4, 4, 32, True, 0, 50.0, 32, 32, jnp.float32),
+    (2, 128, 4, 2, 64, True, 0, 0.0, 64, 64, jnp.bfloat16),
+    (1, 80, 2, 1, 16, True, 32, 0.0, 16, 16, jnp.bfloat16),  # padded
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+def test_flash_attention_sweep(case):
+    B, S, H, KV, Dh, causal, window, cap, bq, bk, dt = case
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, Dh)).astype(dt)
+    k = jax.random.normal(ks[1], (B, S, KV, Dh)).astype(dt)
+    v = jax.random.normal(ks[2], (B, S, KV, Dh)).astype(dt)
+    o1 = attend(q, k, v, causal=causal, window=window, cap=cap,
+                bq=bq, bk=bk, use_pallas=True)
+    o2 = attend(q, k, v, causal=causal, window=window, cap=cap,
+                use_pallas=False)
+    tol = 1e-5 if dt == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32),
+                               atol=tol, rtol=tol)
+
+
+LRU_CASES = [
+    (1, 32, 16, 16, 16, jnp.float32),
+    (2, 64, 32, 16, 32, jnp.float32),
+    (2, 128, 64, 32, 64, jnp.float32),
+    (1, 64, 48, 32, 16, jnp.float32),
+    (2, 64, 32, 16, 32, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", LRU_CASES)
+def test_lru_scan_sweep(case):
+    B, S, D, chunk, bd, dt = case
+    ks = jax.random.split(jax.random.key(1), 3)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (B, S, D))).astype(dt)
+    b = jax.random.normal(ks[1], (B, S, D)).astype(dt)
+    h0 = jax.random.normal(ks[2], (B, D))
+    y1, hl1 = lru_op(a, b, h0, use_pallas=True, chunk=chunk, bd=bd)
+    y2, hl2 = lru_op(a, b, h0, use_pallas=False)
+    tol = 1e-5 if dt == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y2, np.float32),
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(hl1), np.asarray(hl2),
+                               atol=tol, rtol=tol)
+
+
+WKV_CASES = [
+    (1, 16, 1, 8, 8, jnp.float32),
+    (2, 32, 2, 8, 16, jnp.float32),
+    (2, 64, 4, 16, 32, jnp.float32),
+    (1, 32, 2, 16, 32, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", WKV_CASES)
+def test_wkv6_sweep(case):
+    B, T, H, N, chunk, dt = case
+    ks = jax.random.split(jax.random.key(2), 6)
+    r, k, v = (jax.random.normal(ks[i], (B, T, H, N)).astype(dt)
+               for i in range(3))
+    w = (jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, N))) * 0.5
+         + 0.49).astype(jnp.float32)
+    u = jax.random.normal(ks[4], (H, N)) * 0.1
+    s0 = jax.random.normal(ks[5], (B, H, N, N)) * 0.1
+    o1, s1 = wkv_op(r, k, v, w, u, s0, use_pallas=True, chunk=chunk)
+    o2, s2 = wkv6_ref(r, k, v, w, u, s0)
+    tol = 1e-5 if dt == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32),
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               atol=tol, rtol=tol)
+
+
+def test_pallas_attention_in_model_path():
+    """use_pallas_attention=True swaps the kernel into the backbone
+    forward; outputs must match the jnp flash path (bf16 tolerance)."""
+    import dataclasses
+    from repro.configs.base import get_config
+    from repro.models import backbone
+    cfg0 = get_config("gemma2-27b").reduced()
+    cfg1 = dataclasses.replace(cfg0, use_pallas_attention=True)
+    params = backbone.init_params(cfg0, jax.random.key(0))
+    tokens = jax.random.randint(jax.random.key(1), (2, 16), 0,
+                                cfg0.vocab_size)
+    h0, _, _ = backbone.forward(params, cfg0, tokens)
+    h1, _, _ = backbone.forward(params, cfg1, tokens)
+    scale = float(jnp.max(jnp.abs(h0.astype(jnp.float32)))) + 1e-9
+    err = float(jnp.max(jnp.abs(h0.astype(jnp.float32) -
+                                h1.astype(jnp.float32))))
+    assert err / scale < 0.05

@@ -1,0 +1,37 @@
+"""CLI launcher smoke tests (subprocess, reduced configs)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = {**os.environ, "PYTHONPATH": os.path.join(ROOT, "src")}
+
+
+def _run(args, timeout=280):
+    return subprocess.run([sys.executable, "-m", *args], env=ENV,
+                          cwd=ROOT, capture_output=True, text=True,
+                          timeout=timeout)
+
+
+def test_train_cli():
+    r = _run(["repro.launch.train", "--arch", "starcoder2-3b", "--reduced",
+              "--steps", "3", "--batch", "2", "--seq", "16"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "loss=" in r.stdout
+
+
+def test_serve_cli():
+    r = _run(["repro.launch.serve", "--arch", "rwkv6-7b", "--reduced",
+              "--batch", "2", "--prompt-len", "8", "--gen", "4"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "decode" in r.stdout
+
+
+def test_dryrun_cli_single():
+    r = _run(["repro.launch.dryrun", "--arch", "rwkv6-7b", "--shape",
+              "decode_32k", "--mesh", "pod", "--out",
+              "/tmp/dryrun_test", "--tag", "citest"], timeout=400)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "[OK]" in r.stdout

@@ -1,0 +1,146 @@
+"""Per-architecture smoke tests (reduced variants): forward + one train
+step on CPU, output shapes, no NaNs; incremental decode == full forward."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import get_config, list_configs
+from repro.core import delayed_grad, learner
+from repro.models import backbone
+from repro.optim import adam
+
+ARCHS = list(list_configs())
+
+
+def _inputs(cfg, B, S, key):
+    kw = {}
+    if cfg.is_encoder_decoder:
+        kw["audio_embeds"] = jax.random.normal(
+            jax.random.fold_in(key, 1), (B, cfg.enc_seq, cfg.d_model)
+        ).astype(jnp.bfloat16) * 0.1
+    if cfg.vision_prefix:
+        kw["patch_embeds"] = jax.random.normal(
+            jax.random.fold_in(key, 2), (B, cfg.vision_prefix, cfg.d_model)
+        ).astype(jnp.bfloat16) * 0.1
+    if cfg.mrope:
+        kw["mrope_positions"] = jnp.broadcast_to(jnp.arange(S), (3, B, S))
+    return kw
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_forward_and_train_step(name):
+    cfg = get_config(name).reduced()
+    params = backbone.init_params(cfg, jax.random.key(0))
+    B, S = 2, 16
+    key = jax.random.key(1)
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    kw = _inputs(cfg, B, S, key)
+    hidden, _, aux = backbone.forward(params, cfg, tokens, **kw)
+    assert hidden.shape == (B, S, cfg.d_model)
+    logits, value = backbone.logits_and_value(params, cfg, hidden)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert value.shape == (B, S)
+    assert not bool(jnp.isnan(logits).any())
+
+    opt = adam(1e-4)
+    dg = delayed_grad.init(params, opt)
+    step = learner.make_train_step(cfg, opt)
+    batch = {
+        "tokens": tokens,
+        "actions": jax.random.randint(jax.random.key(2), (B, S), 0,
+                                      cfg.vocab_size),
+        "advantages": jnp.ones((B, S)),
+        "returns": jnp.ones((B, S)),
+        "behavior_logprob": -jnp.ones((B, S)),
+        "loss_mask": jnp.ones((B, S)),
+    }
+    if cfg.mrope:
+        batch["mrope_positions"] = kw["mrope_positions"]
+    if cfg.vision_prefix:
+        batch["patch_embeds"] = kw["patch_embeds"]
+    if cfg.is_encoder_decoder:
+        batch["audio_embeds"] = kw["audio_embeds"]
+    dg2, stats = jax.jit(step)(dg, batch)
+    assert not bool(jnp.isnan(stats["loss"]))
+    # params actually moved and behavior snapshot advanced
+    moved = any(
+        bool(jnp.any(a != b))
+        for a, b in zip(jax.tree.leaves(dg2.params),
+                        jax.tree.leaves(dg.params)))
+    assert moved
+    assert int(dg2.step) == 1
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_decode_consistency(name):
+    cfg = get_config(name).reduced()
+    params = backbone.init_params(cfg, jax.random.key(0))
+    B, S = 2, 12
+    key = jax.random.key(3)
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    kw = _inputs(cfg, B, S, key)
+    h, _, _ = backbone.forward(params, cfg, tokens, **kw)
+    lf, _ = backbone.logits_and_value(params, cfg, h)
+    kwp = dict(kw)
+    if cfg.mrope:
+        kwp["mrope_positions"] = kw["mrope_positions"][:, :, :S - 1]
+    _, _, cache = backbone.prefill(params, cfg, tokens[:, :S - 1],
+                                   max_len=S, **kwp)
+    dkw = {}
+    if cfg.mrope:
+        dkw["mrope_positions"] = jnp.full((3, B, 1), S - 1)
+    if cfg.is_encoder_decoder:
+        dkw["audio_embeds"] = kw["audio_embeds"]
+    ld, _, _ = backbone.decode_step(params, cfg, tokens[:, S - 1:], cache,
+                                    jnp.int32(S - 1), **dkw)
+    err = float(jnp.max(jnp.abs(lf[:, -1] - ld)))
+    scale = float(jnp.max(jnp.abs(lf[:, -1]))) + 1e-9
+    assert err / scale < 0.05, f"{name}: rel err {err / scale}"
+
+
+def test_chunked_loss_matches_full():
+    cfg = get_config("starcoder2-3b").reduced()
+    params = backbone.init_params(cfg, jax.random.key(0))
+    B, S = 2, 16
+    batch = {
+        "tokens": jax.random.randint(jax.random.key(1), (B, S), 0,
+                                     cfg.vocab_size),
+        "actions": jax.random.randint(jax.random.key(2), (B, S), 0,
+                                      cfg.vocab_size),
+        "advantages": jax.random.normal(jax.random.key(3), (B, S)),
+        "returns": jax.random.normal(jax.random.key(4), (B, S)),
+        "behavior_logprob": -jnp.ones((B, S)),
+        "loss_mask": jnp.ones((B, S)),
+    }
+    from repro.core.losses import a2c_loss
+    total_chunked, st = learner.rl_loss(params, cfg, batch, loss_chunk=4)
+    logits, values, aux = learner.policy_outputs(params, cfg, batch)
+    st_full = a2c_loss(logits, values, batch["actions"],
+                       batch["advantages"], batch["returns"],
+                       mask=batch["loss_mask"])
+    assert abs(float(st.total - st_full.total)) < 2e-2
+
+
+def test_remainder_layers_path():
+    """Layer counts not divisible by the mixer cycle (recurrentgemma's
+    38 = 12*3 + 2) run the unrolled remainder path; verify with a toy
+    4-layer cycle-3 config, including decode-cache handling."""
+    import dataclasses
+    cfg = dataclasses.replace(get_config("recurrentgemma-9b").reduced(),
+                              n_layers=4)
+    assert cfg.n_layers % cfg.cycle_len == 1
+    params = backbone.init_params(cfg, jax.random.key(0))
+    assert "rem" in params and len(params["rem"]) == 1
+    B, S = 2, 12
+    tokens = jax.random.randint(jax.random.key(1), (B, S), 0,
+                                cfg.vocab_size)
+    h, _, _ = backbone.forward(params, cfg, tokens)
+    lf, _ = backbone.logits_and_value(params, cfg, h)
+    _, _, cache = backbone.prefill(params, cfg, tokens[:, :S - 1],
+                                   max_len=S)
+    assert "rem" in cache
+    ld, _, _ = backbone.decode_step(params, cfg, tokens[:, S - 1:], cache,
+                                    jnp.int32(S - 1))
+    err = float(jnp.max(jnp.abs(lf[:, -1] - ld)))
+    scale = float(jnp.max(jnp.abs(lf[:, -1]))) + 1e-9
+    assert err / scale < 0.05

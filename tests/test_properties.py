@@ -1,0 +1,166 @@
+"""Hypothesis property-based tests on system invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import determinism, losses
+from repro.core.runtime_model import expected_runtime
+from repro.core.stale_sim import expected_latency
+from repro.kernels.lru_scan.ref import lru_scan_ref
+
+SET = dict(max_examples=25, deadline=None)
+
+
+@given(st.integers(0, 2**30), st.integers(0, 1000), st.integers(0, 1000))
+@settings(**SET)
+def test_obs_key_order_independence(seed, env_id, step):
+    """Determinism core: the key depends only on (seed, env, step), never
+    on actor batching/order -> same key computed twice is identical."""
+    m = determinism.master_key(seed)
+    k1 = determinism.obs_key(m, env_id, step)
+    k2 = determinism.obs_key(m, env_id, step)
+    assert jnp.array_equal(jax.random.key_data(k1),
+                           jax.random.key_data(k2))
+    if env_id != step:
+        k3 = determinism.obs_key(m, step, env_id)
+        assert not jnp.array_equal(jax.random.key_data(k1),
+                                   jax.random.key_data(k3))
+
+
+@given(st.lists(st.floats(-5, 5), min_size=2, max_size=12),
+       st.floats(0.1, 0.99))
+@settings(**SET)
+def test_returns_satisfy_bellman_recursion(rs, gamma):
+    r = jnp.array(rs)[:, None]
+    d = jnp.zeros_like(r)
+    bv = jnp.array([1.5])
+    rets = losses.n_step_returns(r, d, bv, gamma)
+    nxt = jnp.concatenate([rets[1:, 0], bv])
+    np.testing.assert_allclose(np.asarray(rets[:, 0]),
+                               np.asarray(r[:, 0] + gamma * nxt),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(8, 64), st.integers(1, 32), st.floats(0.5, 4.0))
+@settings(**SET)
+def test_runtime_model_alpha_monotone(n, alpha, beta):
+    """More batching never (materially) increases the expected runtime
+    (Claim 1). Eq. (7) is an extreme-value *approximation*, so allow a
+    few percent slack — the exact system is monotone, the approximation
+    is only asymptotically so."""
+    K = n * alpha * 8
+    t1 = expected_runtime(K, n, alpha, beta)
+    t2 = expected_runtime(K, n, alpha * 2, beta)
+    assert t2 <= t1 * 1.05
+
+
+@given(st.integers(1, 30))
+@settings(**SET)
+def test_latency_monotone_in_actors(n):
+    """Claim 2: stale-policy latency grows with actor count; HTS stays 1."""
+    l1 = expected_latency(n, 100.0, 4000.0)
+    l2 = expected_latency(n + 1, 100.0, 4000.0)
+    assert l2 >= l1
+    from repro.core.stale_sim import hts_latency
+    assert hts_latency(n) == 1
+
+
+@given(st.integers(1, 4), st.integers(2, 24), st.integers(1, 16),
+       st.integers(0, 2**20))
+@settings(**SET)
+def test_lru_scan_linearity(b, s, d, seed):
+    """h(a, b1 + b2) = h(a, b1) + h(a, b2): the recurrence is linear in
+    its input stream (core RG-LRU invariant)."""
+    ks = jax.random.split(jax.random.key(seed), 3)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (b, s, d)))
+    b1 = jax.random.normal(ks[1], (b, s, d))
+    b2 = jax.random.normal(ks[2], (b, s, d))
+    y12, _ = lru_scan_ref(a, b1 + b2)
+    y1, _ = lru_scan_ref(a, b1)
+    y2, _ = lru_scan_ref(a, b2)
+    np.testing.assert_allclose(np.asarray(y12), np.asarray(y1 + y2),
+                               atol=1e-4, rtol=1e-3)
+
+
+@given(st.integers(0, 2**20))
+@settings(max_examples=10, deadline=None)
+def test_entropy_nonnegative_and_bounded(seed):
+    logits = jax.random.normal(jax.random.key(seed), (4, 16)) * 3
+    st_ = losses.a2c_loss(logits, jnp.zeros(4),
+                          jnp.zeros(4, jnp.int32), jnp.zeros(4),
+                          jnp.zeros(4))
+    assert 0.0 <= float(st_.entropy) <= float(jnp.log(16)) + 1e-5
+
+
+@given(st.integers(1, 6), st.integers(1, 10), st.integers(0, 2**20))
+@settings(**SET)
+def test_moe_capacity_never_nan(e_pow, g, seed):
+    """MoE output finite for random routers/capacities."""
+    import dataclasses
+    from repro.configs.base import get_config
+    from repro.models import moe
+    cfg = dataclasses.replace(
+        get_config("granite-moe-1b-a400m").reduced(),
+        moe_group_size=4 * g)
+    params = moe.init_moe(jax.random.key(seed), cfg)
+    x = jax.random.normal(jax.random.key(seed + 1),
+                          (2, 8, cfg.d_model)).astype(jnp.bfloat16)
+    y, aux = moe.apply_moe(params, x, cfg)
+    assert bool(jnp.isfinite(y.astype(jnp.float32)).all())
+    assert bool(jnp.isfinite(aux))
+
+
+@given(st.integers(0, 2**20), st.permutations(list(range(6))))
+@settings(**SET)
+def test_actor_batch_order_independence(seed, perm):
+    """The asynchronous-actor determinism mechanism: actions depend only
+    on (key_i, obs_i), so ANY batching/order gives identical per-env
+    actions."""
+    m = determinism.master_key(seed)
+    keys = determinism.obs_keys(m, jnp.arange(6), 3)
+    logits = jax.random.normal(jax.random.key(seed ^ 1), (6, 5))
+    a1 = jax.vmap(determinism.sample_action)(keys, logits)
+    p = jnp.array(perm)
+    a2 = jax.vmap(determinism.sample_action)(keys[p], logits[p])
+    assert jnp.array_equal(a1[p], a2)
+
+
+@given(st.integers(1, 2), st.integers(1, 3), st.integers(1, 2),
+       st.integers(2, 5), st.booleans(), st.integers(0, 40),
+       st.integers(0, 2**20))
+@settings(max_examples=12, deadline=None)
+def test_flash_attention_random_shapes(b, g, r, dh8, causal, window, seed):
+    """Flash fwd+bwd equals naive attention for random shapes / masks."""
+    from repro.models.attention import blocked_attention
+    S = 48
+    H, KV, Dh = g * r, g, dh8 * 8
+    ks = jax.random.split(jax.random.key(seed), 3)
+    q = jax.random.normal(ks[0], (b, S, H, Dh))
+    k = jax.random.normal(ks[1], (b, S, KV, Dh))
+    v = jax.random.normal(ks[2], (b, S, KV, Dh))
+
+    def naive(q, k, v):
+        kr = jnp.repeat(k, r, axis=2)
+        vr = jnp.repeat(v, r, axis=2)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kr) * Dh ** -0.5
+        qp = jnp.arange(S)
+        mask = jnp.ones((S, S), bool)
+        if causal:
+            mask &= qp[None] <= qp[:, None]
+        if window:
+            mask &= qp[None] > qp[:, None] - window
+        s = jnp.where(mask[None, None], s, -1e30)
+        p = jax.nn.softmax(s, -1)
+        # fully-masked rows (window=tiny non-causal): normalize like flash
+        return jnp.einsum("bhqk,bkhd->bqhd", p, vr)
+
+    o1 = blocked_attention(q, k, v, causal=causal, window=window,
+                           q_block=16, k_block=16)
+    o2 = naive(q, k, v)
+    assert float(jnp.max(jnp.abs(o1 - o2))) < 1e-3
+    g1 = jax.grad(lambda a: blocked_attention(
+        a, k, v, causal=causal, window=window, q_block=16,
+        k_block=16).sum())(q)
+    g2 = jax.grad(lambda a: naive(a, k, v).sum())(q)
+    assert float(jnp.max(jnp.abs(g1 - g2))) < 1e-3

@@ -1,0 +1,64 @@
+"""Divisibility-aware sharding rules."""
+import types
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding import rules
+
+
+class FakeMesh:
+    def __init__(self, shape, names):
+        self.axis_names = names
+        self.devices = types.SimpleNamespace(shape=shape,
+                                             size=int(__import__("numpy").prod(shape)))
+
+
+POD = FakeMesh((16, 16), ("data", "model"))
+MULTI = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_resolve_basic():
+    spec = rules.resolve(("embed", "ffn"), (4096, 16384), POD)
+    assert spec == P("data", "model")
+
+
+def test_resolve_divisibility_fallback():
+    # 40 heads not divisible by model=16 -> head_dim takes it
+    spec = rules.resolve(("embed", "heads", "head_dim"), (5120, 40, 128),
+                         POD)
+    assert spec == P("data", None, "model")
+
+
+def test_resolve_batch_multipod():
+    assert rules.batch_pspec(MULTI, 256) == ("pod", "data")
+    assert rules.batch_pspec(MULTI, 16) is None or \
+        rules.batch_pspec(MULTI, 16) == "data"
+    assert rules.batch_pspec(MULTI, 1) is None
+
+
+def test_resolve_no_axis_reuse():
+    spec = rules.resolve(("ffn", "vocab"), (16384, 256000), POD)
+    # both want "model"; only one gets it
+    assert list(spec).count("model") == 1
+
+
+def test_cache_seq_sharding_when_batch_one():
+    spec = rules.resolve(("batch", "seq_data", "kv_heads", "head_dim"),
+                         (1, 524288, 16, 128), POD)
+    assert spec == P(None, "data", "model")
+
+
+def test_param_pspecs_shapes():
+    from repro.configs.base import get_config
+    from repro.models import backbone
+    cfg = get_config("gemma2-27b")
+    ap = backbone.abstract_params(cfg)
+    specs = rules.param_pspecs(ap, POD)
+    flat_p = jax.tree.leaves(ap)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_p) == len(flat_s)
+    # every spec fits its array rank
+    for p, s in zip(flat_p, flat_s):
+        assert len(s) <= p.ndim

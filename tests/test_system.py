@@ -1,0 +1,87 @@
+"""End-to-end behaviour: HTS-RL actually learns, matches sync sample
+efficiency, and beats stale-async sample efficiency (paper Fig. 5)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import mesh_runtime
+from repro.core.baselines import (AsyncConfig, async_init_carry,
+                                  make_async_step, make_sync_step,
+                                  sync_init_carry)
+from repro.core.mesh_runtime import HTSConfig
+from repro.envs import token_env
+from repro.envs.interfaces import vectorize
+from repro.models.cnn_policy import apply_token_policy, init_token_policy
+from repro.optim import rmsprop
+
+VOCAB = 32
+N_INTERVALS = 120
+
+
+def _mean_reward_tail(metrics, frac=0.25):
+    r = np.asarray(metrics["rewards"])
+    n = max(1, int(r.shape[0] * frac))
+    return float(r[-n:].mean())
+
+
+@pytest.fixture(scope="module")
+def setup():
+    env1 = token_env.make(vocab=VOCAB, seed=1)
+    venv = vectorize(env1, 8)
+    cfg = HTSConfig(alpha=8, n_envs=8, seed=0, entropy_coef=0.003)
+    params = init_token_policy(jax.random.key(0), VOCAB, hidden=64)
+    opt = rmsprop(5e-3, eps=1e-5)
+    return env1, venv, cfg, params, opt
+
+
+def test_hts_learns(setup):
+    _, venv, cfg, params, opt = setup
+    carry, metrics = mesh_runtime.train(params, apply_token_policy, venv,
+                                        opt, cfg, N_INTERVALS)
+    early = float(np.asarray(metrics["rewards"])[:5].mean())
+    late = _mean_reward_tail(metrics)
+    assert late > early + 0.05, (early, late)
+    assert late > 0.15
+
+
+def test_hts_matches_sync_sample_efficiency(setup):
+    """Fig. 5 top row: HTS-RL has ~the same data efficiency as sync A2C."""
+    _, venv, cfg, params, opt = setup
+    _, m_hts = mesh_runtime.train(params, apply_token_policy, venv, opt,
+                                  cfg, N_INTERVALS)
+    sstep = make_sync_step(apply_token_policy, venv, opt, cfg)
+    sc = sync_init_carry(params, opt, venv, cfg)
+
+    @jax.jit
+    def run(c):
+        return jax.lax.scan(sstep, c, None, length=N_INTERVALS)
+
+    _, m_sync = run(sc)
+    hts = _mean_reward_tail(m_hts)
+    sync = _mean_reward_tail(m_sync)
+    # one-step delay costs a little data efficiency at tiny scale; the
+    # paper's claim is "similar", which we bound at >=60% of sync here
+    # (single seed, 120 intervals — Fig. 5 parity emerges at larger
+    # budgets; see benchmarks/tab1 for the time-budgeted comparison)
+    assert hts > 0.6 * sync, (hts, sync)
+
+
+def test_stale_async_hurts_sample_efficiency(setup):
+    """Fig. 5 / Sec. 3: heavy staleness without correction degrades
+    final reward vs HTS-RL at equal environment steps."""
+    _, venv, cfg, params, opt = setup
+    _, m_hts = mesh_runtime.train(params, apply_token_policy, venv, opt,
+                                  cfg, N_INTERVALS)
+    acfg = AsyncConfig(staleness=16, correction="none")
+    astep = make_async_step(apply_token_policy, venv, opt, cfg, acfg)
+    ac = async_init_carry(params, opt, venv, cfg, acfg)
+
+    @jax.jit
+    def run(c):
+        return jax.lax.scan(astep, c, None, length=N_INTERVALS)
+
+    _, m_async = run(ac)
+    hts = _mean_reward_tail(m_hts)
+    stale = _mean_reward_tail(m_async)
+    assert hts >= stale - 0.05, (hts, stale)
