@@ -1,0 +1,36 @@
+"""Registry-driven throughput sweep: every runtime through one code path.
+
+Each registered runtime (host, mesh, sharded, sync, async) trains the same
+policy on the same envs with the same HTSConfig; we report steps/second
+after a warmup run absorbs compilation. This is the generalization of
+Tab. A2 — adding a runtime to the registry automatically adds it here.
+
+``run(runtimes=..., intervals=...)`` is also the backend of
+``benchmarks.run --runtime ...`` and the CI SPS smoke check.
+"""
+import numpy as np
+import jax
+
+from repro.core import engine
+from repro.envs import catch
+from repro.models.cnn_policy import apply_mlp_policy, init_mlp_policy
+from repro.optim import rmsprop
+
+IV = 12
+
+
+def run(runtimes=None, intervals=IV, alpha=8, n_envs=8):
+    env1 = catch.make()
+    cfg = engine.HTSConfig(alpha=alpha, n_envs=n_envs, seed=0)
+    params = init_mlp_policy(jax.random.key(0),
+                             int(np.prod(env1.obs_shape)), env1.n_actions)
+    opt = rmsprop(7e-4)
+    policy = lambda p, o: apply_mlp_policy(p, o.reshape(o.shape[0], -1))
+
+    rows = []
+    for name in (runtimes or engine.runtime_names()):
+        rt = engine.make_runtime(name, env1, policy, params, opt, cfg)
+        rt.run(intervals)              # warmup: compile + caches
+        out = rt.run(intervals)
+        rows.append((f"engine_sps_{name}", out.sps, "sps"))
+    return rows

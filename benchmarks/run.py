@@ -1,10 +1,16 @@
 """Benchmark harness: one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig3,tab1]
+    PYTHONPATH=src python -m benchmarks.run --runtime host,mesh,sharded
+    PYTHONPATH=src python -m benchmarks.run --runtime mesh \
+        --append-sps BENCH_sps.json        # CI smoke: append a JSON line
 
-Prints ``name,value,unit`` CSV rows per benchmark.
+Prints ``name,value,unit`` CSV rows per benchmark. ``--runtime`` runs the
+registry SPS sweep (benchmarks/engine_sps.py) for the named engine
+runtimes instead of the paper tables.
 """
 import argparse
+import json
 import sys
 import time
 import traceback
@@ -20,18 +26,69 @@ MODULES = [
     "tab4_actor_ablation",
     "tab5_sync_interval",
     "tabA1_correction",
-    "tabA2_impl_sps",
+    "tabA2_impl_sps",       # (engine_sps backs it; full sweep via --runtime)
     "roofline_table",
 ]
+
+
+def _run_runtime_sweep(args) -> None:
+    from benchmarks import engine_sps
+    names = args.runtime.split(",")
+    t0 = time.time()
+    rows, failed = [], 0
+    print("name,value,unit")
+    for rt_name in names:          # per-runtime isolation, like the tables
+        try:
+            sub = engine_sps.run(runtimes=[rt_name],
+                                 intervals=args.intervals)
+        except Exception:
+            failed += 1
+            print(f"# runtime {rt_name} FAILED:\n{traceback.format_exc()}",
+                  file=sys.stderr, flush=True)
+            continue
+        rows.extend(sub)
+        for name, value, unit in sub:
+            print(f"{name},{value:.6g},{unit}", flush=True)
+    if args.append_sps:
+        record = {
+            "ts": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+            "intervals": args.intervals,
+            "wall_s": round(time.time() - t0, 2),
+            "sps": {name: round(value, 2) for name, value, _ in rows},
+        }
+        with open(args.append_sps, "a") as f:
+            f.write(json.dumps(record) + "\n")
+        print(f"# appended to {args.append_sps}", file=sys.stderr,
+              flush=True)
+    if failed:
+        raise SystemExit(1)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated module substring filters")
+    ap.add_argument("--runtime", default=None,
+                    help="comma-separated engine runtime names "
+                         "(host,mesh,sharded,sync,async): run the registry "
+                         "SPS sweep instead of the paper tables")
+    ap.add_argument("--intervals", type=int, default=12,
+                    help="intervals per timed run for --runtime")
+    ap.add_argument("--append-sps", default=None, metavar="FILE",
+                    help="with --runtime: append the sweep as a JSON line "
+                         "to FILE (e.g. BENCH_sps.json)")
     args = ap.parse_args()
-    filters = args.only.split(",") if args.only else None
+    if args.runtime and args.only:
+        ap.error("--only filters the paper tables; it does not combine "
+                 "with --runtime (the registry sweep)")
+    if args.append_sps and not args.runtime:
+        ap.error("--append-sps requires --runtime")
 
+    if args.runtime:
+        _run_runtime_sweep(args)
+        return
+
+    filters = args.only.split(",") if args.only else None
     print("name,value,unit")
     failed = 0
     for mod_name in MODULES:

@@ -1,52 +1,20 @@
 """Tab. A2: implementation throughput — fused mesh runtime vs threaded
-host runtime vs sync baseline, real wall-clock (no simulated delays)."""
-import time
+host runtime vs sync baseline, real wall-clock (no simulated delays).
 
-import numpy as np
-import jax
-
-from repro.core import mesh_runtime
-from repro.core.baselines import make_sync_step, sync_init_carry
-from repro.core.host_runtime import HostConfig, HostHTSRL
-from repro.core.mesh_runtime import HTSConfig
-from repro.envs import catch
-from repro.envs.interfaces import vectorize
-from repro.models.cnn_policy import apply_mlp_policy, init_mlp_policy
-from repro.optim import rmsprop
+All three come from the runtime registry (the full sweep, including the
+sharded and async runtimes, is benchmarks/engine_sps.py); the labels keep
+the paper-table names."""
+from benchmarks import engine_sps
 
 IV = 12
 
+LABELS = {
+    "engine_sps_mesh": "tabA2_mesh_runtime",
+    "engine_sps_host": "tabA2_host_runtime",
+    "engine_sps_sync": "tabA2_sync_fused",
+}
+
 
 def run():
-    env1 = catch.make()
-    cfg = HTSConfig(alpha=8, n_envs=8, seed=0)
-    venv = vectorize(env1, cfg.n_envs)
-    params = init_mlp_policy(jax.random.key(0),
-                             int(np.prod(env1.obs_shape)), env1.n_actions)
-    opt = rmsprop(7e-4)
-    policy = lambda p, o: apply_mlp_policy(p, o.reshape(o.shape[0], -1))
-    steps = IV * cfg.alpha * cfg.n_envs
-    rows = []
-
-    step = mesh_runtime.make_hts_step(policy, venv, opt, cfg)
-    carry = mesh_runtime.init_carry(params, opt, venv, cfg, policy)
-    jrun_hts = jax.jit(lambda c: jax.lax.scan(step, c, None, length=IV))
-    jax.block_until_ready(jrun_hts(carry))       # compile
-    t0 = time.perf_counter()
-    jax.block_until_ready(jrun_hts(carry))
-    rows.append(("tabA2_mesh_runtime", steps / (time.perf_counter() - t0),
-                 "sps"))
-
-    out = HostHTSRL(env1, policy, params, opt, cfg,
-                    HostConfig(n_actors=2)).run(IV)
-    rows.append(("tabA2_host_runtime", out["sps"], "sps"))
-
-    sstep = make_sync_step(policy, venv, opt, cfg)
-    sc = sync_init_carry(params, opt, venv, cfg)
-    jrun = jax.jit(lambda c: jax.lax.scan(sstep, c, None, length=IV))
-    jax.block_until_ready(jrun(sc))
-    t0 = time.perf_counter()
-    jax.block_until_ready(jrun(sc))
-    rows.append(("tabA2_sync_fused", steps / (time.perf_counter() - t0),
-                 "sps"))
-    return rows
+    rows = engine_sps.run(runtimes=("mesh", "host", "sync"), intervals=IV)
+    return [(LABELS[name], value, unit) for name, value, unit in rows]

@@ -1,5 +1,6 @@
 """HTS-RL(A2C) vs synchronous A2C vs IMPALA-style async on a pixel env —
-the paper's Tab. 1 / Fig. 5 comparison, end-to-end.
+the paper's Tab. 1 / Fig. 5 comparison, end-to-end, with every contender
+selected from the runtime registry (one code path, swap the name).
 
 Uses the paper's conv policy trunk on GridMaze (the deterministic
 pixel-observation Atari stand-in; see DESIGN.md §8 for why not ALE).
@@ -14,16 +15,20 @@ import numpy as np
 import jax
 
 from repro.configs.paper_cnn import CNNPolicyConfig
-from repro.core import mesh_runtime
-from repro.core.baselines import (AsyncConfig, async_init_carry,
-                                  make_async_step, make_sync_step,
-                                  sync_init_carry)
-from repro.core.mesh_runtime import HTSConfig
+from repro.core import engine
+from repro.core.baselines import AsyncConfig
+from repro.core.engine import HTSConfig
 from repro.core.runtime_model import expected_runtime
 from repro.envs import gridmaze
-from repro.envs.interfaces import vectorize
 from repro.models.cnn_policy import apply_cnn, init_cnn
 from repro.optim import rmsprop
+
+RUNTIMES = (
+    ("mesh", "HTS-RL(A2C)", {}),
+    ("sync", "sync A2C", {}),
+    ("async", "async+vtrace (k=8)",
+     {"acfg": AsyncConfig(staleness=8, correction="vtrace")}),
+)
 
 
 def main():
@@ -36,7 +41,6 @@ def main():
     env1 = gridmaze.make()
     cfg = HTSConfig(alpha=args.alpha, n_envs=args.n_envs, seed=0,
                     entropy_coef=0.01)
-    venv = vectorize(env1, cfg.n_envs)
     ccfg = CNNPolicyConfig(obs_shape=env1.obs_shape, conv_sizes=(3, 3, 3),
                            conv_strides=(1, 1, 1), hidden=128)
 
@@ -47,29 +51,18 @@ def main():
                       env1.obs_shape)
     opt = rmsprop(7e-4, eps=1e-5)
 
-    # --- HTS-RL
-    _, m_hts = mesh_runtime.train(params, policy, venv, opt, cfg,
-                                  args.intervals)
-    # --- synchronous A2C baseline
-    sstep = make_sync_step(policy, venv, opt, cfg)
-    sc = sync_init_carry(params, opt, venv, cfg)
-    _, m_sync = jax.jit(lambda c: jax.lax.scan(
-        sstep, c, None, length=args.intervals))(sc)
-    # --- IMPALA-style stale async
-    acfg = AsyncConfig(staleness=8, correction="vtrace")
-    astep = make_async_step(policy, venv, opt, cfg, acfg)
-    ac = async_init_carry(params, opt, venv, cfg, acfg)
-    _, m_async = jax.jit(lambda c: jax.lax.scan(
-        astep, c, None, length=args.intervals))(ac)
-
-    def tail(m):
-        r = np.asarray(m["rewards"])
+    def tail(rewards):
+        r = np.asarray(rewards)
         return float(r[-max(1, len(r) // 5):].mean())
 
-    print(f"final-metric reward/step (last 20%):")
-    print(f"  HTS-RL(A2C):          {tail(m_hts):+.4f}")
-    print(f"  sync A2C:             {tail(m_sync):+.4f}")
-    print(f"  async+vtrace (k=8):   {tail(m_async):+.4f}")
+    # (throughput comparisons live in benchmarks/engine_sps.py, which
+    # warms the compile caches first; a single cold run's SPS would
+    # mostly measure XLA compilation)
+    print("final-metric reward/step (last 20%):")
+    for name, label, kw in RUNTIMES:
+        out = engine.make_runtime(name, env1, policy, params, opt, cfg,
+                                  **kw).run(args.intervals)
+        print(f"  {label + ':':<22}{tail(out.rewards):+.4f}")
 
     # virtual-time: same steps, modeled wall-clock (Claim 1 regime:
     # exponential step times, mean 1)

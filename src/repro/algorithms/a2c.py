@@ -1,0 +1,24 @@
+"""A2C (paper Eq. 4) as a pluggable Algorithm.
+
+Extracted from the former ``mesh_runtime._interval_loss`` so every runtime
+shares one copy of the update math. n-step returns by default, GAE when
+``cfg.use_gae``.
+"""
+from __future__ import annotations
+
+from repro.algorithms import base
+from repro.core import losses
+
+
+class A2C:
+    name = "a2c"
+
+    def loss(self, policy_apply, params, traj, cfg):
+        logits, values, bv = base.policy_on_traj(policy_apply, params, traj)
+        adv, rets = base.advantages_and_returns(values, bv, traj, cfg)
+        st = losses.a2c_loss(logits, values, traj["actions"], adv, rets,
+                             cfg.value_coef, cfg.entropy_coef)
+        return st.total, st
+
+
+base.register(A2C())

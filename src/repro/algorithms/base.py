@@ -1,0 +1,84 @@
+"""The ``Algorithm`` protocol — the update math, decoupled from scheduling.
+
+Every runtime (threaded host, fused mesh, sharded data-parallel, sync and
+stale-async baselines) drives the same interface:
+
+    loss(policy_apply, params, traj, cfg) -> (scalar, LossStats)
+
+``traj`` is the interval trajectory pytree produced by
+``core.rollout.rollout_interval`` — time-major ``(alpha, n_envs, ...)``
+leaves plus ``bootstrap_obs`` — and ``cfg`` is any object exposing the
+HTSConfig hyperparameter fields (gamma, value_coef, entropy_coef, use_gae,
+gae_lambda, ppo_clip). Algorithms are pure and jit/pjit/shard_map-safe, so
+a runtime is free to differentiate, vectorize, or all-reduce around them.
+
+Instances register by name; ``get_algorithm("a2c" | "ppo" | "vtrace" |
+...)`` is how runtimes and launchers resolve ``cfg.algorithm`` strings.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Protocol, Tuple, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import losses
+
+
+@runtime_checkable
+class Algorithm(Protocol):
+    name: str
+
+    def loss(self, policy_apply: Callable, params, traj, cfg
+             ) -> Tuple[jnp.ndarray, losses.LossStats]:
+        """Scalar training loss (and stats) for one interval trajectory."""
+        ...
+
+
+_REGISTRY: Dict[str, Algorithm] = {}
+
+
+def register(alg: Algorithm) -> Algorithm:
+    _REGISTRY[alg.name] = alg
+    return alg
+
+
+def get_algorithm(name: str) -> Algorithm:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown algorithm {name!r}; "
+                       f"registered: {sorted(_REGISTRY)}") from None
+
+
+def algorithm_names():
+    return sorted(_REGISTRY)
+
+
+# ------------------------------------------------------- shared pieces
+def policy_on_traj(policy_apply, params, traj):
+    """Forward the policy over an interval trajectory.
+
+    traj leaves are (alpha, n_envs, ...); returns
+    (logits (A, N, n_actions), values (A, N), bootstrap_value (N,)
+    stop-gradiented).
+    """
+    A, N = traj["actions"].shape
+    obs = traj["obs"]
+    flat_obs = obs.reshape((A * N,) + obs.shape[2:])
+    logits, values = policy_apply(params, flat_obs)
+    logits = logits.reshape(A, N, -1)
+    values = values.reshape(A, N)
+    _, bv = policy_apply(params, traj["bootstrap_obs"])
+    return logits, values, jax.lax.stop_gradient(bv)
+
+
+def advantages_and_returns(values, bootstrap_value, traj, cfg):
+    """(advantages, returns) per cfg.use_gae / cfg.gae_lambda / cfg.gamma."""
+    if getattr(cfg, "use_gae", False):
+        return losses.gae(traj["rewards"], traj["dones"],
+                          jax.lax.stop_gradient(values), bootstrap_value,
+                          cfg.gamma, cfg.gae_lambda)
+    rets = losses.n_step_returns(traj["rewards"], traj["dones"],
+                                 bootstrap_value, cfg.gamma)
+    return rets - jax.lax.stop_gradient(values), rets

@@ -1,0 +1,30 @@
+"""PPO-clip as a pluggable Algorithm (the paper's GFootball setting).
+
+The clipping ratio is taken against the executor-recorded
+``behavior_logprob``. Under HTS-RL's schedule the gradient is computed at
+the behavior parameters themselves (one update behind the target), so the
+ratio is exactly 1 and clipping is inactive at the differentiation point
+— the clip matters for the stale-async baselines, where behavior lags by
+k updates. One update per interval; see
+``mesh_runtime.make_learner_update`` for why there are no PPO "epochs"
+under the delayed-gradient schedule.
+"""
+from __future__ import annotations
+
+from repro.algorithms import base
+from repro.core import losses
+
+
+class PPO:
+    name = "ppo"
+
+    def loss(self, policy_apply, params, traj, cfg):
+        logits, values, bv = base.policy_on_traj(policy_apply, params, traj)
+        adv, rets = base.advantages_and_returns(values, bv, traj, cfg)
+        st = losses.ppo_loss(logits, values, traj["actions"], adv, rets,
+                             traj["behavior_logprob"], cfg.ppo_clip,
+                             cfg.value_coef, cfg.entropy_coef)
+        return st.total, st
+
+
+base.register(PPO())

@@ -1,0 +1,91 @@
+"""Stale-policy corrections (paper Eq. 5 + Sec. 2) as Algorithms.
+
+The async baseline's learner differentiates the *current* params on data
+produced by a behavior policy k updates behind. Each correction mode is
+its own Algorithm (extracted from the former ``baselines._stale_loss``):
+
+  * ``none``      — uncorrected A2C on stale data (GA3C w/o epsilon);
+  * ``epsilon``   — GA3C's pi(a|s) + eps inside the log;
+  * ``trunc_is``  — truncated importance sampling (Tab. A1 ablation);
+  * ``vtrace``    — IMPALA's V-trace targets (core/vtrace.py).
+
+``make_correction(acfg)`` builds an instance from an AsyncConfig-shaped
+object; the default instances registered here use the paper's epsilon /
+rho_max values.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.algorithms import base
+from repro.core import losses
+from repro.core import vtrace as vtrace_mod
+
+
+class StaleCorrected:
+    """A2C on off-policy data with a configurable correction mode."""
+
+    def __init__(self, correction: str = "vtrace", *, epsilon: float = 1e-3,
+                 rho_max: float = 1.0, name: str | None = None):
+        assert correction in ("none", "epsilon", "trunc_is", "vtrace"), \
+            correction
+        self.correction = correction
+        self.epsilon = epsilon
+        self.rho_max = rho_max
+        self.name = name if name is not None else correction
+
+    def loss(self, policy_apply, params, traj, cfg):
+        logits, values, bv = base.policy_on_traj(policy_apply, params, traj)
+
+        if self.correction == "vtrace":
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+            tlp = jnp.take_along_axis(
+                logp, traj["actions"][..., None], axis=-1)[..., 0]
+            vt = vtrace_mod.vtrace(traj["behavior_logprob"],
+                                   jax.lax.stop_gradient(tlp),
+                                   traj["rewards"], traj["dones"],
+                                   jax.lax.stop_gradient(values), bv,
+                                   cfg.gamma, self.rho_max)
+            ent = -(jnp.exp(logp) * logp).sum(-1)
+            pg = -(tlp * vt.pg_advantages).mean()
+            vl = jnp.square(values - vt.vs).mean()
+            e = ent.mean()
+            total = pg + cfg.value_coef * vl - cfg.entropy_coef * e
+            return total, losses.LossStats(total, pg, vl, e)
+
+        rets = losses.n_step_returns(traj["rewards"], traj["dones"], bv,
+                                     cfg.gamma)
+        adv = rets - jax.lax.stop_gradient(values)
+        if self.correction == "trunc_is":
+            st = losses.truncated_is_a2c_loss(
+                logits, values, traj["actions"], adv, rets,
+                traj["behavior_logprob"], self.rho_max,
+                cfg.value_coef, cfg.entropy_coef)
+            return st.total, st
+        if self.correction == "epsilon":
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+            p_a = jnp.exp(jnp.take_along_axis(
+                logp, traj["actions"][..., None], axis=-1))[..., 0]
+            lp = jnp.log(p_a + self.epsilon)
+            ent = -(jnp.exp(logp) * logp).sum(-1)
+            pg = -(lp * jax.lax.stop_gradient(adv)).mean()
+            vl = jnp.square(values - rets).mean()
+            e = ent.mean()
+            total = pg + cfg.value_coef * vl - cfg.entropy_coef * e
+            return total, losses.LossStats(total, pg, vl, e)
+        st = losses.a2c_loss(logits, values, traj["actions"], adv, rets,
+                             cfg.value_coef, cfg.entropy_coef)
+        return st.total, st
+
+
+def make_correction(acfg) -> StaleCorrected:
+    """Instance from an AsyncConfig-shaped object (correction, epsilon,
+    rho_max)."""
+    return StaleCorrected(acfg.correction, epsilon=acfg.epsilon,
+                          rho_max=acfg.rho_max)
+
+
+base.register(StaleCorrected("vtrace"))
+base.register(StaleCorrected("epsilon"))
+base.register(StaleCorrected("trunc_is"))

@@ -9,19 +9,25 @@
 * ``make_async_step``  — GA3C/IMPALA-style stale-policy training: the
   behavior policy lags k updates behind the target (k drawn from the
   queueing process in expectation; here fixed/configurable), with
-  correction in {none, epsilon, truncated-IS, vtrace} (Eq. 5 + Sec. 2).
+  correction in {none, epsilon, truncated-IS, vtrace} (Eq. 5 + Sec. 2;
+  the correction losses live in repro.algorithms.vtrace).
+
+Both are also exposed as engine runtimes (``get_runtime("sync"/"async")``)
+so benchmark sweeps drive every scheduler through one code path.
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import losses, vtrace as vtrace_mod
-from repro.core.mesh_runtime import HTSConfig, _interval_loss
+from repro.algorithms import vtrace as vtrace_alg
+from repro.core.engine import (HTSConfig, ScanRuntimeBase,
+                               register_runtime)
+from repro.core.mesh_runtime import _interval_loss
 from repro.core.rollout import RolloutConfig, rollout_interval
-from repro.envs.interfaces import Env
+from repro.envs.interfaces import Env, vectorize
 from repro.optim import Optimizer, apply_updates
 
 
@@ -64,52 +70,9 @@ class AsyncConfig(NamedTuple):
 def _stale_loss(policy_apply, params_target, traj, cfg: HTSConfig,
                 acfg: AsyncConfig):
     """Eq. (5): gradient at theta_j on data from theta_{j-k}, with the
-    chosen correction."""
-    A, N = traj["actions"].shape
-    obs = traj["obs"]
-    flat = obs.reshape((A * N,) + obs.shape[2:])
-    logits, values = policy_apply(params_target, flat)
-    logits = logits.reshape(A, N, -1)
-    values = values.reshape(A, N)
-    _, bv = policy_apply(params_target, traj["bootstrap_obs"])
-    bv = jax.lax.stop_gradient(bv)
-
-    if acfg.correction == "vtrace":
-        logp = jax.nn.log_softmax(logits.astype(jnp.float32))
-        tlp = jnp.take_along_axis(
-            logp, traj["actions"][..., None], axis=-1)[..., 0]
-        vt = vtrace_mod.vtrace(traj["behavior_logprob"],
-                               jax.lax.stop_gradient(tlp),
-                               traj["rewards"], traj["dones"],
-                               jax.lax.stop_gradient(values), bv, cfg.gamma,
-                               acfg.rho_max)
-        ent = -(jnp.exp(logp) * logp).sum(-1)
-        pg = -(tlp * vt.pg_advantages).mean()
-        vl = jnp.square(values - vt.vs).mean()
-        return pg + cfg.value_coef * vl - cfg.entropy_coef * ent.mean()
-
-    rets = losses.n_step_returns(traj["rewards"], traj["dones"], bv,
-                                 cfg.gamma)
-    adv = rets - jax.lax.stop_gradient(values)
-    if acfg.correction == "trunc_is":
-        st = losses.truncated_is_a2c_loss(
-            logits, values, traj["actions"], adv, rets,
-            traj["behavior_logprob"], acfg.rho_max,
-            cfg.value_coef, cfg.entropy_coef)
-        return st.total
-    if acfg.correction == "epsilon":
-        # GA3C: pi(a|s) <- pi(a|s) + eps inside the log
-        logp = jax.nn.log_softmax(logits.astype(jnp.float32))
-        p_a = jnp.exp(jnp.take_along_axis(
-            logp, traj["actions"][..., None], axis=-1))[..., 0]
-        lp = jnp.log(p_a + acfg.epsilon)
-        ent = -(jnp.exp(logp) * logp).sum(-1)
-        pg = -(lp * jax.lax.stop_gradient(adv)).mean()
-        vl = jnp.square(values - rets).mean()
-        return pg + cfg.value_coef * vl - cfg.entropy_coef * ent.mean()
-    st = losses.a2c_loss(logits, values, traj["actions"], adv, rets,
-                         cfg.value_coef, cfg.entropy_coef)
-    return st.total
+    chosen correction (resolved from repro.algorithms.vtrace)."""
+    alg = vtrace_alg.make_correction(acfg)
+    return alg.loss(policy_apply, params_target, traj, cfg)[0]
 
 
 def make_async_step(policy_apply: Callable, env: Env, opt: Optimizer,
@@ -151,3 +114,51 @@ def async_init_carry(params, opt: Optimizer, env: Env, cfg: HTSConfig,
         params)
     return (params, opt.init(params), history, env_state, obs,
             jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------- engine
+class _BaselineRuntime(ScanRuntimeBase):
+    """Baseline carries lead with plain params (no DelayedGradState)."""
+
+    def __init__(self, env: Env, policy_apply: Callable, params,
+                 opt: Optimizer, cfg: HTSConfig):
+        super().__init__(env, policy_apply, params, opt, cfg)
+        self.venv = vectorize(env, cfg.n_envs)
+
+    def _result_state(self, carry):
+        return carry[0], carry
+
+
+@register_runtime("sync")
+class SyncRuntime(_BaselineRuntime):
+    """Alternating rollout/update baseline (paper Fig. 2(c))."""
+
+    name = "sync"
+
+    def _build(self) -> None:
+        self._step = make_sync_step(self.policy_apply, self.venv, self.opt,
+                                    self.cfg)
+
+    def _initial_carry(self):
+        return sync_init_carry(self.params0, self.opt, self.venv, self.cfg)
+
+
+@register_runtime("async")
+class AsyncRuntime(_BaselineRuntime):
+    """Stale-policy baseline; pass ``acfg=AsyncConfig(...)`` (or its
+    fields as kwargs) to control staleness/correction."""
+
+    name = "async"
+
+    def __init__(self, env, policy_apply, params, opt, cfg,
+                 acfg: Optional[AsyncConfig] = None, **acfg_kwargs):
+        super().__init__(env, policy_apply, params, opt, cfg)
+        self.acfg = acfg if acfg is not None else AsyncConfig(**acfg_kwargs)
+
+    def _build(self) -> None:
+        self._step = make_async_step(self.policy_apply, self.venv, self.opt,
+                                     self.cfg, self.acfg)
+
+    def _initial_carry(self):
+        return async_init_carry(self.params0, self.opt, self.venv, self.cfg,
+                                self.acfg)

@@ -38,9 +38,21 @@ class HostStorage:
     def write(self, **items) -> None:
         i = self.write_idx
         assert i < self.capacity, "storage overflow"
-        for k, v in items.items():
-            self.data[k][i] = v
+        self.write_slot(i, **items)
         self.write_idx += 1
+
+    def write_slot(self, idx: int, **items) -> None:
+        """Write one transition into an explicit slot without moving the
+        cursor — the executor path, where slot = t * n_envs + env_id is
+        owned by exactly one executor thread (so no lock is needed for the
+        array stores; ``advance`` moves the cursor under the buffer lock)."""
+        for k, v in items.items():
+            self.data[k][idx] = v
+
+    def advance(self, n: int) -> None:
+        """Move the write cursor after ``n`` slot writes (call with the
+        owning DoubleBuffer's lock held)."""
+        self.write_idx = min(self.write_idx + n, self.capacity)
 
     @property
     def full(self) -> bool:

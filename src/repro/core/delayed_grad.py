@@ -44,19 +44,23 @@ def update(state: DelayedGradState, grads, opt: Optimizer,
 
     skip: optional bool — when True the parameter update is suppressed but
     the behavior snapshot still advances (used for the bootstrap interval
-    where the read storage is still empty)."""
+    where the read storage is still empty). A skipped update does not
+    count toward ``step``, so ``step`` always equals the number of
+    updates actually applied (comparable across runtimes)."""
     updates, opt_state = opt.update(grads, state.opt_state, state.params)
     new_params = apply_updates(state.params, updates)
+    applied = jnp.ones((), jnp.int32)
     if skip is not None:
         keep = lambda new, old: jax.tree.map(
             lambda n, o: jnp.where(skip, o, n), new, old)
         new_params = keep(new_params, state.params)
         opt_state = keep(opt_state, state.opt_state)
+        applied = jnp.where(skip, 0, 1).astype(jnp.int32)
     return DelayedGradState(
         params=new_params,
         params_prev=state.params,     # behavior policy advances by one
         opt_state=opt_state,
-        step=state.step + 1,
+        step=state.step + applied,
     )
 
 

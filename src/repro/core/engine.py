@@ -1,0 +1,205 @@
+"""The unified runtime engine: one protocol, many schedulers.
+
+HTS-RL's thesis is that *scheduling* (when rollouts and updates run, and
+on which params) is orthogonal to the *update math* (repro.algorithms).
+This module pins down the scheduling side:
+
+  * ``HTSConfig``  — the shared hyperparameter bundle (interval length
+    alpha, env count, algorithm name, seed, ...). Historically defined in
+    ``mesh_runtime``; it lives here now and is re-exported from there.
+  * ``Runtime``    — protocol: ``init()`` builds/rebuilds runtime state,
+    ``run(n_intervals) -> RunResult`` executes that many synchronization
+    intervals. Every runtime consumes ALL data it produces: after
+    ``run(n)`` exactly ``n`` delayed-gradient (or plain) updates have been
+    applied, so different runtimes are directly comparable (and, for the
+    HTS family, bit-identical — tests/test_equivalence.py).
+  * the registry  — ``get_runtime(name)`` / ``make_runtime(name, ...)``
+    resolve the built-ins lazily (so importing the engine never drags in
+    threading or shard_map machinery):
+
+      host      threaded executors/actors/learner (paper Fig. 1(e))
+      mesh      single fused XLA program per interval
+      sharded   data-parallel fused program via shard_map (n_envs sharded
+                over the mesh 'data' axis, delayed grads all-reduced)
+      sync      conventional alternating rollout/update baseline
+      async     stale-policy baseline (behavior lags k updates)
+
+All runtime factories share one signature:
+
+    factory(env, policy_apply, params, opt, cfg, **runtime_kwargs)
+
+with ``env`` the *single* (unvectorized) environment; each runtime
+replicates it to ``cfg.n_envs`` however its execution model requires.
+"""
+from __future__ import annotations
+
+import importlib
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Protocol, runtime_checkable
+
+import numpy as np
+import jax
+
+
+class HTSConfig(NamedTuple):
+    alpha: int = 16
+    n_envs: int = 16
+    gamma: float = 0.99
+    value_coef: float = 0.5
+    entropy_coef: float = 0.01
+    algorithm: str = "a2c"          # any repro.algorithms registry name
+    use_gae: bool = False
+    gae_lambda: float = 0.95
+    ppo_clip: float = 0.2
+    seed: int = 0
+
+
+@dataclass
+class RunResult:
+    """What every runtime returns from ``run``.
+
+    ``rewards``/``dones`` are (n_intervals, alpha, n_envs) numpy arrays;
+    ``state`` is the runtime's full carry (a DelayedGradState for the HTS
+    family). Mapping-style access (``out["params"]``, ``out["dg"]``) is
+    kept for existing benchmarks/tests.
+    """
+    params: Any
+    state: Any
+    steps: int
+    wall_time: float
+    sps: float
+    rewards: np.ndarray
+    dones: np.ndarray
+
+    def __getitem__(self, key):
+        if key == "dg":
+            return self.state
+        return getattr(self, key)
+
+
+@runtime_checkable
+class Runtime(Protocol):
+    name: str
+
+    def init(self) -> None:
+        """(Re)build runtime state: params/optimizer carry, env replicas,
+        buffers. Calling it resets the runtime to its initial state."""
+        ...
+
+    def run(self, n_intervals: int) -> RunResult:
+        """Execute ``n_intervals`` synchronization intervals FROM THE
+        INITIAL STATE (every implementation calls ``init()`` first, so
+        repeated ``run`` calls are independent, deterministic replays —
+        which is what lets benchmarks use run-twice warmup). Compiled
+        programs are cached across calls; only training state resets."""
+        ...
+
+
+class ScanRuntimeBase:
+    """Shared plumbing for every scan-based runtime (mesh, sharded, sync,
+    async): compiled programs built once and cached per ``n_intervals``,
+    carry reset per ``run``, timing, and RunResult assembly. Subclasses
+    fill in four hooks:
+
+      _build()          compile-once closures (step fns, learner, ...)
+      _initial_carry()  fresh training state
+      _program(n)       callable (carry) -> (carry', metrics); the default
+                        jits a scan of ``self._step``
+      _result_state(c)  (params, state) out of the final carry
+    """
+
+    name: str = "?"
+
+    def __init__(self, env, policy_apply: Callable, params, opt,
+                 cfg: HTSConfig):
+        self.env1 = env
+        self.policy_apply = policy_apply
+        self.params0 = params
+        self.opt = opt
+        self.cfg = cfg
+        self.carry = None
+        self._built = False
+        self._programs: Dict[int, Callable] = {}
+
+    # ------------------------------------------------------------ hooks
+    def _build(self) -> None:
+        raise NotImplementedError
+
+    def _initial_carry(self):
+        raise NotImplementedError
+
+    def _program(self, n_intervals: int) -> Callable:
+        return jax.jit(lambda carry: jax.lax.scan(
+            self._step, carry, None, length=n_intervals))
+
+    def _result_state(self, carry):
+        raise NotImplementedError
+
+    # --------------------------------------------------------- plumbing
+    def init(self) -> None:
+        if not self._built:
+            self._build()
+            self._built = True
+        self.carry = self._initial_carry()
+
+    def run(self, n_intervals: int) -> RunResult:
+        self.init()
+        cfg = self.cfg
+        if n_intervals not in self._programs:
+            self._programs[n_intervals] = self._program(n_intervals)
+        t0 = time.perf_counter()
+        self.carry, metrics = self._programs[n_intervals](self.carry)
+        params, state = self._result_state(self.carry)
+        jax.block_until_ready(params)
+        wall = time.perf_counter() - t0
+        steps = n_intervals * cfg.alpha * cfg.n_envs
+        return RunResult(
+            params=params, state=state, steps=steps, wall_time=wall,
+            sps=steps / max(wall, 1e-9),
+            rewards=np.asarray(metrics["rewards"]),
+            dones=np.asarray(metrics["dones"]))
+
+
+# ---------------------------------------------------------------- registry
+_REGISTRY: Dict[str, Callable[..., Runtime]] = {}
+
+# name -> module that registers it (imported on first lookup)
+_LAZY: Dict[str, str] = {
+    "host": "repro.core.host_runtime",
+    "mesh": "repro.core.mesh_runtime",
+    "sharded": "repro.core.sharded_runtime",
+    "sync": "repro.core.baselines",
+    "async": "repro.core.baselines",
+}
+
+
+def register_runtime(name: str):
+    """Class/factory decorator: ``@register_runtime("mesh")``."""
+    def deco(factory):
+        _REGISTRY[name] = factory
+        return factory
+    return deco
+
+
+def get_runtime(name: str) -> Callable[..., Runtime]:
+    """Resolve a runtime factory by registry name."""
+    if name not in _REGISTRY and name in _LAZY:
+        importlib.import_module(_LAZY[name])
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown runtime {name!r}; "
+                       f"registered: {runtime_names()}") from None
+
+
+def runtime_names():
+    return sorted(set(_REGISTRY) | set(_LAZY))
+
+
+def make_runtime(name: str, env, policy_apply, params, opt, cfg: HTSConfig,
+                 **kwargs) -> Runtime:
+    """Construct a runtime: ``make_runtime("sharded", env1, papply, params,
+    opt, cfg)``. ``kwargs`` are runtime-specific (e.g. ``host=HostConfig``
+    for host, ``acfg=AsyncConfig`` for async, ``mesh=`` for sharded)."""
+    return get_runtime(name)(env, policy_apply, params, opt, cfg, **kwargs)

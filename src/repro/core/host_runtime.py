@@ -16,6 +16,12 @@ Key properties implemented exactly as in the paper:
     executors collect D^{theta_j} — one-step delayed gradient (Eq. 6);
   * batch synchronization every alpha steps.
 
+The actor computation and the learner update are the SAME functions the
+fused/sharded runtimes use (core/rollout.actor_forward,
+mesh_runtime.make_learner_update) — the thread scheduling here and the
+XLA scheduling there are two executions of one program, which is why
+tests/test_equivalence.py can demand bit-identical parameters.
+
 ``step_time`` (optional) injects simulated environment step durations via
 ``time.sleep`` for wall-clock throughput experiments.
 """
@@ -24,7 +30,7 @@ from __future__ import annotations
 import queue
 import threading
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Optional
 
 import numpy as np
@@ -33,7 +39,9 @@ import jax.numpy as jnp
 
 from repro.core import delayed_grad, determinism
 from repro.core.buffers import DoubleBuffer
-from repro.core.mesh_runtime import HTSConfig, _interval_loss
+from repro.core.engine import HTSConfig, RunResult, register_runtime
+from repro.core.mesh_runtime import make_learner_update
+from repro.core.rollout import actor_forward
 from repro.envs.interfaces import Env
 from repro.envs.steptime import StepTimeModel
 from repro.optim import Optimizer
@@ -47,45 +55,58 @@ class HostConfig:
     actor_compute: float = 0.0       # optional simulated actor latency
 
 
+@register_runtime("host")
 class HostHTSRL:
+    name = "host"
+
     def __init__(self, env: Env, policy_apply: Callable, params,
-                 opt: Optimizer, cfg: HTSConfig, host: HostConfig):
+                 opt: Optimizer, cfg: HTSConfig,
+                 host: Optional[HostConfig] = None, **host_kwargs):
         self.env = env
         self.cfg = cfg
-        self.host = host
+        self.host = host if host is not None else HostConfig(**host_kwargs)
         self.opt = opt
         self.policy_apply = policy_apply
-        self.master = jax.random.key(cfg.seed)
-        self.dg = delayed_grad.init(params, opt)
+        self.params0 = params
+        self._built = False
+        self.dg = None    # built lazily: run() always starts via init()
 
+    def _build(self) -> None:
+        """Compile-once pieces (jitted fns, storage specs); reused across
+        init() resets so warm reruns don't recompile."""
+        if self._built:
+            return
+        cfg, env, policy_apply = self.cfg, self.env, self.policy_apply
         self._env_step = jax.jit(env.step)
         self._env_reset = jax.jit(env.reset)
 
-        # fixed-batch actor forward (padded to n_envs -> one compile)
+        # fixed-batch actor forward (padded to n_envs -> one compile);
+        # shares core/rollout.actor_forward with the fused runtimes
         def actor_fwd(p, obs, seeds):
-            logits, _ = policy_apply(p, obs)
             keys = jax.vmap(jax.random.wrap_key_data)(seeds)
-            actions = jax.vmap(determinism.sample_action)(keys, logits)
-            logp = jax.nn.log_softmax(logits.astype(jnp.float32))
-            blp = jnp.take_along_axis(logp, actions[:, None], axis=-1)[:, 0]
-            return actions, blp
+            return actor_forward(policy_apply, p, obs, keys)
 
         self._actor_fwd = jax.jit(actor_fwd)
-        self._grad = jax.jit(jax.grad(
-            lambda p, traj: _interval_loss(policy_apply, p, traj, cfg)[0]))
-        self._update = jax.jit(
-            lambda dg, grads: delayed_grad.update(dg, grads, opt))
-
+        self._learn_fn = jax.jit(
+            make_learner_update(policy_apply, self.opt, cfg))
         obs_shape = env.obs_shape
-        spec = {
+        self._spec = {
             "obs": (obs_shape, np.float32 if obs_shape else np.int32),
             "actions": ((), np.int32),
             "rewards": ((), np.float32),
             "dones": ((), np.float32),
             "behavior_logprob": ((), np.float32),
         }
+        self._built = True
+
+    def init(self) -> None:
+        cfg = self.cfg
+        self._build()
+        self.master = jax.random.key(cfg.seed)
+        self.dg = delayed_grad.init(self.params0, self.opt)
+        spec = self._spec
         self.buffer = DoubleBuffer(cfg.alpha * cfg.n_envs, spec)
-        self.bootstrap_obs = np.zeros((cfg.n_envs,) + tuple(obs_shape),
+        self.bootstrap_obs = np.zeros((cfg.n_envs,) + tuple(spec["obs"][0]),
                                       spec["obs"][1])
         # per-env current state/obs
         keys = jax.random.split(jax.random.key(cfg.seed ^ 0x5EED),
@@ -158,26 +179,20 @@ class HostHTSRL:
             state, nobs, r, d = self._env_step(state, jnp.asarray(action),
                                                skey)
             nobs = np.asarray(nobs)
-            self.buffer.write_storage.data["obs"][t * cfg.n_envs + env_id] = obs
-            st = self.buffer.write_storage
-            idx = t * cfg.n_envs + env_id
-            st.data["actions"][idx] = action
-            st.data["rewards"][idx] = float(r)
-            st.data["dones"][idx] = float(d)
-            st.data["behavior_logprob"][idx] = blp
+            self.buffer.write_storage.write_slot(
+                t * cfg.n_envs + env_id,
+                obs=obs, actions=action, rewards=float(r), dones=float(d),
+                behavior_logprob=blp)
             obs = nobs
         with self.buffer.cv:
-            self.buffer.write_storage.write_idx = \
-                min(self.buffer.write_storage.write_idx + cfg.alpha,
-                    self.buffer.write_storage.capacity)
+            self.buffer.write_storage.advance(cfg.alpha)
         self.obs[env_id] = obs
         self.env_states[env_id] = state
         self.bootstrap_obs[env_id] = obs
 
     # ------------------------------------------------------------- learn
     def _learn(self, read_traj):
-        grads = self._grad(self.dg.params_prev, read_traj)
-        self.dg = self._update(self.dg, grads)
+        self.dg = self._learn_fn(self.dg, read_traj)
 
     def _storage_to_traj(self, storage, bootstrap_obs):
         # NOTE: explicit .copy() — jnp.asarray on the CPU backend can alias
@@ -193,11 +208,11 @@ class HostHTSRL:
         return out
 
     # --------------------------------------------------------------- run
-    def run(self, n_intervals: int):
+    def run(self, n_intervals: int) -> RunResult:
+        self.init()   # engine contract: every run starts from params0
         cfg = self.cfg
         t_start = time.perf_counter()
         prev_traj = None
-        prev_bootstrap = None
         for j in range(n_intervals):
             state_q: "queue.Queue" = queue.Queue()
             action_slots = {i: queue.Queue() for i in range(cfg.n_envs)}
@@ -233,12 +248,10 @@ class HostHTSRL:
         if prev_traj is not None:
             self._learn(prev_traj)
         self.wall_time = time.perf_counter() - t_start
-        return {
-            "params": self.dg.params,
-            "dg": self.dg,
-            "steps": self.sps_steps,
-            "wall_time": self.wall_time,
-            "sps": self.sps_steps / max(self.wall_time, 1e-9),
-            "rewards": np.stack(self.rewards_log),
-            "dones": np.stack(self.dones_log),
-        }
+        empty = np.zeros((0, cfg.alpha, cfg.n_envs), np.float32)
+        return RunResult(
+            params=self.dg.params, state=self.dg, steps=self.sps_steps,
+            wall_time=self.wall_time,
+            sps=self.sps_steps / max(self.wall_time, 1e-9),
+            rewards=np.stack(self.rewards_log) if self.rewards_log else empty,
+            dones=np.stack(self.dones_log) if self.dones_log else empty)

@@ -14,87 +14,89 @@ the threaded host runtime in tests/test_equivalence.py).
 
 The double buffer is positional in the scan carry: the freshly produced
 trajectory replaces the read slot for the next interval.
+
+The update math itself lives in repro.algorithms (selected by
+``cfg.algorithm``); this module is pure scheduling. ``make_hts_step``
+accepts an optional ``axis_name`` so the same fused step runs data-parallel
+under shard_map (core/sharded_runtime.py): gradients are all-reduced over
+that mesh axis and the rollout offsets its env ids by the shard index so
+the executor-seed determinism contract is preserved across any device
+count.
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, NamedTuple, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import delayed_grad, losses
+from repro import algorithms
+from repro.core import delayed_grad
+from repro.core.engine import (HTSConfig, RunResult,  # noqa: F401 (re-export)
+                               ScanRuntimeBase, register_runtime)
 from repro.core.rollout import RolloutConfig, rollout_interval
-from repro.envs.interfaces import Env
+from repro.envs.interfaces import Env, vectorize
 from repro.optim import Optimizer
 
 
-class HTSConfig(NamedTuple):
-    alpha: int = 16
-    n_envs: int = 16
-    gamma: float = 0.99
-    value_coef: float = 0.5
-    entropy_coef: float = 0.01
-    algorithm: str = "a2c"          # a2c | ppo
-    use_gae: bool = False
-    gae_lambda: float = 0.95
-    ppo_clip: float = 0.2
-    ppo_epochs: int = 2
-    seed: int = 0
-
-
 def _interval_loss(policy_apply, params, traj, cfg: HTSConfig):
-    """Loss over one interval's trajectory (alpha, n_envs, ...)."""
-    A, N = traj["actions"].shape
-    obs = traj["obs"]
-    flat_obs = obs.reshape((A * N,) + obs.shape[2:])
-    logits, values = policy_apply(params, flat_obs)
-    logits = logits.reshape(A, N, -1)
-    values = values.reshape(A, N)
-    _, bv = policy_apply(params, traj["bootstrap_obs"])
-    bv = jax.lax.stop_gradient(bv)
-    if cfg.use_gae:
-        adv, rets = losses.gae(traj["rewards"], traj["dones"],
-                               jax.lax.stop_gradient(values), bv,
-                               cfg.gamma, cfg.gae_lambda)
-    else:
-        rets = losses.n_step_returns(traj["rewards"], traj["dones"], bv,
-                                     cfg.gamma)
-        adv = rets - jax.lax.stop_gradient(values)
-    if cfg.algorithm == "ppo":
-        st = losses.ppo_loss(logits, values, traj["actions"], adv, rets,
-                             traj["behavior_logprob"], cfg.ppo_clip,
-                             cfg.value_coef, cfg.entropy_coef)
-    else:
-        st = losses.a2c_loss(logits, values, traj["actions"], adv, rets,
-                             cfg.value_coef, cfg.entropy_coef)
-    return st.total, st
+    """Loss over one interval's trajectory (alpha, n_envs, ...) — resolved
+    through the algorithm registry (kept as a function for callers that
+    predate repro.algorithms)."""
+    return algorithms.get_algorithm(cfg.algorithm).loss(
+        policy_apply, params, traj, cfg)
 
 
-def make_hts_step(policy_apply: Callable, env: Env, opt: Optimizer,
-                  cfg: HTSConfig):
-    """Build the fused HTS-RL interval step (pure, jit-able, pjit-able)."""
-    rcfg = RolloutConfig(cfg.alpha, cfg.n_envs)
-    master = jax.random.key(cfg.seed)
+def make_learner_update(policy_apply: Callable, opt: Optimizer,
+                        cfg: HTSConfig, axis_name: Optional[str] = None):
+    """The learner half: ``learn(dg, traj, skip) -> dg'``.
+
+    Differentiates the registry algorithm at ``dg.params_prev`` (the
+    behavior policy — Eq. 6) on ``traj``, all-reduces across
+    ``axis_name`` when data-parallel, and applies the one-step delayed
+    update. Exactly ONE update per interval: with both the
+    differentiation point (theta_{j-1}) and the PPO clip reference
+    (behavior_logprob) fixed, re-running "epochs" on the same interval
+    data would reproduce the identical gradient — true multi-epoch PPO
+    needs updates *between* epochs, which the delayed-gradient schedule
+    (and the cross-runtime bit-exactness contract) deliberately excludes.
+    """
     grad_fn = jax.grad(
         lambda p, traj: _interval_loss(policy_apply, p, traj, cfg)[0],
         has_aux=False)
 
+    def learn(dg, traj, skip=None):
+        grads = grad_fn(dg.params_prev, traj)
+        if axis_name is not None:
+            grads = jax.lax.pmean(grads, axis_name)
+        return delayed_grad.update(dg, grads, opt, skip=skip)
+
+    return learn
+
+
+def make_hts_step(policy_apply: Callable, env: Env, opt: Optimizer,
+                  cfg: HTSConfig, axis_name: Optional[str] = None):
+    """Build the fused HTS-RL interval step (pure, jit-able, pjit-able).
+
+    With ``axis_name`` the step is shard_map-ready: ``cfg.n_envs`` is the
+    *per-shard* replica count and env ids are globally offset by the shard
+    index, so seeds — and therefore trajectories — match the single-device
+    run exactly.
+    """
+    rcfg = RolloutConfig(cfg.alpha, cfg.n_envs)
+    master = jax.random.key(cfg.seed)
+    learn = make_learner_update(policy_apply, opt, cfg, axis_name)
+
     def step(carry, _):
         dg, env_state, obs, buf_read, j = carry
         # ---- learner half: delayed gradient at theta_{j-1} on D_{j-1}
-        grads = grad_fn(dg.params_prev, buf_read)
-        if cfg.algorithm == "ppo" and cfg.ppo_epochs > 1:
-            # extra epochs on the same interval data (still at theta_{j-1})
-            for _e in range(cfg.ppo_epochs - 1):
-                g2 = grad_fn(dg.params_prev, buf_read)
-                grads = jax.tree.map(lambda a, b: a + b, grads, g2)
-            grads = jax.tree.map(lambda g: g / cfg.ppo_epochs, grads)
-        dg_next = delayed_grad.update(dg, grads, opt, skip=(j == 0))
+        dg_next = learn(dg, buf_read, skip=(j == 0))
         # ---- rollout half: behavior policy is theta_j (pre-update)
+        offset = (jax.lax.axis_index(axis_name) * cfg.n_envs
+                  if axis_name is not None else 0)
         traj, env_state, obs = rollout_interval(
             policy_apply, env, dg.params, env_state, obs, master,
-            j * cfg.alpha, rcfg)
+            j * cfg.alpha, rcfg, env_offset=offset)
         metrics = {"rewards": traj["rewards"], "dones": traj["dones"]}
         return (dg_next, env_state, obs, traj, j + 1), metrics
 
@@ -120,7 +122,12 @@ def init_carry(policy_params, opt: Optimizer, env: Env, cfg: HTSConfig,
 
 def train(policy_params, policy_apply, env: Env, opt: Optimizer,
           cfg: HTSConfig, n_intervals: int, unroll: int = 1):
-    """Run n_intervals HTS-RL intervals. Returns (final carry, metrics)."""
+    """Run n_intervals HTS-RL intervals. Returns (final carry, metrics).
+
+    NOTE: the final interval's trajectory is left unconsumed in the carry
+    (its update would belong to interval n). ``MeshRuntime.run`` adds the
+    trailing learner pass so update counts line up across runtimes.
+    """
     step = make_hts_step(policy_apply, env, opt, cfg)
     carry = init_carry(policy_params, opt, env, cfg, policy_apply)
 
@@ -130,6 +137,44 @@ def train(policy_params, policy_apply, env: Env, opt: Optimizer,
 
     carry, metrics = run(carry)
     return carry, metrics
+
+
+@register_runtime("mesh")
+class MeshRuntime(ScanRuntimeBase):
+    """Engine port of the fused runtime (one XLA program per interval)."""
+
+    name = "mesh"
+
+    def __init__(self, env: Env, policy_apply: Callable, params,
+                 opt: Optimizer, cfg: HTSConfig):
+        super().__init__(env, policy_apply, params, opt, cfg)
+        self.venv = vectorize(env, cfg.n_envs)
+
+    def _build(self) -> None:
+        self._step = make_hts_step(self.policy_apply, self.venv, self.opt,
+                                   self.cfg)
+        self._learn = make_learner_update(self.policy_apply, self.opt,
+                                          self.cfg)
+
+    def _initial_carry(self):
+        return init_carry(self.params0, self.opt, self.venv, self.cfg,
+                          self.policy_apply)
+
+    def _program(self, n_intervals: int):
+        def go(carry):
+            carry, metrics = jax.lax.scan(self._step, carry, None,
+                                          length=n_intervals)
+            # trailing learner pass on the final interval's data, so
+            # run(n) applies exactly n updates (matching the host
+            # runtime); skip guards the n=0 edge (buffer still zeros)
+            dg, env_state, obs, buf, j = carry
+            dg = self._learn(dg, buf, skip=(j == 0))
+            return (dg, env_state, obs, buf, j), metrics
+
+        return jax.jit(go)
+
+    def _result_state(self, carry):
+        return carry[0].params, carry[0]
 
 
 def episode_returns(metrics) -> jnp.ndarray:

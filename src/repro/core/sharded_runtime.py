@@ -1,0 +1,98 @@
+"""Data-parallel HTS-RL: the fused interval step under ``shard_map``.
+
+The first runtime that scales ``n_envs`` past one device. Environment
+replicas are sharded along the mesh's ``data`` axis (launch/mesh.py);
+each shard runs the SAME fused learner+rollout program as the mesh
+runtime over its local slice, and the one-step delayed gradient crosses
+replicas through a single ``pmean`` all-reduce before the update — the
+only inter-device communication per interval (params stay replicated,
+matching the paper's learner/actor split where only the update is
+global).
+
+Determinism is preserved across device counts: rollout env ids are offset
+by ``axis_index('data') * n_envs_local``, so env replica e draws exactly
+the (run_seed, e, step) keys it would on one device, whichever shard
+hosts it. On a 1-device mesh the program is bit-identical to the mesh
+runtime (tests/test_equivalence.py); on d devices only the gradient
+reduction order changes (per-shard mean, then cross-shard mean), so
+parameters agree to float tolerance while trajectories stay bit-exact.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core import mesh_runtime
+from repro.core.engine import (HTSConfig, ScanRuntimeBase,
+                               register_runtime)
+from repro.envs.interfaces import Env, vectorize
+from repro.launch.mesh import make_host_mesh
+from repro.optim import Optimizer
+
+
+@register_runtime("sharded")
+class ShardedHTSRL(ScanRuntimeBase):
+    name = "sharded"
+
+    def __init__(self, env: Env, policy_apply: Callable, params,
+                 opt: Optimizer, cfg: HTSConfig, mesh=None,
+                 axis: str = "data"):
+        super().__init__(env, policy_apply, params, opt, cfg)
+        self.mesh = mesh if mesh is not None else make_host_mesh()
+        self.axis = axis
+        n_shards = self.mesh.shape[axis]
+        if cfg.n_envs % n_shards:
+            raise ValueError(
+                f"n_envs={cfg.n_envs} not divisible by the {n_shards}-way "
+                f"'{axis}' mesh axis")
+        self.n_shards = n_shards
+        self.lcfg = cfg._replace(n_envs=cfg.n_envs // n_shards)
+        self.venv_local = vectorize(env, self.lcfg.n_envs)
+        self.venv_global = vectorize(env, cfg.n_envs)
+
+    def _build(self) -> None:
+        self._step = mesh_runtime.make_hts_step(
+            self.policy_apply, self.venv_local, self.opt, self.lcfg,
+            axis_name=self.axis)
+        self._learn = mesh_runtime.make_learner_update(
+            self.policy_apply, self.opt, self.lcfg, axis_name=self.axis)
+
+    def _initial_carry(self):
+        # global carry (identical to the mesh runtime's); shard_map slices
+        # the env/trajectory leaves along the data axis per in_specs
+        return mesh_runtime.init_carry(
+            self.params0, self.opt, self.venv_global, self.cfg,
+            self.policy_apply)
+
+    def _carry_specs(self, carry):
+        dg, env_state, obs, buf, j = carry
+        rep = lambda tree: jax.tree.map(lambda _: P(), tree)
+        shard0 = lambda tree: jax.tree.map(lambda _: P(self.axis), tree)
+        buf_spec = {k: (P(self.axis) if k == "bootstrap_obs"
+                        else P(None, self.axis)) for k in buf}
+        return (rep(dg), shard0(env_state), P(self.axis), buf_spec, P())
+
+    def _program(self, n_intervals: int):
+        carry_specs = self._carry_specs(self.carry)
+        metric_specs = {"rewards": P(None, None, self.axis),
+                        "dones": P(None, None, self.axis)}
+
+        def body(carry):
+            carry, metrics = jax.lax.scan(self._step, carry, None,
+                                          length=n_intervals)
+            # trailing learner pass (same update-count contract as
+            # host/mesh); skip guards the n=0 edge (buffer still zeros)
+            dg, env_state, obs, buf, j = carry
+            dg = self._learn(dg, buf, skip=(j == 0))
+            return (dg, env_state, obs, buf, j), metrics
+
+        return jax.jit(shard_map(body, mesh=self.mesh,
+                                 in_specs=(carry_specs,),
+                                 out_specs=(carry_specs, metric_specs),
+                                 check_rep=False))
+
+    def _result_state(self, carry):
+        return carry[0].params, carry[0]

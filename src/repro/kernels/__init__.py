@@ -1,3 +1,30 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernels (flash attention, LRU scan, WKV6) with CPU fallbacks.
+
+Each kernel package exposes three layers:
+
+  kernel.py  — the Pallas implementation (TPU-shaped grids/blocks);
+  ref.py     — a pure-jnp oracle, used for testing and as a fallback;
+  ops.py     — the jit'd public wrapper that auto-routes per backend.
+
+Routing: on TPU the Pallas kernel runs compiled; anywhere else it runs in
+``interpret=True`` mode (bit-faithful to the kernel semantics, slow), or
+callers can force the jnp oracle with ``use_pallas=False``.
+``resolve_backend`` centralizes that decision so the three wrappers stay
+in sync.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve_backend(use_pallas, interpret):
+    """Fill in auto (None) routing flags: (use_pallas, interpret)."""
+    if use_pallas is None:
+        use_pallas = True
+    if interpret is None:
+        interpret = not on_tpu()
+    return use_pallas, interpret

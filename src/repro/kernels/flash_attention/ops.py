@@ -20,8 +20,13 @@ from repro.kernels.flash_attention.ref import flash_attention_ref
                                              "interpret"))
 def attend(q, k, v, *, causal: bool = True, window: int = 0,
            cap: float = 0.0, bq: int = 128, bk: int = 128,
-           use_pallas: bool = True, interpret: bool = True):
-    """q: (B, S, H, Dh); k, v: (B, S, KV, Dh) -> (B, S, H, Dh)."""
+           use_pallas: bool | None = None, interpret: bool | None = None):
+    """q: (B, S, H, Dh); k, v: (B, S, KV, Dh) -> (B, S, H, Dh).
+
+    use_pallas/interpret default to auto-routing per backend: compiled
+    Pallas on TPU, interpreted Pallas elsewhere (repro.kernels)."""
+    from repro.kernels import resolve_backend
+    use_pallas, interpret = resolve_backend(use_pallas, interpret)
     B, Sq, H, Dh = q.shape
     Sk = k.shape[1]
     qt = jnp.transpose(q, (0, 2, 1, 3))

@@ -11,8 +11,12 @@ from repro.kernels.lru_scan.ref import lru_scan_ref
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "chunk", "bd",
                                              "interpret"))
-def scan(a, b, h0=None, *, use_pallas: bool = True, chunk: int = 256,
-         bd: int = 512, interpret: bool = True):
+def scan(a, b, h0=None, *, use_pallas: bool | None = None, chunk: int = 256,
+         bd: int = 512, interpret: bool | None = None):
+    """use_pallas/interpret default to auto-routing per backend: compiled
+    Pallas on TPU, interpreted Pallas elsewhere (repro.kernels)."""
+    from repro.kernels import resolve_backend
+    use_pallas, interpret = resolve_backend(use_pallas, interpret)
     if use_pallas:
         return lru_scan(a, b, h0, chunk=chunk, bd=bd, interpret=interpret)
     return lru_scan_ref(a, b, h0)

@@ -11,8 +11,12 @@ from repro.kernels.wkv6.ref import wkv6_ref
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "chunk",
                                              "interpret"))
-def mix(r, k, v, w, u, s0=None, *, use_pallas: bool = True,
-        chunk: int = 128, interpret: bool = True):
+def mix(r, k, v, w, u, s0=None, *, use_pallas: bool | None = None,
+        chunk: int = 128, interpret: bool | None = None):
+    """use_pallas/interpret default to auto-routing per backend: compiled
+    Pallas on TPU, interpreted Pallas elsewhere (repro.kernels)."""
+    from repro.kernels import resolve_backend
+    use_pallas, interpret = resolve_backend(use_pallas, interpret)
     if use_pallas:
         return wkv6(r, k, v, w, u, s0, chunk=chunk, interpret=interpret)
     return wkv6_ref(r, k, v, w, u, s0)

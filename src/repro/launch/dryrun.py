@@ -28,7 +28,8 @@ from jax.sharding import PartitionSpec as P  # noqa: E402
 from repro.configs.base import get_config, list_configs  # noqa: E402
 from repro.core import delayed_grad, learner  # noqa: E402
 from repro.launch import specs as specs_mod  # noqa: E402
-from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.mesh import (as_shardings, make_production_mesh,  # noqa: E402
+                               use_mesh)
 from repro.models import backbone  # noqa: E402
 from repro.optim import rmsprop, adam  # noqa: E402
 from repro.roofline import analysis, hlo_cost  # noqa: E402
@@ -73,7 +74,7 @@ def lower_one(arch: str, shape_name: str, mesh_name: str,
     opt = rmsprop(7e-4, eps=1e-5) if opt_name == "rmsprop" else adam(1e-4)
 
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         if shape.kind == "train":
             batch = specs_mod.train_batch_specs(cfg, shape)
             dg_abs = jax.eval_shape(
@@ -84,8 +85,11 @@ def lower_one(arch: str, shape_name: str, mesh_name: str,
                                            n_microbatches=micro)
             out_abs = jax.eval_shape(step, dg_abs, batch)
             out_specs = (dg_specs, jax.tree.map(lambda _: P(), out_abs[1]))
-            fn = jax.jit(step, in_shardings=(dg_specs, b_specs),
-                         out_shardings=out_specs, donate_argnums=(0,))
+            fn = jax.jit(step,
+                         in_shardings=as_shardings(mesh,
+                                                   (dg_specs, b_specs)),
+                         out_shardings=as_shardings(mesh, out_specs),
+                         donate_argnums=(0,))
             lowered = fn.lower(dg_abs, batch)
         elif shape.kind == "prefill":
             batch = specs_mod.prefill_batch_specs(cfg, shape)
@@ -96,8 +100,10 @@ def lower_one(arch: str, shape_name: str, mesh_name: str,
                                      mesh)
             value_s = rules.resolve(("batch",), out_abs[1].shape, mesh)
             cache_s = rules.cache_pspecs(out_abs[2], cfg, mesh)
-            fn = jax.jit(step, in_shardings=(pspecs, b_specs),
-                         out_shardings=(logits_s, value_s, cache_s))
+            fn = jax.jit(step,
+                         in_shardings=as_shardings(mesh, (pspecs, b_specs)),
+                         out_shardings=as_shardings(
+                             mesh, (logits_s, value_s, cache_s)))
             lowered = fn.lower(abstract_params, batch)
         else:   # decode
             token, cache_abs, pos, extras = specs_mod.decode_specs(cfg, shape)
@@ -111,8 +117,10 @@ def lower_one(arch: str, shape_name: str, mesh_name: str,
                                      mesh)
             value_s = rules.resolve(("batch",), out_abs[1].shape, mesh)
             fn = jax.jit(step,
-                         in_shardings=(pspecs, tok_s, cache_s, P(), ex_s),
-                         out_shardings=(logits_s, value_s, cache_s),
+                         in_shardings=as_shardings(
+                             mesh, (pspecs, tok_s, cache_s, P(), ex_s)),
+                         out_shardings=as_shardings(
+                             mesh, (logits_s, value_s, cache_s)),
                          donate_argnums=(2,))
             lowered = fn.lower(abstract_params, token, cache_abs, pos,
                                extras)

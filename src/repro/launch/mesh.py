@@ -3,24 +3,55 @@
 A FUNCTION, not a module constant — importing this module must never touch
 jax device state (smoke tests run on 1 CPU device; only dryrun.py forces
 512 host devices).
+
+Also hosts the version-compat shims: ``jax.sharding.AxisType`` and
+``jax.set_mesh`` only exist on newer jax; on the pinned 0.4.x the plain
+mesh plus the ``Mesh`` context manager provide identical semantics for
+our (fully ``Auto``) usage.
 """
 from __future__ import annotations
 
 import jax
 
 
+def _make_mesh(shape, axes):
+    if hasattr(jax.sharding, "AxisType"):   # jax >= 0.5
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh():
-    """Whatever devices exist locally, as a 1D 'data' mesh (examples/tests)."""
+    """Whatever devices exist locally, as a 1D 'data' mesh (examples/tests
+    and the sharded data-parallel runtime)."""
     n = len(jax.devices())
-    return jax.make_mesh((n,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return _make_mesh((n,), ("data",))
+
+
+def use_mesh(mesh):
+    """Context manager installing ``mesh`` for PartitionSpec resolution:
+    ``jax.set_mesh`` where available, the Mesh context manager otherwise."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh   # jax.sharding.Mesh is itself a context manager
+
+
+def as_shardings(mesh, spec_tree):
+    """PartitionSpec pytree -> NamedSharding pytree for jit in/out_shardings
+    (jax 0.4.x rejects raw PartitionSpecs there; NamedSharding works on
+    every version). PartitionSpec subclasses tuple, so mark it as a leaf."""
+    from jax.sharding import NamedSharding, PartitionSpec
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, PartitionSpec)
+        else s,
+        spec_tree, is_leaf=lambda x: isinstance(x, PartitionSpec))
 
 
 # TPU v5e hardware constants used by the roofline analysis.

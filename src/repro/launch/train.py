@@ -18,11 +18,13 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import algorithms
 from repro.checkpoint import io as ckpt_io
 from repro.configs.base import get_config
 from repro.core import delayed_grad, learner
 from repro.data.pipeline import TokenStream
-from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.mesh import (as_shardings, make_host_mesh,
+                               make_production_mesh, use_mesh)
 from repro.models import backbone
 from repro.optim import adam, rmsprop
 from repro.sharding import rules
@@ -37,6 +39,9 @@ def main():
     ap.add_argument("--seq", type=int, default=32)
     ap.add_argument("--lr", type=float, default=1e-4)
     ap.add_argument("--opt", default="adam", choices=["adam", "rmsprop"])
+    # the token-trajectory learner implements only these two registry
+    # algorithms (stale-correction algorithms need behavior-lagged
+    # rollouts, which TokenStream does not produce)
     ap.add_argument("--algorithm", default="a2c", choices=["a2c", "ppo"])
     ap.add_argument("--mesh", default="host", choices=["host", "pod",
                                                        "multipod"])
@@ -56,7 +61,10 @@ def main():
 
     params = backbone.init_params(cfg, jax.random.key(0))
     dg = delayed_grad.init(params, opt)
-    step_fn = learner.make_train_step(cfg, opt, args.algorithm)
+    # resolve through the registry so launcher strings and runtime
+    # algorithms stay one namespace
+    alg = algorithms.get_algorithm(args.algorithm)
+    step_fn = learner.make_train_step(cfg, opt, alg.name)
 
     pspecs = rules.param_pspecs(jax.eval_shape(lambda: params), mesh)
     dg_specs = rules.dg_state_pspecs(
@@ -68,9 +76,12 @@ def main():
                  jax.tree.map(lambda _: P(),
                               jax.eval_shape(step_fn, dg, sample)[1]))
 
-    with jax.set_mesh(mesh):
-        jstep = jax.jit(step_fn, in_shardings=(dg_specs, b_specs),
-                        out_shardings=out_specs, donate_argnums=(0,))
+    with use_mesh(mesh):
+        jstep = jax.jit(
+            step_fn,
+            in_shardings=as_shardings(mesh, (dg_specs, b_specs)),
+            out_shardings=as_shardings(mesh, out_specs),
+            donate_argnums=(0,))
         t0 = time.time()
         for i in range(args.steps):
             batch = stream.next_batch()

@@ -33,6 +33,19 @@ from repro.models import attention, layers, moe, rglru, rwkv6
 from repro.sharding.constraints import constrain
 
 
+@jax.custom_jvp
+def _residual_barrier(x):
+    # optimization_barrier has no differentiation rule on the pinned jax;
+    # the barrier only constrains scheduling, so its JVP is the identity.
+    return jax.lax.optimization_barrier(x)
+
+
+@_residual_barrier.defjvp
+def _residual_barrier_jvp(primals, tangents):
+    (x,), (t,) = primals, tangents
+    return jax.lax.optimization_barrier(x), t
+
+
 # ------------------------------------------------------------- layer init
 def _init_layer(key, cfg: ModelConfig, mixer_kind: str, ffn_kind: str,
                 cross: bool):
@@ -231,7 +244,7 @@ def forward(params, cfg: ModelConfig, tokens, *, positions=None,
             # conversion (first op of the norm) out of the backward loop,
             # which would materialize a second, f32 copy of the entire
             # stacked per-block residual.
-            x = jax.lax.optimization_barrier(x)
+            x = _residual_barrier(x)
             y, _, a = apply_block(x, bp, None)
             return y, a
 

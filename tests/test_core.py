@@ -35,7 +35,11 @@ def test_delayed_gradient_skip():
     assert jnp.allclose(dg2.params["w"], params["w"])
     assert jnp.allclose(dg2.opt_state["sq"]["w"],
                         jnp.zeros(3))
-    assert int(dg2.step) == 1
+    # skipped updates don't count: step == number of updates applied
+    assert int(dg2.step) == 0
+    dg3 = delayed_grad.update(dg2, {"w": jnp.ones(3)}, opt,
+                              skip=jnp.bool_(False))
+    assert int(dg3.step) == 1
 
 
 def test_double_buffer_swap_discipline():

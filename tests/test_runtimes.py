@@ -94,13 +94,17 @@ def test_async_staleness_changes_training():
     sstep = make_sync_step(papply, venv, opt, cfg)
     sc = sync_init_carry(params, opt, venv, cfg)
 
+    # 8 intervals: over the first few intervals the tiny rmsprop updates
+    # can leave the stale policy sampling identical actions (identical
+    # trajectories -> identical params); by interval ~5 the k=4 lag has
+    # produced at least one different action and the runs split for good.
     @jax.jit
     def run_async(c):
-        return jax.lax.scan(astep, c, None, length=4)
+        return jax.lax.scan(astep, c, None, length=8)
 
     @jax.jit
     def run_sync(c):
-        return jax.lax.scan(sstep, c, None, length=4)
+        return jax.lax.scan(sstep, c, None, length=8)
 
     (ap, *_), _ = run_async(ac)
     (sp, *_), _ = run_sync(sc)
