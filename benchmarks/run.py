@@ -4,13 +4,19 @@
     PYTHONPATH=src python -m benchmarks.run --runtime host,mesh,sharded
     PYTHONPATH=src python -m benchmarks.run --runtime mesh \
         --append-sps BENCH_sps.json        # CI smoke: append a JSON line
+    PYTHONPATH=src python -m benchmarks.run --runtime host,mesh,sharded \
+        --ckpt-dir bench_ckpt --resume     # restartable long sweep
 
 Prints ``name,value,unit`` CSV rows per benchmark. ``--runtime`` runs the
 registry SPS sweep (benchmarks/engine_sps.py) for the named engine
-runtimes instead of the paper tables.
+runtimes instead of the paper tables. With ``--ckpt-dir`` the sweep
+records each completed runtime in ``<dir>/sweep_progress.json`` after it
+finishes; ``--resume`` replays recorded rows instead of re-timing them,
+so a preempted multi-hour sweep restarts where it died.
 """
 import argparse
 import json
+import os
 import sys
 import time
 import traceback
@@ -31,21 +37,59 @@ MODULES = [
 ]
 
 
+def _progress_path(args) -> str:
+    return os.path.join(args.ckpt_dir, "sweep_progress.json")
+
+
+def _load_progress(args) -> dict:
+    if not (args.ckpt_dir and args.resume):
+        return {}
+    try:
+        with open(_progress_path(args)) as f:
+            saved = json.load(f)
+    except (OSError, ValueError):
+        return {}
+    # completed runtimes are only reusable if the sweep shape matches
+    if saved.get("intervals") != args.intervals:
+        return {}
+    return saved.get("done", {})
+
+
+def _save_progress(args, done: dict) -> None:
+    os.makedirs(args.ckpt_dir, exist_ok=True)
+    tmp = _progress_path(args) + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump({"intervals": args.intervals, "done": done}, f, indent=1)
+    os.replace(tmp, _progress_path(args))
+
+
 def _run_runtime_sweep(args) -> None:
     from benchmarks import engine_sps
     names = args.runtime.split(",")
     t0 = time.time()
     rows, failed = [], 0
+    done = _load_progress(args)
+    restored = []
     print("name,value,unit")
     for rt_name in names:          # per-runtime isolation, like the tables
-        try:
-            sub = engine_sps.run(runtimes=[rt_name],
-                                 intervals=args.intervals)
-        except Exception:
-            failed += 1
-            print(f"# runtime {rt_name} FAILED:\n{traceback.format_exc()}",
+        if rt_name in done:        # resumed: replay the recorded rows
+            sub = [tuple(row) for row in done[rt_name]]
+            restored.append(rt_name)
+            print(f"# runtime {rt_name} restored from checkpoint",
                   file=sys.stderr, flush=True)
-            continue
+        else:
+            try:
+                sub = engine_sps.run(runtimes=[rt_name],
+                                     intervals=args.intervals)
+            except Exception:
+                failed += 1
+                print(f"# runtime {rt_name} FAILED:\n"
+                      f"{traceback.format_exc()}",
+                      file=sys.stderr, flush=True)
+                continue
+            if args.ckpt_dir:
+                done[rt_name] = sub
+                _save_progress(args, done)
         rows.extend(sub)
         for name, value, unit in sub:
             print(f"{name},{value:.6g},{unit}", flush=True)
@@ -56,6 +100,10 @@ def _run_runtime_sweep(args) -> None:
             "wall_s": round(time.time() - t0, 2),
             "sps": {name: round(value, 2) for name, value, _ in rows},
         }
+        if restored:
+            # replayed rows carry an older measurement's numbers — flag
+            # them so the bench trajectory isn't polluted silently
+            record["restored_runtimes"] = restored
         with open(args.append_sps, "a") as f:
             f.write(json.dumps(record) + "\n")
         print(f"# appended to {args.append_sps}", file=sys.stderr,
@@ -77,12 +125,22 @@ def main() -> None:
     ap.add_argument("--append-sps", default=None, metavar="FILE",
                     help="with --runtime: append the sweep as a JSON line "
                          "to FILE (e.g. BENCH_sps.json)")
+    ap.add_argument("--ckpt-dir", default=None, metavar="DIR",
+                    help="with --runtime: record per-runtime results in "
+                         "DIR/sweep_progress.json as they complete")
+    ap.add_argument("--resume", action="store_true",
+                    help="with --ckpt-dir: skip runtimes already recorded "
+                         "(restartable long sweeps)")
     args = ap.parse_args()
     if args.runtime and args.only:
         ap.error("--only filters the paper tables; it does not combine "
                  "with --runtime (the registry sweep)")
     if args.append_sps and not args.runtime:
         ap.error("--append-sps requires --runtime")
+    if args.resume and not args.ckpt_dir:
+        ap.error("--resume requires --ckpt-dir")
+    if args.ckpt_dir and not args.runtime:
+        ap.error("--ckpt-dir applies to the --runtime sweep")
 
     if args.runtime:
         _run_runtime_sweep(args)

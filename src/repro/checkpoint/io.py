@@ -1,9 +1,20 @@
-"""Checkpointing: flat .npz with pytree structure manifest (orbax is not
-available offline; this is self-contained and deterministic).
+"""Checkpointing: flat .npz with a versioned pytree manifest (orbax is
+not available offline; this is self-contained and deterministic).
 
-Saves the full DelayedGradState — params, params_prev (the behavior
-snapshot matters: restoring only params would silently reset the
-one-step delay), optimizer state, and step.
+A checkpoint is two files: ``<path>.npz`` with the leaves and
+``<path>.json`` with the manifest — format version, the flattened
+treedef, per-leaf dtypes/shapes, and caller metadata. ``restore``
+validates leaf count, tree structure, shapes, and dtypes against the
+``like`` template and fails with a precise error instead of silently
+unflattening mismatched leaves in flatten order.
+
+Works on any pure-array pytree: a full ``DelayedGradState`` (params,
+params_prev — the behavior snapshot matters: restoring only params would
+silently reset the one-step delay), or an engine ``TrainState`` capsule
+(core/engine.py). Sharded ``jax.Array`` leaves (e.g. from the sharded
+runtime's shard_map programs) are gathered with ``jax.device_get`` before
+writing, so a checkpoint taken on an N-device mesh restores on any
+device count.
 """
 from __future__ import annotations
 
@@ -16,10 +27,15 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+FORMAT_VERSION = 1
 
-def _flatten(tree: Any):
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
-    return leaves, str(treedef)
+
+def _to_numpy(leaf) -> np.ndarray:
+    # device_get gathers sharded jax.Arrays to one host buffer; plain
+    # numpy/python leaves pass through
+    if isinstance(leaf, jax.Array):
+        leaf = jax.device_get(leaf)
+    return np.asarray(leaf)
 
 
 def save(path: str, tree: Any, metadata: dict | None = None) -> None:
@@ -29,31 +45,84 @@ def save(path: str, tree: Any, metadata: dict | None = None) -> None:
     # numpy's savez has no bf16 cast path: store bf16 leaves as f32
     # (lossless upcast) and restore back to the reference dtype.
     arrays = {}
+    dtypes, shapes = [], []
     for i, a in enumerate(leaves):
-        arr = np.asarray(a)
+        arr = _to_numpy(a)
+        dtypes.append(str(arr.dtype))
+        shapes.append(list(arr.shape))
         if arr.dtype.name == "bfloat16":
             arr = arr.astype(np.float32)
         arrays[f"leaf_{i}"] = arr
-    np.savez(path.with_suffix(".npz"), **arrays)
     manifest = {
+        "version": FORMAT_VERSION,
         "n_leaves": len(leaves),
-        "dtypes": [str(np.asarray(a).dtype) for a in leaves],
+        "treedef": str(treedef),
+        "dtypes": dtypes,
+        "shapes": shapes,
         "metadata": metadata or {},
     }
-    path.with_suffix(".json").write_text(json.dumps(manifest, indent=1))
+    # both files go through write-tmp + atomic rename, npz before
+    # manifest: a kill mid-save leaves either no .json (fresh path — so
+    # latest(), which globs manifests, never selects it) or, when
+    # overwriting an existing checkpoint, the intact OLD npz/json pair —
+    # never a torn npz behind a valid manifest
+    npz_tmp = path.with_suffix(".npz.tmp")
+    with open(npz_tmp, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(npz_tmp, path.with_suffix(".npz"))
+    json_tmp = path.with_suffix(".json.tmp")
+    json_tmp.write_text(json.dumps(manifest, indent=1))
+    os.replace(json_tmp, path.with_suffix(".json"))
+
+
+def load_manifest(path: str) -> dict | None:
+    p = Path(path).with_suffix(".json")
+    return json.loads(p.read_text()) if p.exists() else None
+
+
+def load_metadata(path: str) -> dict:
+    """The caller-supplied metadata dict saved alongside the arrays."""
+    m = load_manifest(path)
+    return (m or {}).get("metadata", {})
 
 
 def restore(path: str, like: Any) -> Any:
-    """Restore into the structure of ``like`` (shape/dtype validated)."""
+    """Restore into the structure of ``like`` (an equal-structure pytree
+    of arrays or ShapeDtypeStructs). Tree structure, leaf count, shapes,
+    and dtypes are all validated against both the template and the
+    manifest before a single leaf is unflattened."""
     path = Path(path)
     data = np.load(path.with_suffix(".npz"))
     leaves, treedef = jax.tree_util.tree_flatten(like)
+    manifest = load_manifest(path)
+    if manifest is not None:
+        n = manifest.get("n_leaves")
+        if n is not None and n != len(leaves):
+            raise ValueError(
+                f"checkpoint {path.name} has {n} leaves but the restore "
+                f"template has {len(leaves)} — the pytree structure "
+                f"changed (different model/optimizer/runtime config?)")
+        want = manifest.get("treedef")
+        if want is not None and want != str(treedef):
+            raise ValueError(
+                f"checkpoint {path.name} tree structure mismatch:\n"
+                f"  saved:    {want}\n  template: {treedef}")
+    if len(data.files) != len(leaves):
+        raise ValueError(
+            f"checkpoint {path.name} holds {len(data.files)} arrays but "
+            f"the restore template has {len(leaves)} leaves")
     out = []
     for i, ref in enumerate(leaves):
         arr = data[f"leaf_{i}"]
         if tuple(arr.shape) != tuple(ref.shape):
             raise ValueError(
                 f"leaf {i}: checkpoint shape {arr.shape} != {ref.shape}")
+        if manifest is not None:
+            saved_dt = manifest.get("dtypes", [None] * len(leaves))[i]
+            if saved_dt is not None and saved_dt != str(ref.dtype):
+                raise ValueError(
+                    f"leaf {i}: checkpoint dtype {saved_dt} != template "
+                    f"dtype {ref.dtype}")
         out.append(jnp.asarray(arr).astype(ref.dtype))
     return jax.tree_util.tree_unflatten(treedef, out)
 
@@ -62,5 +131,5 @@ def latest(dirpath: str) -> str | None:
     d = Path(dirpath)
     if not d.exists():
         return None
-    cands = sorted(d.glob("step_*.npz"))
+    cands = sorted(d.glob("step_*.json"))
     return str(cands[-1].with_suffix("")) if cands else None

@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.algorithms import vtrace as vtrace_alg
-from repro.core.engine import (HTSConfig, ScanRuntimeBase,
+from repro.core.engine import (HTSConfig, ScanRuntimeBase, TrainState,
                                register_runtime)
 from repro.core.mesh_runtime import _interval_loss
 from repro.core.rollout import RolloutConfig, rollout_interval
@@ -142,6 +142,17 @@ class SyncRuntime(_BaselineRuntime):
     def _initial_carry(self):
         return sync_init_carry(self.params0, self.opt, self.venv, self.cfg)
 
+    # sync consumes each interval immediately — no unconsumed buffer,
+    # so the TrainState capsule's ``buffer`` is empty
+    def _carry_to_state(self, carry) -> TrainState:
+        params, opt_state, env_state, obs, j = carry
+        return TrainState((params, opt_state), env_state, obs, {}, j)
+
+    def _state_to_carry(self, state: TrainState):
+        params, opt_state = state.algo
+        return (params, opt_state, state.env_state, state.obs,
+                state.interval)
+
 
 @register_runtime("async")
 class AsyncRuntime(_BaselineRuntime):
@@ -162,3 +173,16 @@ class AsyncRuntime(_BaselineRuntime):
     def _initial_carry(self):
         return async_init_carry(self.params0, self.opt, self.venv, self.cfg,
                                 self.acfg)
+
+    # the stale-snapshot FIFO is part of the schedule: dropping it on
+    # resume would reset the behavior lag to zero and break the
+    # run(a+b) == run(a)+run_from(b) contract
+    def _carry_to_state(self, carry) -> TrainState:
+        params, opt_state, history, env_state, obs, j = carry
+        return TrainState((params, opt_state, history), env_state, obs,
+                          {}, j)
+
+    def _state_to_carry(self, state: TrainState):
+        params, opt_state, history = state.algo
+        return (params, opt_state, history, state.env_state, state.obs,
+                state.interval)

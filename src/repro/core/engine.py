@@ -13,6 +13,12 @@ This module pins down the scheduling side:
     ``run(n)`` exactly ``n`` delayed-gradient (or plain) updates have been
     applied, so different runtimes are directly comparable (and, for the
     HTS family, bit-identical — tests/test_equivalence.py).
+  * ``TrainState`` — the continuation capsule: ``state()`` captures it,
+    ``run_from(state, n)`` continues from it. The contract
+    (tests/test_continuation.py): ``run(a + b)`` is bit-identical to
+    ``run(a)`` + ``state()`` + ``run_from(state, b)``, with a checkpoint
+    save/restore round-trip (repro.checkpoint.io) allowed at every
+    boundary.
   * the registry  — ``get_runtime(name)`` / ``make_runtime(name, ...)``
     resolve the built-ins lazily (so importing the engine never drags in
     threading or shard_map machinery):
@@ -55,6 +61,35 @@ class HTSConfig(NamedTuple):
     seed: int = 0
 
 
+class TrainState(NamedTuple):
+    """Everything a runtime needs to continue training bit-exactly — the
+    checkpoint capsule (a pure-array pytree, so repro.checkpoint.io can
+    round-trip it with no custom serialization).
+
+    * ``algo``      — the update-rule state: a ``DelayedGradState`` for the
+      HTS family (params + behavior snapshot + opt state + step), a
+      ``(params, opt_state)`` tuple for the sync baseline, and
+      ``(params, opt_state, history)`` for the async baseline (the stale
+      snapshot FIFO is part of the schedule, so it must survive a resume —
+      otherwise the resumed policy lag would differ from the straight run).
+    * ``env_state`` — stacked per-replica environment state (n_envs, ...).
+    * ``obs``       — current observations (n_envs, ...).
+    * ``buffer``    — double-buffer occupancy: the read storage's
+      UNCONSUMED trajectory, i.e. the data the next interval's learner
+      will differentiate on ({} for baselines, which consume immediately).
+    * ``interval``  — the global interval counter j (int32 scalar). It
+      seeds the rollout step offset (j * alpha), so resuming at j draws
+      exactly the (run_seed, env_id, step) PRNG keys the straight run
+      would — the PRNG itself needs NO state in the capsule, because keys
+      are pure functions of (seed, env_id, step) (DESIGN.md §3).
+    """
+    algo: Any
+    env_state: Any
+    obs: Any
+    buffer: Any
+    interval: Any
+
+
 @dataclass
 class RunResult:
     """What every runtime returns from ``run``.
@@ -95,6 +130,27 @@ class Runtime(Protocol):
         programs are cached across calls; only training state resets."""
         ...
 
+    def state(self) -> TrainState:
+        """Capture the continuation capsule. After ``run``/``run_from``
+        this is the MID-STREAM state (the final interval's trajectory
+        still unconsumed in ``buffer``); the RunResult's ``params`` are
+        one reporting-only update ahead of ``state().algo`` because the
+        trailing learner pass is never folded into the stream — that is
+        what makes ``run(a+b) == run(a); run_from(state, b)`` exact."""
+        ...
+
+    def run_from(self, state: TrainState, n_intervals: int,
+                 finalize: bool = True) -> RunResult:
+        """Continue for ``n_intervals`` more intervals from ``state``
+        (typically ``state()`` of a previous segment, possibly after a
+        checkpoint round-trip). ``run(n)`` ≡ ``run_from(initial state, n)``
+        ≡ any partition of n into ``run_from`` segments, bit-exactly.
+        ``finalize=False`` skips the reporting-only trailing pass (the
+        returned params are then mid-stream) — callers that only stream
+        metrics per segment, like the trainer, avoid paying an extra
+        learner update per checkpoint."""
+        ...
+
 
 class ScanRuntimeBase:
     """Shared plumbing for every scan-based runtime (mesh, sharded, sync,
@@ -107,6 +163,16 @@ class ScanRuntimeBase:
       _program(n)       callable (carry) -> (carry', metrics); the default
                         jits a scan of ``self._step``
       _result_state(c)  (params, state) out of the final carry
+
+    plus four continuation hooks with defaults for the HTS carry shape
+    ``(algo, env_state, obs, buffer, j)``:
+
+      _carry_to_state(c) / _state_to_carry(s)   TrainState <-> carry
+      _finalize(c)      consume the unconsumed read buffer for REPORTING
+                        only (the HTS trailing learner pass); identity for
+                        baselines. ``self.carry`` is never finalized — it
+                        stays mid-stream so ``run_from`` cannot
+                        double-consume an interval.
     """
 
     name: str = "?"
@@ -136,6 +202,21 @@ class ScanRuntimeBase:
     def _result_state(self, carry):
         raise NotImplementedError
 
+    # ------------------------------------------------- continuation hooks
+    def _carry_to_state(self, carry) -> TrainState:
+        algo, env_state, obs, buf, j = carry
+        return TrainState(algo, env_state, obs, buf, j)
+
+    def _state_to_carry(self, state: TrainState):
+        return (state.algo, state.env_state, state.obs, state.buffer,
+                state.interval)
+
+    def _finalize(self, carry):
+        """Reporting-only: consume the unconsumed read buffer (HTS
+        trailing learner pass). Baselines consume data immediately, so
+        the default is the identity."""
+        return carry
+
     # --------------------------------------------------------- plumbing
     def init(self) -> None:
         if not self._built:
@@ -143,14 +224,37 @@ class ScanRuntimeBase:
             self._built = True
         self.carry = self._initial_carry()
 
+    def state(self) -> TrainState:
+        if self.carry is None:
+            self.init()
+        return self._carry_to_state(self.carry)
+
     def run(self, n_intervals: int) -> RunResult:
         self.init()
+        return self._segment(n_intervals)
+
+    def run_from(self, state: TrainState, n_intervals: int,
+                 finalize: bool = True) -> RunResult:
+        if not self._built:
+            self._build()
+            self._built = True
+        self.carry = self._state_to_carry(state)
+        return self._segment(n_intervals, finalize)
+
+    def _segment(self, n_intervals: int, finalize: bool = True) -> RunResult:
         cfg = self.cfg
         if n_intervals not in self._programs:
             self._programs[n_intervals] = self._program(n_intervals)
         t0 = time.perf_counter()
         self.carry, metrics = self._programs[n_intervals](self.carry)
-        params, state = self._result_state(self.carry)
+        # self.carry stays mid-stream (continuable); the trailing pass
+        # below exists only to satisfy the run(n)-applies-n-updates
+        # reporting contract of RunResult (so run_from(state_of(a), 0)
+        # reports exactly run(a)'s params — the skip=(j==0) guard inside
+        # _finalize keeps a fresh state at params0). finalize=False
+        # callers (trainer mid-run segments) skip that reporting cost.
+        final = self._finalize(self.carry) if finalize else self.carry
+        params, state = self._result_state(final)
         jax.block_until_ready(params)
         wall = time.perf_counter() - t0
         steps = n_intervals * cfg.alpha * cfg.n_envs

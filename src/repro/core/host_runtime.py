@@ -39,7 +39,8 @@ import jax.numpy as jnp
 
 from repro.core import delayed_grad, determinism
 from repro.core.buffers import DoubleBuffer
-from repro.core.engine import HTSConfig, RunResult, register_runtime
+from repro.core.engine import (HTSConfig, RunResult, TrainState,
+                               register_runtime)
 from repro.core.mesh_runtime import make_learner_update
 from repro.core.rollout import actor_forward
 from repro.envs.interfaces import Env
@@ -116,10 +117,68 @@ class HostHTSRL:
             s, o = self._env_reset(keys[i])
             self.env_states.append(s)
             self.obs.append(np.asarray(o))
+        self.j = 0              # global interval counter
+        self.prev_traj = None   # unconsumed read-buffer trajectory
+        self._reset_logs()
+
+    def _reset_logs(self) -> None:
         self.rewards_log: list = []
         self.dones_log: list = []
         self.sps_steps = 0
         self.wall_time = 0.0
+
+    # ------------------------------------------------------ continuation
+    def _zero_traj(self):
+        """The j=0 read buffer: all-zero trajectory with dones=1 (mirrors
+        mesh_runtime.init_carry so host/mesh capsules are one structure)."""
+        cfg = self.cfg
+        obs_shape, obs_dtype = self._spec["obs"]
+        return {
+            "obs": jnp.zeros((cfg.alpha, cfg.n_envs) + tuple(obs_shape),
+                             obs_dtype),
+            "actions": jnp.zeros((cfg.alpha, cfg.n_envs), jnp.int32),
+            "rewards": jnp.zeros((cfg.alpha, cfg.n_envs), jnp.float32),
+            "dones": jnp.ones((cfg.alpha, cfg.n_envs), jnp.float32),
+            "behavior_logprob": jnp.zeros((cfg.alpha, cfg.n_envs),
+                                          jnp.float32),
+            "bootstrap_obs": jnp.zeros((cfg.n_envs,) + tuple(obs_shape),
+                                       obs_dtype),
+        }
+
+    def state(self) -> TrainState:
+        """The continuation capsule — structurally identical to the fused
+        runtimes' (same TrainState fields, same buffer pytree), so a host
+        checkpoint restores into a mesh/sharded run and vice versa."""
+        if self.dg is None:
+            self.init()
+        env_state = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                 *self.env_states)
+        buf = (self.prev_traj if self.prev_traj is not None
+               else self._zero_traj())
+        return TrainState(self.dg, env_state,
+                          jnp.asarray(np.stack(self.obs)), buf,
+                          jnp.asarray(self.j, jnp.int32))
+
+    def _restore(self, state: TrainState) -> None:
+        cfg = self.cfg
+        self.master = jax.random.key(cfg.seed)
+        self.dg = delayed_grad.DelayedGradState(*state.algo)
+        self.buffer = DoubleBuffer(cfg.alpha * cfg.n_envs, self._spec)
+        obs = np.asarray(state.obs)
+        self.obs = [obs[i].copy() for i in range(cfg.n_envs)]
+        self.env_states = [jax.tree.map(lambda x: x[i], state.env_state)
+                           for i in range(cfg.n_envs)]
+        self.bootstrap_obs = obs.copy()
+        self.j = int(state.interval)
+        self.prev_traj = (jax.tree.map(jnp.asarray, dict(state.buffer))
+                          if self.j > 0 else None)
+        self._reset_logs()
+
+    def run_from(self, state: TrainState, n_intervals: int,
+                 finalize: bool = True) -> RunResult:
+        self._build()
+        self._restore(state)
+        return self._segment(n_intervals, finalize)
 
     # ------------------------------------------------------------ actors
     def _actor_loop(self, state_q: "queue.Queue", action_slots, params):
@@ -210,10 +269,13 @@ class HostHTSRL:
     # --------------------------------------------------------------- run
     def run(self, n_intervals: int) -> RunResult:
         self.init()   # engine contract: every run starts from params0
+        return self._segment(n_intervals)
+
+    def _segment(self, n_intervals: int, finalize: bool = True) -> RunResult:
         cfg = self.cfg
         t_start = time.perf_counter()
-        prev_traj = None
-        for j in range(n_intervals):
+        prev_traj = self.prev_traj
+        for j in range(self.j, self.j + n_intervals):
             state_q: "queue.Queue" = queue.Queue()
             action_slots = {i: queue.Queue() for i in range(cfg.n_envs)}
             behavior = self.dg.params     # theta_j
@@ -244,13 +306,19 @@ class HostHTSRL:
             self.dones_log.append(d.copy())
             self.sps_steps += cfg.alpha * cfg.n_envs
             self.buffer.swap()
-        # trailing learner pass on the final interval's data
-        if prev_traj is not None:
-            self._learn(prev_traj)
+        self.j += n_intervals
+        self.prev_traj = prev_traj
+        # trailing learner pass on the final interval's data — REPORTING
+        # ONLY: self.dg stays mid-stream (prev_traj unconsumed), so
+        # state()/run_from continue bit-exactly without double-applying
+        # this update (same split as ScanRuntimeBase._finalize).
+        dg_final = self.dg
+        if finalize and prev_traj is not None:
+            dg_final = self._learn_fn(self.dg, prev_traj)
         self.wall_time = time.perf_counter() - t_start
         empty = np.zeros((0, cfg.alpha, cfg.n_envs), np.float32)
         return RunResult(
-            params=self.dg.params, state=self.dg, steps=self.sps_steps,
+            params=dg_final.params, state=dg_final, steps=self.sps_steps,
             wall_time=self.wall_time,
             sps=self.sps_steps / max(self.wall_time, 1e-9),
             rewards=np.stack(self.rewards_log) if self.rewards_log else empty,

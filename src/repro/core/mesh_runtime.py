@@ -155,23 +155,21 @@ class MeshRuntime(ScanRuntimeBase):
                                    self.cfg)
         self._learn = make_learner_update(self.policy_apply, self.opt,
                                           self.cfg)
+        # reporting-only trailing learner pass on the final interval's
+        # data, so run(n) applies exactly n updates (matching the host
+        # runtime); skip guards the n=0 edge (buffer still zeros). Kept
+        # OUT of _program: the scan carry must stay mid-stream so
+        # state()/run_from never double-consume an interval.
+        self._final_fn = jax.jit(
+            lambda dg, buf, j: self._learn(dg, buf, skip=(j == 0)))
 
     def _initial_carry(self):
         return init_carry(self.params0, self.opt, self.venv, self.cfg,
                           self.policy_apply)
 
-    def _program(self, n_intervals: int):
-        def go(carry):
-            carry, metrics = jax.lax.scan(self._step, carry, None,
-                                          length=n_intervals)
-            # trailing learner pass on the final interval's data, so
-            # run(n) applies exactly n updates (matching the host
-            # runtime); skip guards the n=0 edge (buffer still zeros)
-            dg, env_state, obs, buf, j = carry
-            dg = self._learn(dg, buf, skip=(j == 0))
-            return (dg, env_state, obs, buf, j), metrics
-
-        return jax.jit(go)
+    def _finalize(self, carry):
+        dg, env_state, obs, buf, j = carry
+        return (self._final_fn(dg, buf, j), env_state, obs, buf, j)
 
     def _result_state(self, carry):
         return carry[0].params, carry[0]

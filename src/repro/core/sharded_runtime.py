@@ -59,6 +59,7 @@ class ShardedHTSRL(ScanRuntimeBase):
             axis_name=self.axis)
         self._learn = mesh_runtime.make_learner_update(
             self.policy_apply, self.opt, self.lcfg, axis_name=self.axis)
+        self._final_prog = None     # built lazily (needs carry specs)
 
     def _initial_carry(self):
         # global carry (identical to the mesh runtime's); shard_map slices
@@ -81,18 +82,31 @@ class ShardedHTSRL(ScanRuntimeBase):
                         "dones": P(None, None, self.axis)}
 
         def body(carry):
-            carry, metrics = jax.lax.scan(self._step, carry, None,
-                                          length=n_intervals)
-            # trailing learner pass (same update-count contract as
-            # host/mesh); skip guards the n=0 edge (buffer still zeros)
-            dg, env_state, obs, buf, j = carry
-            dg = self._learn(dg, buf, skip=(j == 0))
-            return (dg, env_state, obs, buf, j), metrics
+            return jax.lax.scan(self._step, carry, None,
+                                length=n_intervals)
 
         return jax.jit(shard_map(body, mesh=self.mesh,
                                  in_specs=(carry_specs,),
                                  out_specs=(carry_specs, metric_specs),
                                  check_rep=False))
+
+    def _finalize(self, carry):
+        # reporting-only trailing learner pass (same update-count contract
+        # as host/mesh; skip guards the n=0 edge). Its pmean needs the
+        # mesh axis, so it is its own shard_map program — separate from
+        # the scan, which must leave the carry mid-stream for run_from.
+        if self._final_prog is None:
+            dg_spec, _, _, buf_spec, j_spec = self._carry_specs(carry)
+
+            def fin(dg, buf, j):
+                return self._learn(dg, buf, skip=(j == 0))
+
+            self._final_prog = jax.jit(shard_map(
+                fin, mesh=self.mesh,
+                in_specs=(dg_spec, buf_spec, j_spec),
+                out_specs=dg_spec, check_rep=False))
+        dg, env_state, obs, buf, j = carry
+        return (self._final_prog(dg, buf, j), env_state, obs, buf, j)
 
     def _result_state(self, carry):
         return carry[0].params, carry[0]

@@ -1,0 +1,205 @@
+"""Checkpointed continuation driver: wrap any engine runtime with
+periodic checkpointing, resume-from-latest, and streaming evaluation.
+
+The engine contract (core/engine.py) makes ``run(n)`` a reset-and-replay;
+this module is what turns that into long-lived training that survives
+preemption:
+
+    rt = engine.make_runtime("sharded", env, papply, params, opt, cfg)
+    trainer = Trainer(rt, checkpoint_dir="ckpts", ckpt_every=50)
+    report = trainer.fit(10_000, resume=True)   # picks up where it died
+
+``fit`` drives the runtime exclusively through ``run_from`` in
+``ckpt_every``-interval segments, capturing the ``TrainState`` capsule
+after each segment and writing it through ``repro.checkpoint.io`` with
+versioned metadata (runtime name, algorithm, seed, interval count, and
+the streaming-metric carry). Because ``run(a + b)`` equals any partition
+into ``run_from`` segments bit-exactly (tests/test_continuation.py), a
+checkpointed-and-killed run resumed by a fresh process produces the
+EXACT parameters of the uninterrupted run — checkpointing is free of
+training-dynamics side effects, on every runtime.
+
+Per-segment reward/done streams feed a ``core.evaluate.ReturnStream``,
+whose carry rides inside the checkpoint metadata — so the paper's
+evaluation protocol survives preemption too: an episode spanning a
+kill/resume boundary is counted once, with the correct return (bit-equal
+to the uninterrupted trainer's stream; equal to the one-shot
+computation bit-exactly for integer-valued rewards, to ~1 ulp for
+arbitrary floats — see ReturnStream).
+"""
+from __future__ import annotations
+
+import glob
+import os
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+from repro.checkpoint import io as ckpt_io
+from repro.core import evaluate
+from repro.core.engine import Runtime, TrainState
+
+CKPT_FORMAT = "hts-trainstate-v1"
+
+
+@dataclass
+class TrainReport:
+    """What ``Trainer.fit`` returns."""
+    params: Any
+    state: TrainState            # mid-stream continuation capsule
+    intervals: int               # total intervals completed (incl. resumed)
+    resumed_from: int            # intervals already done at fit() entry
+    steps: int                   # env steps executed by THIS fit call
+    wall_time: float
+    sps: float
+    rewards: np.ndarray          # (intervals_this_fit, alpha, n_envs)
+    dones: np.ndarray
+    episode_returns: np.ndarray  # completion-order, incl. resumed history
+
+    def final_metric(self, n_episodes: int = 100) -> float:
+        eps = self.episode_returns
+        return float(eps[-n_episodes:].mean()) if len(eps) else float("nan")
+
+
+class Trainer:
+    """Periodic-checkpoint driver over any registered runtime.
+
+    * ``ckpt_every``   — intervals per segment (0: one segment, checkpoint
+      only at the end when ``checkpoint_dir`` is set).
+    * ``on_segment``   — optional ``callback(intervals_done, RunResult)``
+      invoked after each segment's checkpoint is durable; used by tests to
+      simulate preemption (raising from it loses no committed work). Note
+      intermediate segments run with ``finalize=False``, so their
+      RunResult.params are mid-stream (one reporting update behind).
+    * ``keep``         — how many most-recent checkpoints to retain
+      (0 = keep all).
+    """
+
+    def __init__(self, runtime: Runtime, checkpoint_dir: Optional[str] = None,
+                 ckpt_every: int = 0,
+                 on_segment: Optional[Callable[[int, Any], None]] = None,
+                 keep: int = 3):
+        self.runtime = runtime
+        self.checkpoint_dir = checkpoint_dir
+        self.ckpt_every = ckpt_every
+        self.on_segment = on_segment
+        self.keep = keep
+
+    # ----------------------------------------------------------- ckpt io
+    def _ckpt_path(self, intervals: int) -> str:
+        return os.path.join(self.checkpoint_dir, f"step_{intervals:08d}")
+
+    def latest_checkpoint(self) -> Optional[str]:
+        if not self.checkpoint_dir:
+            return None
+        return ckpt_io.latest(self.checkpoint_dir)
+
+    def _save(self, state: TrainState, intervals: int,
+              stream: evaluate.ReturnStream) -> None:
+        cfg = self.runtime.cfg
+        ckpt_io.save(self._ckpt_path(intervals), state, metadata={
+            "format": CKPT_FORMAT,
+            "runtime": self.runtime.name,
+            "algorithm": cfg.algorithm,
+            "seed": cfg.seed,
+            "alpha": cfg.alpha,
+            "n_envs": cfg.n_envs,
+            "intervals": intervals,
+            "metrics": stream.state_dict(),
+        })
+        self._prune(intervals)
+
+    def _prune(self, newest: int) -> None:
+        if not self.keep:
+            return
+        paths = sorted(glob.glob(
+            os.path.join(self.checkpoint_dir, "step_*.json")))
+        for p in paths[:-self.keep]:
+            base = p[:-len(".json")]
+            for suffix in (".json", ".npz"):
+                try:
+                    os.remove(base + suffix)
+                except OSError:
+                    pass
+
+    def _resume(self) -> tuple[Optional[TrainState], int, Optional[dict]]:
+        path = self.latest_checkpoint()
+        if path is None:
+            return None, 0, None
+        meta = ckpt_io.load_metadata(path)
+        if meta.get("format") != CKPT_FORMAT:
+            raise ValueError(
+                f"{path} is not a trainer checkpoint "
+                f"(format={meta.get('format')!r})")
+        cfg = self.runtime.cfg
+        for key, have in (("runtime", self.runtime.name),
+                          ("algorithm", cfg.algorithm), ("seed", cfg.seed),
+                          ("alpha", cfg.alpha), ("n_envs", cfg.n_envs)):
+            # runtime may legitimately differ (the capsule is
+            # cross-runtime, tests/test_continuation.py) — warn-level
+            # concerns are config fields that change the math
+            if key != "runtime" and meta.get(key) != have:
+                raise ValueError(
+                    f"resume mismatch: checkpoint has {key}="
+                    f"{meta.get(key)!r}, runtime has {have!r}")
+        state = ckpt_io.restore(path, self.runtime.state())
+        return state, int(meta["intervals"]), meta.get("metrics")
+
+    # --------------------------------------------------------------- fit
+    def fit(self, n_intervals: int, resume: bool = False) -> TrainReport:
+        """Train until ``n_intervals`` TOTAL intervals have run (a resumed
+        fit counts the checkpointed intervals toward the target)."""
+        cfg = self.runtime.cfg
+        if not resume and self.latest_checkpoint() is not None:
+            # refusing beats the alternative: a fresh run interleaved
+            # with stale checkpoints would let keep-k pruning delete the
+            # NEW checkpoints while a later resume picks up the old run
+            raise ValueError(
+                f"{self.checkpoint_dir} already holds checkpoints "
+                f"({os.path.basename(self.latest_checkpoint())}); pass "
+                f"resume=True to continue that run, or point "
+                f"checkpoint_dir at a fresh directory")
+        state, start, metric_state = (self._resume() if resume
+                                      else (None, 0, None))
+        stream = evaluate.ReturnStream(cfg.n_envs)
+        if metric_state is not None:
+            stream.load_state_dict(metric_state)
+        if state is None:
+            state = self.runtime.state()   # fresh initial capsule
+        done = start
+        out = None
+        rewards_log, dones_log = [], []
+        steps = 0
+        t0 = time.perf_counter()
+        while done < n_intervals:
+            chunk = min(self.ckpt_every or (n_intervals - done),
+                        n_intervals - done)
+            # only the final segment pays the reporting-only trailing
+            # learner pass; intermediate segments just stream metrics
+            out = self.runtime.run_from(
+                state, chunk, finalize=(done + chunk >= n_intervals))
+            done += chunk
+            state = self.runtime.state()
+            stream.extend(out.rewards, out.dones)
+            rewards_log.append(out.rewards)
+            dones_log.append(out.dones)
+            steps += out.steps
+            if self.checkpoint_dir:
+                self._save(state, done, stream)
+            if self.on_segment is not None:
+                self.on_segment(done, out)
+        if out is None:
+            # nothing left to run (resumed at or past the target):
+            # report the restored state's parameters via a 0-segment
+            out = self.runtime.run_from(state, 0)
+        wall = time.perf_counter() - t0
+        empty = np.zeros((0, cfg.alpha, cfg.n_envs), np.float32)
+        return TrainReport(
+            params=out.params, state=state, intervals=done,
+            resumed_from=start, steps=steps, wall_time=wall,
+            sps=steps / max(wall, 1e-9),
+            rewards=np.concatenate(rewards_log) if rewards_log else empty,
+            dones=np.concatenate(dones_log) if dones_log else empty,
+            episode_returns=stream.returns)

@@ -61,6 +61,14 @@ class TokenStream:
         self._step = 0
         self.key = jax.random.key(seed)
 
+    def skip(self, n: int) -> "TokenStream":
+        """Fast-forward past ``n`` batches without generating them — each
+        batch is a pure function of (seed, step), so a resumed run
+        (launch/train.py --resume) sees exactly the continuation of the
+        stream the killed run was consuming."""
+        self._step += n
+        return self
+
     def next_batch(self) -> Dict:
         key = jax.random.fold_in(self.key, self._step)
         self._step += 1

@@ -1,12 +1,61 @@
-"""jit'd wrapper for the LRU scan kernel."""
+"""jit'd, differentiable wrapper for the LRU scan kernel.
+
+The Pallas path carries a ``jax.custom_vjp`` with an ANALYTIC backward
+that reuses the forward kernel: for h_t = a_t * h_{t-1} + b_t, the
+cotangent recurrence lam_t = g_t + a_{t+1} * lam_{t+1} is itself a linear
+recurrence run in reversed time, so the backward is one more
+``lru_scan`` call (on flipped/shifted coefficients) plus elementwise
+products — no O(S^2) materialization, same VMEM behavior as the forward.
+Verified against ``jax.grad`` of the jnp oracle and against numerical
+differences in tests/test_kernels.py.
+"""
 from __future__ import annotations
 
 import functools
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.lru_scan.kernel import lru_scan
 from repro.kernels.lru_scan.ref import lru_scan_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _scan_pallas(a, b, h0, chunk, bd, interpret):
+    return lru_scan(a, b, h0, chunk=chunk, bd=bd, interpret=interpret)
+
+
+def _scan_fwd(a, b, h0, chunk, bd, interpret):
+    y, h_last = lru_scan(a, b, h0, chunk=chunk, bd=bd, interpret=interpret)
+    # the output IS the state trajectory: h_{t-1} = y_{t-1}, so the
+    # backward needs no residuals beyond (a, h0, y) — plus a zero-size
+    # dtype witness so db matches b even when a and b dtypes differ
+    return (y, h_last), (a, h0, y, jnp.zeros((), b.dtype))
+
+
+def _scan_bwd(chunk, bd, interpret, res, cts):
+    a, h0, y, b_proto = res
+    gy, gh_last = cts
+    af = a.astype(jnp.float32)
+    c = gy.astype(jnp.float32)
+    c = c.at[:, -1].add(gh_last.astype(jnp.float32))  # h_last aliases y_-1
+    # lam_t = c_t + a_{t+1} lam_{t+1}  <=>  a forward LRU scan over
+    # flipped time with coefficients [0, a_{S-1}, ..., a_1]
+    a_rev = jnp.concatenate(
+        [jnp.zeros_like(af[:, :1]), jnp.flip(af, 1)[:, :-1]], axis=1)
+    mu, _ = lru_scan(a_rev, jnp.flip(c, 1), None, chunk=chunk, bd=bd,
+                     interpret=interpret)
+    lam = jnp.flip(mu.astype(jnp.float32), 1)
+    prev_h = jnp.concatenate(
+        [h0.astype(jnp.float32)[:, None], y.astype(jnp.float32)[:, :-1]],
+        axis=1)
+    da = (lam * prev_h).astype(a.dtype)
+    db = lam.astype(b_proto.dtype)
+    dh0 = (af[:, 0] * lam[:, 0]).astype(h0.dtype)
+    return da, db, dh0
+
+
+_scan_pallas.defvjp(_scan_fwd, _scan_bwd)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "chunk", "bd",
@@ -14,9 +63,13 @@ from repro.kernels.lru_scan.ref import lru_scan_ref
 def scan(a, b, h0=None, *, use_pallas: bool | None = None, chunk: int = 256,
          bd: int = 512, interpret: bool | None = None):
     """use_pallas/interpret default to auto-routing per backend: compiled
-    Pallas on TPU, interpreted Pallas elsewhere (repro.kernels)."""
+    Pallas on TPU, interpreted Pallas elsewhere (repro.kernels). Both
+    paths are differentiable; the Pallas backward is the kernel itself
+    run in reversed time (see module docstring)."""
     from repro.kernels import resolve_backend
     use_pallas, interpret = resolve_backend(use_pallas, interpret)
     if use_pallas:
-        return lru_scan(a, b, h0, chunk=chunk, bd=bd, interpret=interpret)
+        if h0 is None:
+            h0 = jnp.zeros((a.shape[0], a.shape[2]), jnp.float32)
+        return _scan_pallas(a, b, h0, chunk, bd, interpret)
     return lru_scan_ref(a, b, h0)

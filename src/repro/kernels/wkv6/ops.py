@@ -1,12 +1,41 @@
-"""jit'd wrapper for the WKV6 kernel."""
+"""jit'd, differentiable wrapper for the WKV6 kernel.
+
+The Pallas forward carries a ``jax.custom_vjp`` whose backward
+differentiates the chunk-checkpointed jnp oracle on the saved inputs
+(same fused-forward/XLA-backward split as flash_attention/ops.py; the
+oracle's ``jax.checkpoint`` chunking keeps the backward's state storage
+at chunk boundaries only). tests/test_kernels.py pins Pallas-path
+gradients to the oracle-path gradients.
+"""
 from __future__ import annotations
 
 import functools
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.wkv6.kernel import wkv6
 from repro.kernels.wkv6.ref import wkv6_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7))
+def _mix_pallas(r, k, v, w, u, s0, chunk, interpret):
+    return wkv6(r, k, v, w, u, s0, chunk=chunk, interpret=interpret)
+
+
+def _mix_fwd(r, k, v, w, u, s0, chunk, interpret):
+    out = _mix_pallas(r, k, v, w, u, s0, chunk, interpret)
+    return out, (r, k, v, w, u, s0)
+
+
+def _mix_bwd(chunk, interpret, res, cts):
+    r, k, v, w, u, s0 = res
+    _, vjp = jax.vjp(
+        lambda *args: wkv6_ref(*args, chunk=chunk), r, k, v, w, u, s0)
+    return vjp(cts)
+
+
+_mix_pallas.defvjp(_mix_fwd, _mix_bwd)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "chunk",
@@ -14,9 +43,13 @@ from repro.kernels.wkv6.ref import wkv6_ref
 def mix(r, k, v, w, u, s0=None, *, use_pallas: bool | None = None,
         chunk: int = 128, interpret: bool | None = None):
     """use_pallas/interpret default to auto-routing per backend: compiled
-    Pallas on TPU, interpreted Pallas elsewhere (repro.kernels)."""
+    Pallas on TPU, interpreted Pallas elsewhere (repro.kernels). Both
+    paths are differentiable (see module docstring)."""
     from repro.kernels import resolve_backend
     use_pallas, interpret = resolve_backend(use_pallas, interpret)
     if use_pallas:
-        return wkv6(r, k, v, w, u, s0, chunk=chunk, interpret=interpret)
+        if s0 is None:
+            B, _, H, N = r.shape
+            s0 = jnp.zeros((B, H, N, N), jnp.float32)
+        return _mix_pallas(r, k, v, w, u, s0, chunk, interpret)
     return wkv6_ref(r, k, v, w, u, s0)

@@ -45,9 +45,21 @@ def main():
     ap.add_argument("--algorithm", default="a2c", choices=["a2c", "ppo"])
     ap.add_argument("--mesh", default="host", choices=["host", "pod",
                                                        "multipod"])
-    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--checkpoint-dir", "--ckpt-dir", dest="ckpt_dir",
+                    default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0, metavar="N",
+                    help="save a checkpoint every N steps (0: only at "
+                         "the end, when --checkpoint-dir is set)")
+    ap.add_argument("--resume", action="store_true",
+                    help="continue from the latest checkpoint in "
+                         "--checkpoint-dir; bit-exact (the TokenStream "
+                         "is fast-forwarded to the resumed step)")
     ap.add_argument("--log-every", type=int, default=5)
     args = ap.parse_args()
+    if args.ckpt_every and not args.ckpt_dir:
+        ap.error("--ckpt-every requires --checkpoint-dir")
+    if args.resume and not args.ckpt_dir:
+        ap.error("--resume requires --checkpoint-dir")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -66,11 +78,35 @@ def main():
     alg = algorithms.get_algorithm(args.algorithm)
     step_fn = learner.make_train_step(cfg, opt, alg.name)
 
+    start_step = 0
+    if args.resume:
+        path = ckpt_io.latest(args.ckpt_dir)
+        if path is not None:
+            meta = ckpt_io.load_metadata(path)
+            # anything that changes the update math or the data stream
+            # must match, or "resume" would silently train a different
+            # run (validate only keys the checkpoint recorded, for
+            # compatibility with older checkpoints)
+            for key, have in (("arch", args.arch),
+                              ("algorithm", args.algorithm),
+                              ("opt", args.opt), ("batch", args.batch),
+                              ("seq", args.seq)):
+                if key in meta and meta[key] != have:
+                    raise SystemExit(
+                        f"checkpoint {path} has {key}={meta[key]!r}, "
+                        f"but this run was launched with {have!r}")
+            dg = ckpt_io.restore(path, jax.eval_shape(lambda: dg))
+            start_step = int(meta.get("step", meta.get("steps", 0)))
+            print(f"resuming from {path} at step {start_step}", flush=True)
+
     pspecs = rules.param_pspecs(jax.eval_shape(lambda: params), mesh)
     dg_specs = rules.dg_state_pspecs(
         jax.eval_shape(lambda: dg), pspecs, mesh)
     stream = TokenStream(cfg.vocab_size, args.batch, args.seq)
     sample = stream.next_batch()
+    # loop iteration i consumes stream batch i+1 (the probe above took
+    # batch 0): fast-forward so a resumed run continues the exact stream
+    stream.skip(start_step)
     b_specs = rules.batch_specs(jax.eval_shape(lambda: sample), mesh)
     out_specs = (dg_specs,
                  jax.tree.map(lambda _: P(),
@@ -82,20 +118,31 @@ def main():
             in_shardings=as_shardings(mesh, (dg_specs, b_specs)),
             out_shardings=as_shardings(mesh, out_specs),
             donate_argnums=(0,))
+        def save_ckpt(step: int) -> None:
+            ckpt_io.save(f"{args.ckpt_dir}/step_{step:08d}", dg,
+                         {"arch": args.arch, "step": step,
+                          "algorithm": args.algorithm, "opt": args.opt,
+                          "batch": args.batch, "seq": args.seq})
+            print(f"checkpoint -> {args.ckpt_dir}/step_{step:08d}",
+                  flush=True)
+
         t0 = time.time()
-        for i in range(args.steps):
+        for i in range(start_step, args.steps):
             batch = stream.next_batch()
             dg, stats = jstep(dg, batch)
             if i % args.log_every == 0 or i == args.steps - 1:
+                done = i - start_step + 1
                 print(f"step {i:4d} loss={float(stats['loss']):.4f} "
                       f"pg={float(stats['pg']):.4f} "
                       f"ent={float(stats['entropy']):.4f} "
-                      f"({(time.time() - t0) / (i + 1):.3f}s/step)",
+                      f"({(time.time() - t0) / done:.3f}s/step)",
                       flush=True)
-        if args.ckpt_dir:
-            ckpt_io.save(f"{args.ckpt_dir}/step_{args.steps:08d}", dg,
-                         {"arch": args.arch, "steps": args.steps})
-            print(f"checkpoint -> {args.ckpt_dir}/step_{args.steps:08d}")
+            if (args.ckpt_dir and args.ckpt_every
+                    and (i + 1) % args.ckpt_every == 0
+                    and i + 1 < args.steps):
+                save_ckpt(i + 1)
+        if args.ckpt_dir and args.steps > start_step:
+            save_ckpt(args.steps)
 
 
 if __name__ == "__main__":

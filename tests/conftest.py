@@ -4,3 +4,10 @@ import sys
 # smoke tests and benches must see 1 CPU device (the 512-device override
 # lives ONLY in repro.launch.dryrun)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--update-goldens", action="store_true", default=False,
+        help="rewrite tests/goldens/*.json from the current run instead "
+             "of asserting against them (tests/test_goldens.py)")

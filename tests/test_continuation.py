@@ -1,0 +1,269 @@
+"""Checkpointed continuation: the strongest determinism oracle.
+
+The engine contract (core/engine.py, DESIGN.md §1): ``run(n)`` is
+bit-identical to ANY partition of n into ``run_from`` segments with a
+checkpoint save/restore round-trip at each boundary — on every
+registered runtime, for every algorithm, at every split point. The
+capsule (``TrainState``) is also cross-runtime: a host checkpoint
+resumed by the fused mesh runtime (or vice versa) continues the exact
+same trajectory.
+
+Also covered: the 2-device sharded path (subprocess, because the device
+count locks at first jax init) and the trainer's kill-and-resume
+(preemption) recovery.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import io as ckpt_io
+from repro.core import engine
+from repro.core.engine import HTSConfig
+from repro.core.trainer import Trainer
+from repro.envs import catch
+from repro.models.cnn_policy import apply_mlp_policy, init_mlp_policy
+from repro.optim import rmsprop
+
+TOTAL = 4
+SPLITS = [(1, 3), (2, 2)]
+
+
+def _setup(algorithm="a2c"):
+    env1 = catch.make()
+    cfg = HTSConfig(alpha=4, n_envs=4, seed=3, algorithm=algorithm)
+
+    def papply(p, obs):
+        return apply_mlp_policy(p, obs.reshape(obs.shape[0], -1))
+
+    params = init_mlp_policy(jax.random.key(0),
+                             int(np.prod(env1.obs_shape)), env1.n_actions)
+    opt = rmsprop(7e-4, eps=1e-5)
+    return env1, cfg, papply, params, opt
+
+
+def _make(name, algorithm="a2c"):
+    env1, cfg, papply, params, opt = _setup(algorithm)
+    kwargs = {}
+    if name == "sharded":
+        # pin to a 1-device mesh so the in-process bit-exactness claims
+        # hold regardless of the machine's device count (the CI matrix
+        # runs this suite under 2 forced host devices); real 2-device
+        # continuation is covered by the subprocess test below
+        from jax.sharding import Mesh
+        kwargs["mesh"] = Mesh(np.array(jax.devices()[:1]), ("data",))
+    return engine.make_runtime(name, env1, papply, params, opt, cfg,
+                               **kwargs)
+
+
+def _maxdiff(a, b):
+    return max(float(jnp.max(jnp.abs(x - y)))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _run_split(rt, split, tmp_path, template_rt=None):
+    """Run ``split`` as run_from segments with a DISK checkpoint
+    round-trip at every boundary (including the initial state). Returns
+    (last RunResult, concatenated rewards)."""
+    template = (template_rt or rt).state()
+    state = template
+    rewards = []
+    for i, n in enumerate(split):
+        out = rt.run_from(state, n)
+        rewards.append(out.rewards)
+        path = str(tmp_path / f"boundary_{i}")
+        ckpt_io.save(path, rt.state(), {"intervals": int(sum(split[:i + 1]))})
+        state = ckpt_io.restore(path, template)
+    return out, np.concatenate(rewards)
+
+
+@pytest.mark.parametrize("split", SPLITS, ids=lambda s: f"{s[0]}+{s[1]}")
+@pytest.mark.parametrize("name", engine.runtime_names())
+def test_partition_with_checkpoint_roundtrip(name, split, tmp_path):
+    """For every registered runtime: run(4) ≡ run_from segments with a
+    save/restore round-trip at each boundary, bit-exactly."""
+    straight = _make(name).run(TOTAL)
+    out, rewards = _run_split(_make(name), split, tmp_path)
+    assert _maxdiff(straight.params, out.params) == 0.0
+    np.testing.assert_array_equal(straight.rewards, rewards)
+
+
+@pytest.mark.parametrize("algorithm", ["ppo", "vtrace"])
+@pytest.mark.parametrize("name", ["host", "mesh"])
+def test_partition_across_algorithms(name, algorithm, tmp_path):
+    """The contract is algorithm-independent: the capsule carries the
+    full update-rule state, so PPO clipping and V-trace corrections
+    resume exactly too."""
+    straight = _make(name, algorithm).run(TOTAL)
+    out, _ = _run_split(_make(name, algorithm), (1, 3), tmp_path)
+    assert _maxdiff(straight.params, out.params) == 0.0
+
+
+@pytest.mark.parametrize("src,dst", [("host", "mesh"), ("mesh", "host"),
+                                     ("sharded", "host")])
+def test_capsule_is_cross_runtime(src, dst, tmp_path):
+    """A checkpoint from one runtime resumes on another: TrainState is
+    one structure for the whole HTS family (threads, fused XLA,
+    shard_map), so continuation is scheduler-independent."""
+    straight = _make(dst).run(TOTAL)
+    a = _make(src)
+    a.run(2)
+    path = str(tmp_path / "xfer")
+    ckpt_io.save(path, a.state())
+    b = _make(dst)
+    state = ckpt_io.restore(path, b.state())
+    out = b.run_from(state, 2)
+    assert _maxdiff(straight.params, out.params) == 0.0
+
+
+def test_state_capture_is_idempotent():
+    """state() is an observation, not a mutation: capturing and
+    re-capturing, or resuming twice from one capsule, changes nothing."""
+    rt = _make("mesh")
+    rt.run(2)
+    s1 = rt.state()
+    s2 = rt.state()
+    assert _maxdiff(s1, s2) == 0.0
+    o1 = rt.run_from(s1, 2)
+    o2 = rt.run_from(s2, 2)
+    assert _maxdiff(o1.params, o2.params) == 0.0
+
+
+def test_run_from_zero_reports_run_params():
+    """run_from(state_of(a), 0) reports exactly run(a)'s params: the
+    reporting-only trailing pass consumes the buffered interval without
+    touching the continuation stream."""
+    straight = _make("mesh").run(2)
+    rt = _make("mesh")
+    rt.run(2)
+    out = rt.run_from(rt.state(), 0)
+    assert _maxdiff(straight.params, out.params) == 0.0
+    assert out.rewards.shape[0] == 0
+
+
+# ------------------------------------------------------------- trainer
+@pytest.mark.parametrize("name", ["mesh", "host"])
+def test_trainer_kill_and_resume(name, tmp_path):
+    """Preemption: the trainer dies (exception after the 2nd segment's
+    checkpoint is durable); a FRESH runtime + trainer with resume=True
+    recovers the exact straight-run parameters AND the exact episode
+    -return stream (episodes spanning the kill boundary counted once)."""
+    straight = _make(name).run(5)
+
+    class Preempted(Exception):
+        pass
+
+    def bomb(done, out):
+        if done >= 2:
+            raise Preempted
+
+    ckpt_dir = str(tmp_path / "ck")
+    with pytest.raises(Preempted):
+        Trainer(_make(name), checkpoint_dir=ckpt_dir, ckpt_every=1,
+                on_segment=bomb).fit(5)
+    report = Trainer(_make(name), checkpoint_dir=ckpt_dir,
+                     ckpt_every=1).fit(5, resume=True)
+    assert report.resumed_from == 2 and report.intervals == 5
+    assert _maxdiff(straight.params, report.params) == 0.0
+    from repro.core import evaluate
+    one_shot = evaluate.episode_returns_from_stream(
+        straight.rewards.reshape(-1, 4), straight.dones.reshape(-1, 4))
+    np.testing.assert_array_equal(one_shot, report.episode_returns)
+
+
+def test_run_from_without_finalize_stays_midstream(tmp_path):
+    """finalize=False (trainer mid-run segments) skips the reporting
+    pass: returned params equal the capsule's, and the continuation is
+    unchanged."""
+    rt = _make("mesh")
+    straight = _make("mesh").run(4)
+    s0 = rt.state()
+    o1 = rt.run_from(s0, 2, finalize=False)
+    assert _maxdiff(o1.params, rt.state().algo.params) == 0.0
+    o2 = rt.run_from(rt.state(), 2)     # final segment: finalized
+    assert _maxdiff(straight.params, o2.params) == 0.0
+
+
+def test_trainer_fresh_fit_refuses_dirty_dir(tmp_path):
+    """Without resume=True, a checkpoint_dir holding an earlier run's
+    checkpoints is refused — otherwise keep-k pruning could delete the
+    new run's checkpoints and a later resume would silently continue
+    the abandoned one."""
+    ckpt_dir = str(tmp_path / "ck")
+    Trainer(_make("mesh"), checkpoint_dir=ckpt_dir, ckpt_every=1).fit(2)
+    with pytest.raises(ValueError, match="already holds"):
+        Trainer(_make("mesh"), checkpoint_dir=ckpt_dir).fit(1)
+
+
+def test_trainer_resume_config_mismatch_raises(tmp_path):
+    ckpt_dir = str(tmp_path / "ck")
+    Trainer(_make("mesh"), checkpoint_dir=ckpt_dir, ckpt_every=1).fit(1)
+    env1, cfg, papply, params, opt = _setup()
+    other = engine.make_runtime("mesh", env1, papply, params, opt,
+                                cfg._replace(seed=4))
+    with pytest.raises(ValueError, match="seed"):
+        Trainer(other, checkpoint_dir=ckpt_dir).fit(2, resume=True)
+
+
+def test_trainer_keeps_last_k_checkpoints(tmp_path):
+    ckpt_dir = str(tmp_path / "ck")
+    Trainer(_make("mesh"), checkpoint_dir=ckpt_dir, ckpt_every=1,
+            keep=2).fit(4)
+    import glob
+    names = sorted(os.path.basename(p)
+                   for p in glob.glob(os.path.join(ckpt_dir, "*.json")))
+    assert names == ["step_00000003.json", "step_00000004.json"]
+
+
+# --------------------------------------------------- 2-device sharded
+_MULTIDEV_SCRIPT = textwrap.dedent("""
+    import numpy as np, jax, jax.numpy as jnp, tempfile
+    assert len(jax.devices()) == 2, jax.devices()
+    from repro.checkpoint import io as ckpt_io
+    from repro.core import engine
+    from repro.core.engine import HTSConfig
+    from repro.envs import catch
+    from repro.models.cnn_policy import apply_mlp_policy, init_mlp_policy
+    from repro.optim import rmsprop
+    env1 = catch.make()
+    cfg = HTSConfig(alpha=4, n_envs=4, seed=3)
+    papply = lambda p, o: apply_mlp_policy(p, o.reshape(o.shape[0], -1))
+    params = init_mlp_policy(jax.random.key(0),
+                             int(np.prod(env1.obs_shape)), env1.n_actions)
+    opt = rmsprop(7e-4, eps=1e-5)
+    mk = lambda: engine.make_runtime("sharded", env1, papply, params, opt,
+                                     cfg)
+    straight = mk().run(4)
+    a = mk()
+    a.run(2)
+    d = tempfile.mkdtemp()
+    ckpt_io.save(f"{d}/step_00000002", a.state())
+    b = mk()   # fresh instance: restore crosses process-lifetime state
+    state = ckpt_io.restore(f"{d}/step_00000002", b.state())
+    out = b.run_from(state, 2)
+    md = max(float(jnp.max(jnp.abs(x - y))) for x, y in
+             zip(jax.tree.leaves(straight.params),
+                 jax.tree.leaves(out.params)))
+    assert md == 0.0, md
+    print("OK", md)
+""")
+
+
+def test_sharded_two_device_continuation():
+    """Real data parallelism: on a 2-device 'data' mesh (subprocess — the
+    device count locks at first jax init), a sharded checkpoint taken
+    mid-run (device_get-gathered) restores into a fresh runtime and
+    continues bit-exactly."""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=2",
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    r = subprocess.run([sys.executable, "-c", _MULTIDEV_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert r.stdout.startswith("OK")

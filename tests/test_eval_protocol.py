@@ -2,16 +2,74 @@
 import numpy as np
 import jax
 import jax.numpy as jnp
+import pytest
 
 from repro.core import evaluate
 from repro.envs import catch
-
 
 def test_episode_returns_from_stream():
     r = np.array([[1.0, 0.5], [2.0, 0.5], [3.0, 0.5]])
     d = np.array([[0, 1], [1, 0], [0, 1]])
     eps = evaluate.episode_returns_from_stream(r, d)
     np.testing.assert_allclose(eps, [0.5, 3.0, 1.0])
+
+
+def _random_stream(rng, T, N, integers):
+    if integers:
+        r = rng.integers(-10, 10, size=(T, N)).astype(np.float64)
+    else:
+        r = rng.normal(size=(T, N)) * 50
+    d = rng.random((T, N)) < 0.3
+    return r, d
+
+
+def test_vectorized_episode_returns_match_loop_fuzz():
+    """Fixed-seed fuzz of the vectorized implementation against the
+    Python-loop oracle (the open-ended hypothesis version lives in
+    tests/test_properties.py): bit-exact on integer-valued rewards,
+    rounding-tolerance on arbitrary floats, every (T, N) shape incl.
+    T=0 and no-done streams."""
+    rng = np.random.default_rng(0)
+    for case in range(200):
+        T, N = int(rng.integers(0, 9)), int(rng.integers(1, 6))
+        integers = bool(case % 2)
+        r, d = _random_stream(rng, T, N, integers)
+        got = evaluate.episode_returns_from_stream(r, d)
+        want = evaluate._episode_returns_loop(r, d)
+        if integers:
+            np.testing.assert_array_equal(got, want)
+        else:
+            np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-9)
+
+
+def test_return_stream_chunking_invariant_fuzz():
+    """Feeding a stream through ReturnStream in ANY chunking produces
+    exactly the one-shot result — episodes spanning chunk (checkpoint)
+    boundaries are counted once, with the right return."""
+    rng = np.random.default_rng(1)
+    for _ in range(100):
+        T, N = int(rng.integers(0, 12)), int(rng.integers(1, 5))
+        r, d = _random_stream(rng, T, N, integers=True)
+        cuts = rng.integers(0, T + 1, size=rng.integers(0, 4))
+        bounds = sorted({int(c) for c in cuts} | {0, T})
+        rs = evaluate.ReturnStream(N)
+        for lo, hi in zip(bounds, bounds[1:]):
+            rs.extend(r[lo:hi], d[lo:hi])
+        np.testing.assert_array_equal(
+            rs.returns, evaluate.episode_returns_from_stream(r, d))
+
+
+def test_return_stream_state_roundtrip():
+    rs = evaluate.ReturnStream(2)
+    rs.extend(np.array([[1.0, 2.0], [3.0, 4.0]]),
+              np.array([[0, 1], [0, 0]]))
+    rs2 = evaluate.ReturnStream(2).load_state_dict(
+        __import__("json").loads(__import__("json").dumps(rs.state_dict())))
+    rs.extend(np.array([[5.0, 6.0]]), np.array([[1, 1]]))
+    rs2.extend(np.array([[5.0, 6.0]]), np.array([[1, 1]]))
+    np.testing.assert_array_equal(rs.returns, rs2.returns)
+    with pytest.raises(ValueError):
+        evaluate.ReturnStream(3).load_state_dict(rs.state_dict())
 
 
 def test_final_time_metric_truncates():

@@ -1,0 +1,108 @@
+"""Golden determinism regressions.
+
+The determinism contract (DESIGN.md §3) says a (runtime, algorithm,
+env, seed) tuple pins the ENTIRE training trajectory bit-for-bit. These
+tests freeze that as data: sha256 digests of the 3-interval
+reward/done stream and the final parameters for every
+(host|mesh|sharded) x (a2c|ppo|vtrace) combination on catch, committed
+in tests/goldens/determinism.json. A refactor that shifts a single bit
+anywhere in the rollout/learner path fails here even if all
+self-consistency tests still pass.
+
+After an INTENTIONAL contract change, regenerate with:
+
+    PYTHONPATH=src python -m pytest tests/test_goldens.py --update-goldens
+
+and commit the diff (it IS the reviewable artifact of the change).
+
+The sharded runtime is pinned to a 1-device mesh so digests are
+identical regardless of the machine's device count (on >1 devices the
+gradient all-reduce reorders float sums; cross-device-count agreement
+is covered to tolerance in test_equivalence.py).
+"""
+import hashlib
+import json
+import os
+
+import numpy as np
+import jax
+import pytest
+
+from repro.core import engine
+from repro.core.engine import HTSConfig
+from repro.envs import catch
+from repro.models.cnn_policy import apply_mlp_policy, init_mlp_policy
+from repro.optim import rmsprop
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "goldens",
+                           "determinism.json")
+RUNTIMES = ("host", "mesh", "sharded")
+ALGORITHMS = ("a2c", "ppo", "vtrace")
+INTERVALS = 3
+
+_memo = {}
+
+
+def _digest(tree) -> str:
+    h = hashlib.sha256()
+    for leaf in jax.tree.leaves(tree):
+        arr = np.asarray(leaf)
+        h.update(repr((str(arr.dtype), arr.shape)).encode())
+        h.update(np.ascontiguousarray(arr).tobytes())
+    return h.hexdigest()
+
+
+def _run(runtime: str, algorithm: str) -> dict:
+    if (runtime, algorithm) in _memo:
+        return _memo[(runtime, algorithm)]
+    env1 = catch.make()
+    cfg = HTSConfig(alpha=4, n_envs=4, seed=3, algorithm=algorithm)
+    params = init_mlp_policy(jax.random.key(0),
+                             int(np.prod(env1.obs_shape)), env1.n_actions)
+    opt = rmsprop(7e-4, eps=1e-5)
+    papply = lambda p, o: apply_mlp_policy(p, o.reshape(o.shape[0], -1))
+    kwargs = {}
+    if runtime == "sharded":
+        from jax.sharding import Mesh
+        kwargs["mesh"] = Mesh(np.array(jax.devices()[:1]), ("data",))
+    out = engine.make_runtime(runtime, env1, papply, params, opt, cfg,
+                              **kwargs).run(INTERVALS)
+    got = {"params": _digest(out.params),
+           "stream": _digest([out.rewards, out.dones])}
+    _memo[(runtime, algorithm)] = got
+    return got
+
+
+@pytest.mark.parametrize("algorithm", ALGORITHMS)
+@pytest.mark.parametrize("runtime", RUNTIMES)
+def test_golden_determinism(runtime, algorithm, request):
+    key = f"{runtime}/{algorithm}/catch"
+    got = _run(runtime, algorithm)
+    if request.config.getoption("--update-goldens"):
+        os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+        goldens = {}
+        if os.path.exists(GOLDEN_PATH):
+            with open(GOLDEN_PATH) as f:
+                goldens = json.load(f)
+        goldens[key] = got
+        with open(GOLDEN_PATH, "w") as f:
+            json.dump(goldens, f, indent=1, sort_keys=True)
+        pytest.skip(f"golden {key} rewritten")
+    assert os.path.exists(GOLDEN_PATH), \
+        "no goldens committed; generate with --update-goldens"
+    with open(GOLDEN_PATH) as f:
+        goldens = json.load(f)
+    assert key in goldens, f"no golden for {key}; run --update-goldens"
+    assert got == goldens[key], (
+        f"{key} diverged from the committed golden — the determinism "
+        f"contract shifted. If intentional, regenerate with "
+        f"--update-goldens and commit the diff.")
+
+
+@pytest.mark.parametrize("algorithm", ALGORITHMS)
+def test_runtimes_agree_per_algorithm(algorithm):
+    """host/mesh/sharded are one program under three concurrency models:
+    their digests must agree with each other, independent of the
+    committed goldens."""
+    runs = {rt: _run(rt, algorithm) for rt in RUNTIMES}
+    assert runs["host"] == runs["mesh"] == runs["sharded"], runs

@@ -30,6 +30,45 @@ def test_checkpoint_shape_mismatch_raises(tmp_path):
         ckpt.restore(path, {"w": jax.ShapeDtypeStruct((3, 2), jnp.float32)})
 
 
+def test_checkpoint_leaf_count_mismatch_raises(tmp_path):
+    """Historical bug: restore silently zipped mismatched leaf counts in
+    flatten order. Now both directions fail with a clear error."""
+    path = str(tmp_path / "step_00000001")
+    ckpt.save(path, {"w": jnp.ones(2), "b": jnp.zeros(2)})
+    with pytest.raises(ValueError, match="leaves"):
+        ckpt.restore(path, {"w": jnp.ones(2)})
+    with pytest.raises(ValueError, match="leaves"):
+        ckpt.restore(path, {"w": jnp.ones(2), "b": jnp.zeros(2),
+                            "extra": jnp.zeros(2)})
+
+
+def test_checkpoint_treedef_mismatch_raises(tmp_path):
+    """Same leaf count, different structure (renamed key): the treedef
+    recorded in the manifest catches it."""
+    path = str(tmp_path / "step_00000001")
+    ckpt.save(path, {"w": jnp.ones(2), "b": jnp.zeros(3)})
+    with pytest.raises(ValueError, match="structure"):
+        ckpt.restore(path, {"w": jnp.ones(2), "bias": jnp.zeros(3)})
+
+
+def test_checkpoint_dtype_mismatch_raises(tmp_path):
+    path = str(tmp_path / "step_00000001")
+    ckpt.save(path, {"w": jnp.ones(2, jnp.float32)})
+    with pytest.raises(ValueError, match="dtype"):
+        ckpt.restore(path, {"w": jnp.ones(2, jnp.int32)})
+
+
+def test_checkpoint_manifest_and_metadata(tmp_path):
+    path = str(tmp_path / "step_00000007")
+    ckpt.save(path, {"w": jnp.ones((2, 2), jnp.bfloat16)},
+              {"intervals": 7, "runtime": "mesh"})
+    m = ckpt.load_manifest(path)
+    assert m["version"] == ckpt.FORMAT_VERSION
+    assert m["dtypes"] == ["bfloat16"] and m["shapes"] == [[2, 2]]
+    assert ckpt.load_metadata(path) == {"intervals": 7, "runtime": "mesh"}
+    assert ckpt.load_manifest(str(tmp_path / "nope")) is None
+
+
 def test_token_stream_deterministic_and_learnable():
     s1 = TokenStream(64, 4, 16, seed=3)
     s2 = TokenStream(64, 4, 16, seed=3)

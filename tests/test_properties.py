@@ -168,3 +168,49 @@ def test_flash_attention_random_shapes(b, g, r, dh8, causal, window, seed):
         k_block=16).sum())(q)
     g2 = jax.grad(lambda a: naive(a, k, v).sum())(q)
     assert float(jnp.max(jnp.abs(g1 - g2))) < 1e-3
+
+
+# ------------------------------------------------- evaluate vectorization
+_REWARD_STREAMS = st.integers(0, 8).flatmap(lambda T: st.integers(1, 5).flatmap(
+    lambda N: st.tuples(
+        st.lists(st.lists(st.integers(-10, 10).map(float),
+                          min_size=N, max_size=N),
+                 min_size=T, max_size=T),
+        st.lists(st.lists(st.booleans(), min_size=N, max_size=N),
+                 min_size=T, max_size=T))))
+
+
+def _as_arrays(stream):
+    T = len(stream[0])
+    r = np.asarray(stream[0], np.float64).reshape(T, -1)
+    d = np.asarray(stream[1], bool).reshape(T, -1)
+    return r, d
+
+
+@given(_REWARD_STREAMS)
+@settings(**SET)
+def test_vectorized_episode_returns_match_loop(stream):
+    """The vectorized episode_returns_from_stream is bit-equal to the
+    O(T*N) loop reference on integer-valued rewards (exactly
+    representable, so the cumsum-difference introduces no rounding)."""
+    from repro.core import evaluate
+    r, d = _as_arrays(stream)
+    np.testing.assert_array_equal(
+        evaluate.episode_returns_from_stream(r, d),
+        evaluate._episode_returns_loop(r, d))
+
+
+@given(_REWARD_STREAMS, st.lists(st.integers(0, 8), max_size=4))
+@settings(**SET)
+def test_return_stream_any_chunking_equals_one_shot(stream, cuts):
+    """ReturnStream invariance: any chunking of the stream (any
+    checkpoint cadence) yields exactly the one-shot returns."""
+    from repro.core import evaluate
+    r, d = _as_arrays(stream)
+    T, N = r.shape
+    bounds = sorted({min(int(c), T) for c in cuts} | {0, T})
+    rs = evaluate.ReturnStream(N)
+    for lo, hi in zip(bounds, bounds[1:]):
+        rs.extend(r[lo:hi], d[lo:hi])
+    np.testing.assert_array_equal(
+        rs.returns, evaluate.episode_returns_from_stream(r, d))
