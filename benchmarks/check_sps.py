@@ -1,0 +1,111 @@
+"""SPS regression gate over the committed bench trajectory.
+
+``BENCH_sps.json`` is an append-only JSON-lines file: one record per
+``benchmarks.run --runtime ... --append-sps`` invocation, each with an
+``sps`` mapping of ``engine_sps_<runtime> -> steps/second``. CI appends
+a fresh record on every push and then runs this checker, which compares
+the LAST record (the run that just happened) against the most recent
+PRIOR record measured with the same ``intervals`` setting AND the same
+host fingerprint (``benchmarks.run.host_fingerprint``) — the committed
+baseline. Records from different hardware are never compared: that
+would gate on machine identity, not on code.
+
+    python -m benchmarks.check_sps BENCH_sps.json \
+        --key engine_sps_mesh --max-regression 0.30
+
+Exit codes: 0 = pass or graceful skip (no baseline / no comparable
+record / missing key), 1 = regression beyond the threshold. Skips are
+loud (printed to stderr) so a silently-vacuous gate is visible in CI
+logs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_records(path: str):
+    try:
+        with open(path) as f:
+            lines = [ln.strip() for ln in f if ln.strip()]
+    except OSError:
+        return None
+    records = []
+    for ln in lines:
+        try:
+            records.append(json.loads(ln))
+        except ValueError:
+            continue          # tolerate a truncated/hand-edited line
+    return records
+
+
+def _is_fresh(rec, key: str) -> bool:
+    """False when the record's value for ``key`` was replayed from a
+    sweep checkpoint (benchmarks.run --resume) rather than measured —
+    stale numbers must neither be gated nor serve as a baseline."""
+    return not any(key == f"engine_sps_{r}"
+                   for r in rec.get("restored_runtimes", []))
+
+
+def check(records, key: str, max_regression: float):
+    """Returns (ok: bool, message: str). ok=True includes skips."""
+    if not records:
+        return True, f"skip: no records (no baseline yet for {key})"
+    current = records[-1]
+    cur_sps = current.get("sps", {}).get(key)
+    if cur_sps is None:
+        return True, f"skip: last record has no {key} measurement"
+    if not _is_fresh(current, key):
+        return True, (f"skip: last record's {key} was replayed from a "
+                      f"sweep checkpoint, not measured")
+    baseline = None
+    for rec in reversed(records[:-1]):
+        if rec.get("sps", {}).get(key) is None:
+            continue
+        if not _is_fresh(rec, key):
+            continue          # replayed measurement — not a baseline
+        if rec.get("intervals") != current.get("intervals"):
+            continue          # SPS only comparable at equal sweep shape
+        if rec.get("host") != current.get("host"):
+            continue          # ... and on equal hardware (a CI runner vs
+            #                   a dev-machine baseline measures hardware,
+            #                   not code)
+        baseline = rec
+        break
+    if baseline is None:
+        return True, (f"skip: no prior record with {key} at "
+                      f"intervals={current.get('intervals')} on host "
+                      f"{current.get('host')!r} — nothing to regress "
+                      f"against")
+    base_sps = baseline["sps"][key]
+    if base_sps <= 0:
+        return True, f"skip: degenerate baseline {key}={base_sps}"
+    ratio = cur_sps / base_sps
+    msg = (f"{key}: current={cur_sps:.1f} sps, baseline={base_sps:.1f} sps "
+           f"({baseline.get('ts', '?')}), ratio={ratio:.2f}")
+    if ratio < 1.0 - max_regression:
+        return False, (f"REGRESSION {msg} — below the "
+                       f"{1.0 - max_regression:.2f} floor")
+    return True, f"OK {msg}"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("file", help="BENCH_sps.json (JSON-lines)")
+    ap.add_argument("--key", default="engine_sps_mesh",
+                    help="sps entry to gate on (default engine_sps_mesh)")
+    ap.add_argument("--max-regression", type=float, default=0.30,
+                    help="fail when current < (1 - this) * baseline")
+    args = ap.parse_args()
+    records = load_records(args.file)
+    if records is None:
+        print(f"# check_sps skip: {args.file} not found", file=sys.stderr)
+        return 0
+    ok, msg = check(records, args.key, args.max_regression)
+    print(f"# check_sps {msg}", file=sys.stderr)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

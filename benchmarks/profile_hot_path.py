@@ -1,0 +1,50 @@
+"""Per-phase breakdown of the host runtime's hot path.
+
+Where does an interval's wall time actually go? The host runtime
+accumulates per-phase timers when ``HostConfig(profile=True)``:
+
+    actor_wait        executors blocked waiting for a sampled action
+    env_step_wait     executors blocked waiting for a batched env step
+    actor_forward     actor threads inside the policy dispatch + sync
+    env_step_dispatch stepper thread inside the env dispatch + sync
+    learner_drain     coordinator blocked on the previous learner before
+                      a slab is reused (the swap barrier's read side)
+    interval_barrier  coordinator waiting for executors to finish the
+                      interval (the swap barrier's write side)
+    sim_env_sleep     injected StepTimeModel sleep (0 unless simulating)
+
+Phase times are summed across threads, so they don't add up to wall
+time (n_envs executors wait concurrently); they rank where the next
+optimization should go. ``learner_drain`` near zero means the learner
+fully hides behind the rollout — the paper's overlap claim.
+
+    PYTHONPATH=src python -m benchmarks.run --only profile
+"""
+import numpy as np
+import jax
+
+from repro.core import engine
+from repro.core.host_runtime import HostConfig
+from repro.envs import catch
+from repro.models.cnn_policy import apply_mlp_policy, init_mlp_policy
+from repro.optim import rmsprop
+
+IV = 12
+
+
+def run(intervals=IV, alpha=8, n_envs=8):
+    env1 = catch.make()
+    cfg = engine.HTSConfig(alpha=alpha, n_envs=n_envs, seed=0)
+    params = init_mlp_policy(jax.random.key(0),
+                             int(np.prod(env1.obs_shape)), env1.n_actions)
+    opt = rmsprop(7e-4)
+    policy = lambda p, o: apply_mlp_policy(p, o.reshape(o.shape[0], -1))
+    rt = engine.make_runtime("host", env1, policy, params, opt, cfg,
+                             host=HostConfig(profile=True))
+    rt.run(intervals)              # warmup: compile + caches
+    out = rt.run(intervals)
+    rows = [("hot_path_sps", out.sps, "sps"),
+            ("hot_path_wall", out.wall_time, "s")]
+    for key in sorted(rt.profile):
+        rows.append((f"hot_path_{key}", rt.profile[key], "s"))
+    return rows

@@ -17,9 +17,18 @@ so a preempted multi-hour sweep restarts where it died.
 import argparse
 import json
 import os
+import platform
 import sys
 import time
 import traceback
+
+
+def host_fingerprint() -> str:
+    """Coarse hardware identity stamped into --append-sps records.
+    benchmarks.check_sps only compares SPS between records with equal
+    fingerprints: a CI runner regressing against a dev-machine baseline
+    would measure hardware, not code."""
+    return f"{sys.platform}-{platform.machine()}-{os.cpu_count()}cpu"
 
 MODULES = [
     "fig3_runtime_model",
@@ -33,6 +42,7 @@ MODULES = [
     "tab5_sync_interval",
     "tabA1_correction",
     "tabA2_impl_sps",       # (engine_sps backs it; full sweep via --runtime)
+    "profile_hot_path",     # host runtime per-phase breakdown
     "roofline_table",
 ]
 
@@ -97,6 +107,7 @@ def _run_runtime_sweep(args) -> None:
         record = {
             "ts": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
             "intervals": args.intervals,
+            "host": host_fingerprint(),
             "wall_s": round(time.time() - t0, 2),
             "sps": {name: round(value, 2) for name, value, _ in rows},
         }

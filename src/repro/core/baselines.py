@@ -56,6 +56,9 @@ def make_sync_step(policy_apply: Callable, env: Env, opt: Optimizer,
 def sync_init_carry(params, opt: Optimizer, env: Env, cfg: HTSConfig):
     keys = jax.random.split(jax.random.key(cfg.seed ^ 0x5EED), cfg.n_envs)
     env_state, obs = env.reset(keys)
+    # copy: the engine donates the carry (in-place updates must not
+    # invalidate the caller's params — see mesh_runtime.init_carry)
+    params = jax.tree.map(jnp.copy, params)
     return (params, opt.init(params), env_state, obs,
             jnp.zeros((), jnp.int32))
 
@@ -109,6 +112,7 @@ def async_init_carry(params, opt: Optimizer, env: Env, cfg: HTSConfig,
                      acfg: AsyncConfig):
     keys = jax.random.split(jax.random.key(cfg.seed ^ 0x5EED), cfg.n_envs)
     env_state, obs = env.reset(keys)
+    params = jax.tree.map(jnp.copy, params)   # donated carry — see sync
     history = jax.tree.map(
         lambda p: jnp.broadcast_to(p[None], (acfg.staleness,) + p.shape),
         params)

@@ -3,10 +3,11 @@ storage.
 
 Two views:
 
-* ``HostStorage`` / ``DoubleBuffer`` — preallocated numpy ring storage with
-  the paper's swap discipline for the threaded host runtime: the roles of
-  the two storages switch only when the write storage is full AND the read
-  storage is exhausted (that barrier is what bounds staleness to one).
+* ``SlabPair`` — two preallocated numpy slab dicts with the paper's swap
+  discipline for the threaded host runtime: roles alternate with
+  interval parity, and a slab is handed to the learner by reference
+  (the barrier that bounds staleness to one lives in the coordinator
+  loop — see DESIGN.md §2.1/§4).
 
 * ``device_rollout_buffer`` — a functional pytree used by the mesh runtime,
   where the "swap" is positional in the scan carry (the freshly produced
@@ -14,116 +15,57 @@ Two views:
 """
 from __future__ import annotations
 
-import threading
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Dict
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 
-# ------------------------------------------------------------------ host
-class HostStorage:
-    """Preallocated (capacity, ...) numpy arrays + a write cursor."""
+# ------------------------------------------------------------------ slabs
+class SlabPair:
+    """The zero-copy double buffer for the batched host runtime.
 
-    def __init__(self, capacity: int, specs: Dict[str, tuple]):
-        # specs: name -> (shape_tail, dtype)
-        self.capacity = capacity
-        self.data = {k: np.zeros((capacity,) + tuple(s), d)
-                     for k, (s, d) in specs.items()}
-        self.write_idx = 0
-        self.read_count = 0
+    Two preallocated slab dicts of ``(alpha, n_envs, ...)`` numpy arrays
+    (plus a bootstrap-observation row pair) whose roles alternate with
+    interval parity: interval ``j``'s executors write slab ``j % 2``
+    (slot ``(t, env_id)`` owned by exactly one executor thread — no
+    lock) while the learner reads slab ``(j - 1) % 2``. The hand-off to
+    the learner is **by reference** (``as_traj`` wraps the arrays with
+    ``jnp.asarray``, which may alias the numpy memory zero-copy on the
+    CPU backend) — no per-interval copy of the interval's data.
 
-    def write(self, **items) -> None:
-        i = self.write_idx
-        assert i < self.capacity, "storage overflow"
-        self.write_slot(i, **items)
-        self.write_idx += 1
-
-    def write_slot(self, idx: int, **items) -> None:
-        """Write one transition into an explicit slot without moving the
-        cursor — the executor path, where slot = t * n_envs + env_id is
-        owned by exactly one executor thread (so no lock is needed for the
-        array stores; ``advance`` moves the cursor under the buffer lock)."""
-        for k, v in items.items():
-            self.data[k][idx] = v
-
-    def advance(self, n: int) -> None:
-        """Move the write cursor after ``n`` slot writes (call with the
-        owning DoubleBuffer's lock held)."""
-        self.write_idx = min(self.write_idx + n, self.capacity)
-
-    @property
-    def full(self) -> bool:
-        return self.write_idx >= self.capacity
-
-    def mark_read(self) -> None:
-        self.read_count += 1
-
-    @property
-    def exhausted(self) -> bool:
-        return self.read_count >= 1   # learner does >=1 pass then releases
-
-    def reset(self) -> None:
-        self.write_idx = 0
-        self.read_count = 0
-
-
-class DoubleBuffer:
-    """Two HostStorages with the HTS-RL swap barrier.
-
-    Executors call ``write``; the learner calls ``acquire_read`` /
-    ``release_read``. ``swap`` blocks until (write full) & (read exhausted),
-    which is exactly the synchronization in Sec. 4.1 — it bounds the
-    behavior/target lag at one and is the price of determinism.
+    The swap discipline that bounds staleness at one interval: slab
+    ``j % 2`` is rewritten at interval ``j + 2``, and the coordinator
+    blocks on the learner dispatched at interval ``j + 1`` (the reader
+    of slab ``j % 2``) before releasing interval ``j + 2``'s executors —
+    the paper's "write full AND read exhausted" barrier (DESIGN.md §4),
+    enforced by loop structure instead of locks.
     """
 
-    def __init__(self, capacity: int, specs: Dict[str, tuple]):
-        self.storages = [HostStorage(capacity, specs),
-                         HostStorage(capacity, specs)]
-        self.write_role = 0
-        self.cv = threading.Condition()
-        self.generation = 0
-        self._first = True
+    def __init__(self, alpha: int, n_envs: int, specs: Dict[str, tuple]):
+        def make():
+            return {k: np.zeros((alpha, n_envs) + tuple(s), d)
+                    for k, (s, d) in specs.items()}
 
-    @property
-    def write_storage(self) -> HostStorage:
-        return self.storages[self.write_role]
+        obs_shape, obs_dtype = specs["obs"]
 
-    @property
-    def read_storage(self) -> HostStorage:
-        return self.storages[1 - self.write_role]
+        def make_boot():
+            return np.zeros((n_envs,) + tuple(obs_shape), obs_dtype)
 
-    def writer_wait_until_writable(self, timeout=None) -> bool:
-        with self.cv:
-            return self.cv.wait_for(
-                lambda: not self.write_storage.full, timeout=timeout)
+        self.slabs = (make(), make())
+        self.bootstrap = (make_boot(), make_boot())
 
-    def write(self, **items) -> None:
-        with self.cv:
-            self.write_storage.write(**items)
-            if self.write_storage.full:
-                self.cv.notify_all()
+    def write_view(self, j: int):
+        """(slab dict, bootstrap row block) interval ``j`` writes into."""
+        return self.slabs[j % 2], self.bootstrap[j % 2]
 
-    def reader_acquire(self, timeout=None) -> Optional[HostStorage]:
-        """Block until a full storage is available to read; returns it."""
-        with self.cv:
-            ok = self.cv.wait_for(lambda: self.write_storage.full,
-                                  timeout=timeout)
-            if not ok:
-                return None
-            return self.write_storage
-
-    def swap(self) -> None:
-        """Called by the coordinator once learner + executors both finished
-        their interval: the just-written storage becomes readable and the
-        (now exhausted) read storage is recycled for writing."""
-        with self.cv:
-            self.read_storage.reset()
-            self.write_role = 1 - self.write_role
-            self.generation += 1
-            self.cv.notify_all()
+    def as_traj(self, j: int) -> Dict[str, jnp.ndarray]:
+        """Interval ``j``'s finished data as a learner trajectory pytree —
+        by reference, not by copy."""
+        slab, boot = self.write_view(j)
+        out = {k: jnp.asarray(v) for k, v in slab.items()}
+        out["bootstrap_obs"] = jnp.asarray(boot)
+        return out
 
 
 # ---------------------------------------------------------------- device

@@ -46,6 +46,7 @@ from typing import Any, Callable, Dict, NamedTuple, Protocol, runtime_checkable
 
 import numpy as np
 import jax
+import jax.numpy as jnp
 
 
 class HTSConfig(NamedTuple):
@@ -196,8 +197,15 @@ class ScanRuntimeBase:
         raise NotImplementedError
 
     def _program(self, n_intervals: int) -> Callable:
+        # the carry is donated: params/opt-state/trajectory buffers are
+        # updated in place instead of being copied at the program
+        # boundary. Safe because every carry this is called with is
+        # runtime-private: _initial_carry builds fresh arrays (and copies
+        # params0), run_from copies the caller's capsule, and state()
+        # copies on capture.
         return jax.jit(lambda carry: jax.lax.scan(
-            self._step, carry, None, length=n_intervals))
+            self._step, carry, None, length=n_intervals),
+            donate_argnums=0)
 
     def _result_state(self, carry):
         raise NotImplementedError
@@ -227,7 +235,9 @@ class ScanRuntimeBase:
     def state(self) -> TrainState:
         if self.carry is None:
             self.init()
-        return self._carry_to_state(self.carry)
+        # copy on capture: the live carry is donated to the next program
+        # call, which would otherwise invalidate the capsule's buffers
+        return jax.tree.map(jnp.copy, self._carry_to_state(self.carry))
 
     def run(self, n_intervals: int) -> RunResult:
         self.init()
@@ -238,7 +248,9 @@ class ScanRuntimeBase:
         if not self._built:
             self._build()
             self._built = True
-        self.carry = self._state_to_carry(state)
+        # copy on restore: the program donates its carry, and the caller
+        # keeps (and may reuse) the capsule
+        self.carry = self._state_to_carry(jax.tree.map(jnp.copy, state))
         return self._segment(n_intervals, finalize)
 
     def _segment(self, n_intervals: int, finalize: bool = True) -> RunResult:
@@ -255,7 +267,10 @@ class ScanRuntimeBase:
         # callers (trainer mid-run segments) skip that reporting cost.
         final = self._finalize(self.carry) if finalize else self.carry
         params, state = self._result_state(final)
-        jax.block_until_ready(params)
+        # wall_time blocks on EVERYTHING the run produced (params AND
+        # metric streams), not just the first output — async dispatch
+        # must not flatter the SPS numbers
+        jax.block_until_ready((params, metrics))
         wall = time.perf_counter() - t0
         steps = n_intervals * cfg.alpha * cfg.n_envs
         return RunResult(

@@ -1,17 +1,36 @@
 """Faithful threaded HTS-RL (paper Fig. 1(e) / Fig. 2(d)) on a single host.
 
-Process layout (paper -> here): executor processes -> one thread per
-environment replica; actor processes -> ``n_actors`` threads batching
-whatever observations are in the state buffer; learner -> the coordinator
-thread. JAX releases the GIL inside compiled computations, so threads give
-the same concurrency the paper gets from processes (see DESIGN.md §2).
+Process layout (paper -> here): executor processes -> one persistent
+thread per environment replica; actor processes -> ``n_actors``
+persistent threads batching whatever observations are in the state
+buffer; learner -> the coordinator thread. JAX releases the GIL inside
+compiled computations, so threads give the same concurrency the paper
+gets from processes (see DESIGN.md §2).
+
+The hot path dispatches O(1) compiled programs per *batch*, not per
+env-step:
+
+  * persistent worker pools — actor/executor/stepper threads are spawned
+    once per ``run`` segment and reused across all intervals (previously
+    ``n_actors + n_envs`` threads were spawned and joined per interval);
+  * batched env stepping — executors submit ready (env, step, action)
+    requests to a stepper that groups them into ONE fixed-shape padded
+    dispatch over device-resident stacked env states (previously one
+    ``jit(env.step)`` dispatch + three forced host syncs per env-step);
+  * per-interval seed tables — all ``(env, step)`` action and transition
+    keys for an interval are derived in one device call (previously two
+    ``fold_in`` dispatches per observation);
+  * slab hand-off — the double buffer is a ``SlabPair`` of preallocated
+    numpy slabs passed to the learner by reference (previously the whole
+    interval was copied on every hand-off).
 
 Key properties implemented exactly as in the paper:
   * state buffer / action buffer between executors and actors (queues),
     actors poll and batch asynchronously;
   * per-observation executor-attached seeds -> deterministic actions
     regardless of actor count/batching (Sec. 4.1 'full determinism');
-  * two data storages with the swap barrier (core/buffers.py);
+  * two data storages with the swap barrier (core/buffers.SlabPair: the
+    coordinator blocks on the previous learner before a slab is reused);
   * learner computes the gradient at theta_{j-1} on D^{theta_{j-1}} while
     executors collect D^{theta_j} — one-step delayed gradient (Eq. 6);
   * batch synchronization every alpha steps.
@@ -20,7 +39,12 @@ The actor computation and the learner update are the SAME functions the
 fused/sharded runtimes use (core/rollout.actor_forward,
 mesh_runtime.make_learner_update) — the thread scheduling here and the
 XLA scheduling there are two executions of one program, which is why
-tests/test_equivalence.py can demand bit-identical parameters.
+tests/test_equivalence.py can demand bit-identical parameters. Batch
+composition cannot affect values: keys are pure functions of
+(seed, env_id, step) and both the actor forward and the batched env
+step are vmapped row-independent programs, so ANY grouping of ready
+envs — including the out-of-order groupings ``step_time`` skew produces
+— writes bit-identical trajectories (tests/test_perf_guards.py).
 
 ``step_time`` (optional) injects simulated environment step durations via
 ``time.sleep`` for wall-clock throughput experiments.
@@ -31,14 +55,14 @@ import queue
 import threading
 import time
 from dataclasses import dataclass
-from typing import Callable, Optional
+from typing import Callable, Dict, Optional
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.core import delayed_grad, determinism
-from repro.core.buffers import DoubleBuffer
+from repro.core.buffers import SlabPair
 from repro.core.engine import (HTSConfig, RunResult, TrainState,
                                register_runtime)
 from repro.core.mesh_runtime import make_learner_update
@@ -47,6 +71,8 @@ from repro.envs.interfaces import Env
 from repro.envs.steptime import StepTimeModel
 from repro.optim import Optimizer
 
+_SHUTDOWN = object()          # queue sentinel for pool teardown
+
 
 @dataclass
 class HostConfig:
@@ -54,6 +80,7 @@ class HostConfig:
     step_time: Optional[StepTimeModel] = None
     time_scale: float = 1.0          # multiply simulated durations
     actor_compute: float = 0.0       # optional simulated actor latency
+    profile: bool = False            # accumulate per-phase wall times
 
 
 @register_runtime("host")
@@ -71,25 +98,78 @@ class HostHTSRL:
         self.params0 = params
         self._built = False
         self.dg = None    # built lazily: run() always starts via init()
+        self.profile: Dict[str, float] = {}
+        self._prof_lock = threading.Lock()
 
+    # ------------------------------------------------------------- build
     def _build(self) -> None:
-        """Compile-once pieces (jitted fns, storage specs); reused across
-        init() resets so warm reruns don't recompile."""
+        """Compile-once pieces (jitted fns, slab specs); reused across
+        init() resets so warm reruns don't recompile or reallocate."""
         if self._built:
             return
         cfg, env, policy_apply = self.cfg, self.env, self.policy_apply
-        self._env_step = jax.jit(env.step)
-        self._env_reset = jax.jit(env.reset)
+        master = jax.random.key(cfg.seed)
+
+        self._env_reset_v = jax.jit(jax.vmap(env.reset))
+
+        # all (env, step) action/transition keys for interval j in ONE
+        # device call — the executor hot loop never touches the PRNG
+        def make_tables(j):
+            gsteps = j * cfg.alpha + jnp.arange(cfg.alpha, dtype=jnp.int32)
+            ids = jnp.arange(cfg.n_envs, dtype=jnp.int32)
+
+            def key_data(e, g):
+                return jax.random.key_data(determinism.obs_key(master, e, g))
+
+            def per_step(g):
+                return (jax.vmap(lambda e: key_data(e, g))(ids),
+                        jax.vmap(lambda e: key_data(e + 1_000_003, g))(ids))
+
+            return jax.vmap(per_step)(gsteps)   # 2 x (alpha, n_envs, key)
+
+        self._tables_fn = jax.jit(make_tables)
 
         # fixed-batch actor forward (padded to n_envs -> one compile);
-        # shares core/rollout.actor_forward with the fused runtimes
-        def actor_fwd(p, obs, seeds):
-            keys = jax.vmap(jax.random.wrap_key_data)(seeds)
+        # shares core/rollout.actor_forward with the fused runtimes.
+        # Keys are gathered from the interval table by (step, env) — the
+        # batch composition actors happen to see cannot change them.
+        def actor_fwd(p, obs, ids, ts, table):
+            keys = jax.vmap(jax.random.wrap_key_data)(table[ts, ids])
             return actor_forward(policy_apply, p, obs, keys)
 
         self._actor_fwd = jax.jit(actor_fwd)
-        self._learn_fn = jax.jit(
-            make_learner_update(policy_apply, self.opt, cfg))
+
+        # fixed-batch env stepping over device-resident stacked states:
+        # gather the ready rows, vmap one step, scatter back in place
+        # (donated -> XLA updates the state buffer without reallocating).
+        # Padding repeats the last request; duplicate scatter indices
+        # then write identical values, so the result is deterministic.
+        def step_batch(env_states, actions, ids, ts, table):
+            keys = jax.vmap(jax.random.wrap_key_data)(table[ts, ids])
+            sel = jax.tree.map(lambda x: x[ids], env_states)
+            ns, nobs, r, d = jax.vmap(env.step)(sel, actions, keys)
+            env_states = jax.tree.map(
+                lambda full, rows: full.at[ids].set(rows), env_states, ns)
+            return env_states, nobs, r, d
+
+        self._step_batch = jax.jit(step_batch, donate_argnums=(0,))
+
+        learn = make_learner_update(policy_apply, self.opt, cfg)
+        # trailing reporting-only pass: must NOT donate (self.dg and the
+        # capsule keep using its inputs)
+        self._learn_fn = jax.jit(learn)
+
+        # in-stream learner: theta_{j-1} and the old opt state are dead
+        # once the update is applied, so they are donated and updated in
+        # place. params (theta_j) is NOT donated — the actor pool is
+        # still sampling with it for the rest of the interval.
+        def stream_learn(params_prev, opt_state, step, params, traj):
+            dg = delayed_grad.DelayedGradState(params, params_prev,
+                                               opt_state, step)
+            return learn(dg, traj)
+
+        self._learn_stream = jax.jit(stream_learn, donate_argnums=(0, 1))
+
         obs_shape = env.obs_shape
         self._spec = {
             "obs": (obs_shape, np.float32 if obs_shape else np.int32),
@@ -98,25 +178,20 @@ class HostHTSRL:
             "dones": ((), np.float32),
             "behavior_logprob": ((), np.float32),
         }
+        self._slabs = SlabPair(cfg.alpha, cfg.n_envs, self._spec)
         self._built = True
 
     def init(self) -> None:
         cfg = self.cfg
         self._build()
-        self.master = jax.random.key(cfg.seed)
-        self.dg = delayed_grad.init(self.params0, self.opt)
-        spec = self._spec
-        self.buffer = DoubleBuffer(cfg.alpha * cfg.n_envs, spec)
-        self.bootstrap_obs = np.zeros((cfg.n_envs,) + tuple(spec["obs"][0]),
-                                      spec["obs"][1])
-        # per-env current state/obs
+        # params0 is copied so in-place (donating) updates can never
+        # invalidate the caller's parameter tree across run() replays
+        self.dg = delayed_grad.init(jax.tree.map(jnp.copy, self.params0),
+                                    self.opt)
         keys = jax.random.split(jax.random.key(cfg.seed ^ 0x5EED),
                                 cfg.n_envs)
-        self.env_states, self.obs = [], []
-        for i in range(cfg.n_envs):
-            s, o = self._env_reset(keys[i])
-            self.env_states.append(s)
-            self.obs.append(np.asarray(o))
+        self.env_states, obs = self._env_reset_v(keys)
+        self.obs_np = np.array(obs)     # writable host copy
         self.j = 0              # global interval counter
         self.prev_traj = None   # unconsumed read-buffer trajectory
         self._reset_logs()
@@ -126,6 +201,11 @@ class HostHTSRL:
         self.dones_log: list = []
         self.sps_steps = 0
         self.wall_time = 0.0
+        self.profile = {}
+
+    def _prof(self, key: str, dt: float) -> None:
+        with self._prof_lock:
+            self.profile[key] = self.profile.get(key, 0.0) + dt
 
     # ------------------------------------------------------ continuation
     def _zero_traj(self):
@@ -148,27 +228,24 @@ class HostHTSRL:
     def state(self) -> TrainState:
         """The continuation capsule — structurally identical to the fused
         runtimes' (same TrainState fields, same buffer pytree), so a host
-        checkpoint restores into a mesh/sharded run and vice versa."""
+        checkpoint restores into a mesh/sharded run and vice versa. Every
+        leaf is COPIED: the runtime's own buffers are donated/slab-backed
+        and a later segment would otherwise mutate them under the capsule."""
         if self.dg is None:
             self.init()
-        env_state = jax.tree.map(lambda *xs: jnp.stack(xs),
-                                 *self.env_states)
         buf = (self.prev_traj if self.prev_traj is not None
                else self._zero_traj())
-        return TrainState(self.dg, env_state,
-                          jnp.asarray(np.stack(self.obs)), buf,
-                          jnp.asarray(self.j, jnp.int32))
+        capsule = TrainState(self.dg, self.env_states,
+                             jnp.asarray(self.obs_np), dict(buf),
+                             jnp.asarray(self.j, jnp.int32))
+        return jax.tree.map(jnp.copy, capsule)
 
     def _restore(self, state: TrainState) -> None:
-        cfg = self.cfg
-        self.master = jax.random.key(cfg.seed)
-        self.dg = delayed_grad.DelayedGradState(*state.algo)
-        self.buffer = DoubleBuffer(cfg.alpha * cfg.n_envs, self._spec)
-        obs = np.asarray(state.obs)
-        self.obs = [obs[i].copy() for i in range(cfg.n_envs)]
-        self.env_states = [jax.tree.map(lambda x: x[i], state.env_state)
-                           for i in range(cfg.n_envs)]
-        self.bootstrap_obs = obs.copy()
+        # copies decouple the capsule from this runtime's donated buffers
+        self.dg = delayed_grad.DelayedGradState(
+            *jax.tree.map(jnp.copy, tuple(state.algo)))
+        self.env_states = jax.tree.map(jnp.copy, state.env_state)
+        self.obs_np = np.array(state.obs)
         self.j = int(state.interval)
         self.prev_traj = (jax.tree.map(jnp.asarray, dict(state.buffer))
                           if self.j > 0 else None)
@@ -180,141 +257,285 @@ class HostHTSRL:
         self._restore(state)
         return self._segment(n_intervals, finalize)
 
-    # ------------------------------------------------------------ actors
-    def _actor_loop(self, state_q: "queue.Queue", action_slots, params):
-        n = self.cfg.n_envs
-        while True:
+    # ------------------------------------------------------------- pools
+    def _spawn_pools(self) -> None:
+        cfg = self.cfg
+        # a worker that survived a previous segment's teardown (stuck in
+        # a long dispatch/sleep past the join timeout) must never deliver
+        # a stale result into THIS segment's fresh slot queues — that
+        # would silently corrupt the trajectory. Refuse loudly instead.
+        zombies = [th for th in getattr(self, "_zombies", ())
+                   if th.is_alive()]
+        if zombies:
+            raise RuntimeError(
+                f"{len(zombies)} worker thread(s) from a previous segment "
+                f"are still running after teardown; refusing to start a "
+                f"new segment on this runtime")
+        self._state_q: "queue.Queue" = queue.Queue()
+        self._step_q: "queue.Queue" = queue.Queue()
+        self._action_slots = [queue.Queue() for _ in range(cfg.n_envs)]
+        self._step_slots = [queue.Queue() for _ in range(cfg.n_envs)]
+        self._start_barrier = threading.Barrier(cfg.n_envs + 1)
+        self._end_barrier = threading.Barrier(cfg.n_envs + 1)
+        self._pool_stop = False
+        self._pool_exc: list = []
+        self._threads = (
+            [threading.Thread(target=self._guard, args=(self._actor_loop,),
+                              daemon=True)
+             for _ in range(self.host.n_actors)]
+            + [threading.Thread(target=self._guard, args=(self._stepper_loop,),
+                                daemon=True)]
+            + [threading.Thread(target=self._guard,
+                                args=(self._executor_loop, i), daemon=True)
+               for i in range(cfg.n_envs)])
+        for th in self._threads:
+            th.start()
+
+    def _release_pool_waits(self) -> None:
+        """Unblock EVERY wait a pool thread can be parked on: both
+        barriers, the shared request queues, and the per-env slot
+        queues. Idempotent; used by normal teardown and by _guard when a
+        worker dies (an executor blocked on its slot would otherwise
+        never see a sentinel and leak)."""
+        self._pool_stop = True
+        for barrier in (self._start_barrier, self._end_barrier):
             try:
-                first = state_q.get(timeout=5.0)
+                barrier.abort()
+            except Exception:
+                pass
+        for _ in range(self.host.n_actors):
+            self._state_q.put(_SHUTDOWN)
+        self._step_q.put(_SHUTDOWN)
+        for slot in list(self._action_slots) + list(self._step_slots):
+            slot.put(_SHUTDOWN)
+
+    def _shutdown_pools(self) -> None:
+        self._release_pool_waits()
+        for th in self._threads:
+            th.join(timeout=10.0)
+        # keep handles to any straggler so _spawn_pools can refuse to
+        # run a new segment while it is still alive
+        self._zombies = [th for th in self._threads if th.is_alive()]
+        self._threads = []
+
+    def _guard(self, fn, *args) -> None:
+        """Worker wrapper: record the exception and release every pool
+        wait so the coordinator (and sibling workers) unblock instead of
+        hanging."""
+        try:
+            fn(*args)
+        except Exception as e:          # noqa: BLE001 — repropagated
+            if self._pool_stop:
+                return                  # normal teardown (aborted barrier)
+            self._pool_exc.append(e)
+            self._release_pool_waits()
+
+    def _check_pool(self) -> None:
+        if self._pool_exc:
+            raise self._pool_exc[0]
+
+    def _drain_batch(self, q: "queue.Queue", first) -> Optional[list]:
+        """The shared actor/stepper batching protocol: take the blocking
+        ``first`` item, greedily drain up to ``n_envs`` ready requests,
+        and re-surface a shutdown sentinel for sibling workers. Returns
+        None on shutdown."""
+        if first is _SHUTDOWN:
+            return None
+        batch = [first]
+        while len(batch) < self.cfg.n_envs:
+            try:
+                item = q.get_nowait()
             except queue.Empty:
+                break
+            if item is _SHUTDOWN:
+                q.put(_SHUTDOWN)      # keep sentinel for sibling workers
+                break
+            batch.append(item)
+        return batch
+
+    @staticmethod
+    def _pad(n: int, *cols):
+        """Pad int32 request columns to the fixed dispatch width ``n`` by
+        repeating the last request (identical padded rows compute —
+        and, for scatters, write — identical values)."""
+        out = []
+        for col in cols:
+            a = np.asarray(col, np.int32)
+            pad = n - a.shape[0]
+            out.append(np.concatenate([a, np.repeat(a[-1:], pad)])
+                       if pad else a)
+        return out
+
+    # ------------------------------------------------------------ actors
+    def _actor_loop(self) -> None:
+        n = self.cfg.n_envs
+        q = self._state_q
+        prof = self.host.profile
+        while True:
+            batch = self._drain_batch(q, q.get())
+            if batch is None:
                 return
-            if first is None:
-                return
-            batch = [first]
-            while len(batch) < n:
-                try:
-                    batch.append(state_q.get_nowait())
-                except queue.Empty:
-                    break
-            if batch[-1] is None:
-                state_q.put(None)      # keep sentinel for other actors
-                batch = batch[:-1]
-                if not batch:
-                    return
-            env_ids = [b[0] for b in batch]
+            k = len(batch)
+            ids, ts = self._pad(n, [b[0] for b in batch],
+                                [b[1] for b in batch])
             obs = np.stack([b[2] for b in batch])
-            seeds = np.stack([b[3] for b in batch])
-            pad = n - len(batch)
-            if pad:
-                obs = np.concatenate([obs, np.zeros((pad,) + obs.shape[1:],
-                                                    obs.dtype)])
-                seeds = np.concatenate([seeds, seeds[-1:].repeat(pad, 0)])
+            if k < n:
+                obs = np.concatenate([obs, np.repeat(obs[-1:], n - k, 0)])
             if self.host.actor_compute:
                 time.sleep(self.host.actor_compute * self.host.time_scale)
-            actions, blp = self._actor_fwd(params, jnp.asarray(obs),
-                                           jnp.asarray(seeds))
+            t0 = time.perf_counter() if prof else 0.0
+            actions, blp = self._actor_fwd(self._behavior, obs, ids, ts,
+                                           self._actor_table)
             actions = np.asarray(actions)
             blp = np.asarray(blp)
-            for i, eid in enumerate(env_ids):
-                action_slots[eid].put((int(actions[i]), float(blp[i])))
+            if prof:
+                self._prof("actor_forward", time.perf_counter() - t0)
+            for i in range(k):
+                self._action_slots[ids[i]].put(
+                    (int(actions[i]), float(blp[i])))
+
+    # ----------------------------------------------------------- stepper
+    def _stepper_loop(self) -> None:
+        """Groups ready (env, step, action) requests into one padded
+        fixed-shape dispatch. Which envs land in which group is racy and
+        irrelevant: each row's transition depends only on its own
+        (state, action, key)."""
+        n = self.cfg.n_envs
+        q = self._step_q
+        prof = self.host.profile
+        while True:
+            batch = self._drain_batch(q, q.get())
+            if batch is None:
+                return
+            k = len(batch)
+            ids, ts, acts = self._pad(n, [b[0] for b in batch],
+                                      [b[1] for b in batch],
+                                      [b[2] for b in batch])
+            t0 = time.perf_counter() if prof else 0.0
+            self.env_states, nobs, r, d = self._step_batch(
+                self.env_states, acts, ids, ts, self._step_table)
+            nobs = np.asarray(nobs)
+            r = np.asarray(r)
+            d = np.asarray(d)
+            if prof:
+                self._prof("env_step_dispatch", time.perf_counter() - t0)
+            for i in range(k):
+                self._step_slots[ids[i]].put(
+                    (nobs[i], float(r[i]), float(d[i])))
 
     # --------------------------------------------------------- executors
-    def _executor_loop(self, env_id: int, interval_j: int,
-                       state_q: "queue.Queue", action_slots):
+    def _executor_loop(self, env_id: int) -> None:
         cfg, host = self.cfg, self.host
-        obs = self.obs[env_id]
-        state = self.env_states[env_id]
-        for t in range(cfg.alpha):
-            gstep = interval_j * cfg.alpha + t
-            key = determinism.obs_key(self.master, env_id, gstep)
-            seed = np.asarray(jax.random.key_data(key))
-            state_q.put((env_id, t, obs, seed))
-            action, blp = action_slots[env_id].get()
-            if host.step_time is not None:
-                dt = host.step_time.sample(env_id, gstep, cfg.seed)
-                time.sleep(dt * host.time_scale)
-            skey = determinism.obs_key(self.master, env_id + 1_000_003,
-                                       gstep)
-            state, nobs, r, d = self._env_step(state, jnp.asarray(action),
-                                               skey)
-            nobs = np.asarray(nobs)
-            self.buffer.write_storage.write_slot(
-                t * cfg.n_envs + env_id,
-                obs=obs, actions=action, rewards=float(r), dones=float(d),
-                behavior_logprob=blp)
-            obs = nobs
-        with self.buffer.cv:
-            self.buffer.write_storage.advance(cfg.alpha)
-        self.obs[env_id] = obs
-        self.env_states[env_id] = state
-        self.bootstrap_obs[env_id] = obs
-
-    # ------------------------------------------------------------- learn
-    def _learn(self, read_traj):
-        self.dg = self._learn_fn(self.dg, read_traj)
-
-    def _storage_to_traj(self, storage, bootstrap_obs):
-        # NOTE: explicit .copy() — jnp.asarray on the CPU backend can alias
-        # the numpy buffer zero-copy, and both the storages (after a swap)
-        # and bootstrap_obs are mutated in place by the next interval's
-        # executors while the learner is still reading this snapshot.
-        cfg = self.cfg
-        out = {}
-        for k, arr in storage.data.items():
-            out[k] = jnp.asarray(
-                arr.reshape((cfg.alpha, cfg.n_envs) + arr.shape[1:]).copy())
-        out["bootstrap_obs"] = jnp.asarray(bootstrap_obs.copy())
-        return out
+        prof = host.profile
+        while True:
+            try:
+                self._start_barrier.wait()
+            except threading.BrokenBarrierError:
+                return                  # pool teardown
+            if self._pool_stop:
+                return
+            j = self._cur_j
+            slab, boot = self._cur_slab, self._cur_boot
+            obs = self.obs_np[env_id]
+            for t in range(cfg.alpha):
+                self._state_q.put((env_id, t, obs))
+                t0 = time.perf_counter() if prof else 0.0
+                got = self._action_slots[env_id].get()
+                if got is _SHUTDOWN:
+                    return              # a sibling worker died mid-interval
+                action, blp = got
+                if prof:
+                    self._prof("actor_wait", time.perf_counter() - t0)
+                if host.step_time is not None:
+                    dt = host.step_time.sample(env_id, j * cfg.alpha + t,
+                                               cfg.seed)
+                    time.sleep(dt * host.time_scale)
+                    if prof:
+                        self._prof("sim_env_sleep", dt * host.time_scale)
+                self._step_q.put((env_id, t, action))
+                t0 = time.perf_counter() if prof else 0.0
+                got = self._step_slots[env_id].get()
+                if got is _SHUTDOWN:
+                    return
+                nobs, r, d = got
+                if prof:
+                    self._prof("env_step_wait", time.perf_counter() - t0)
+                slab["obs"][t, env_id] = obs
+                slab["actions"][t, env_id] = action
+                slab["rewards"][t, env_id] = r
+                slab["dones"][t, env_id] = d
+                slab["behavior_logprob"][t, env_id] = blp
+                obs = nobs
+            self.obs_np[env_id] = obs
+            boot[env_id] = obs
+            self._end_barrier.wait()
 
     # --------------------------------------------------------------- run
     def run(self, n_intervals: int) -> RunResult:
         self.init()   # engine contract: every run starts from params0
         return self._segment(n_intervals)
 
+    def _run_intervals(self, n_intervals: int) -> None:
+        cfg = self.cfg
+        prof = self.host.profile
+        self._spawn_pools()
+        try:
+            prev_traj = self.prev_traj
+            for j in range(self.j, self.j + n_intervals):
+                self._check_pool()
+                # swap barrier: the learner dispatched LAST interval read
+                # the slab this interval overwrites — "write full AND
+                # read exhausted" before the roles flip (DESIGN.md §4)
+                t0 = time.perf_counter() if prof else 0.0
+                jax.block_until_ready(self.dg)
+                if prof:
+                    self._prof("learner_drain", time.perf_counter() - t0)
+                slab, boot = self._slabs.write_view(j)
+                self._cur_j = j
+                self._cur_slab, self._cur_boot = slab, boot
+                self._behavior = self.dg.params     # theta_j
+                self._actor_table, self._step_table = self._tables_fn(
+                    jnp.asarray(j, jnp.int32))
+                self._start_barrier.wait()          # release executors
+                # learner runs concurrently on the previous interval's
+                # data (one-step delayed gradient, Eq. 6)
+                if prev_traj is not None:
+                    self.dg = self._learn_stream(
+                        self.dg.params_prev, self.dg.opt_state,
+                        self.dg.step, self.dg.params, prev_traj)
+                t0 = time.perf_counter() if prof else 0.0
+                self._end_barrier.wait()            # executors finished
+                if prof:
+                    self._prof("interval_barrier",
+                               time.perf_counter() - t0)
+                # interval done: hand the slab to the learner by
+                # reference; only the small reporting streams are copied
+                prev_traj = self._slabs.as_traj(j)
+                self.rewards_log.append(slab["rewards"].copy())
+                self.dones_log.append(slab["dones"].copy())
+                self.sps_steps += cfg.alpha * cfg.n_envs
+            self.j += n_intervals
+            self.prev_traj = prev_traj
+        except threading.BrokenBarrierError:
+            self._check_pool()
+            raise
+        finally:
+            self._shutdown_pools()
+        self._check_pool()
+
     def _segment(self, n_intervals: int, finalize: bool = True) -> RunResult:
         cfg = self.cfg
         t_start = time.perf_counter()
-        prev_traj = self.prev_traj
-        for j in range(self.j, self.j + n_intervals):
-            state_q: "queue.Queue" = queue.Queue()
-            action_slots = {i: queue.Queue() for i in range(cfg.n_envs)}
-            behavior = self.dg.params     # theta_j
-            actors = [threading.Thread(
-                target=self._actor_loop, args=(state_q, action_slots,
-                                               behavior), daemon=True)
-                for _ in range(self.host.n_actors)]
-            execs = [threading.Thread(
-                target=self._executor_loop, args=(i, j, state_q,
-                                                  action_slots), daemon=True)
-                for i in range(cfg.n_envs)]
-            for th in actors + execs:
-                th.start()
-            # learner runs concurrently on the *previous* interval's data
-            if prev_traj is not None:
-                self._learn(prev_traj)
-            for th in execs:
-                th.join()
-            state_q.put(None)
-            for th in actors:
-                th.join()
-            # interval done: record, snapshot read data, swap storages
-            st = self.buffer.write_storage
-            prev_traj = self._storage_to_traj(st, self.bootstrap_obs)
-            r = st.data["rewards"].reshape(cfg.alpha, cfg.n_envs)
-            d = st.data["dones"].reshape(cfg.alpha, cfg.n_envs)
-            self.rewards_log.append(r.copy())
-            self.dones_log.append(d.copy())
-            self.sps_steps += cfg.alpha * cfg.n_envs
-            self.buffer.swap()
-        self.j += n_intervals
-        self.prev_traj = prev_traj
+        if n_intervals > 0:
+            self._run_intervals(n_intervals)
         # trailing learner pass on the final interval's data — REPORTING
         # ONLY: self.dg stays mid-stream (prev_traj unconsumed), so
         # state()/run_from continue bit-exactly without double-applying
         # this update (same split as ScanRuntimeBase._finalize).
         dg_final = self.dg
-        if finalize and prev_traj is not None:
-            dg_final = self._learn_fn(self.dg, prev_traj)
+        if finalize and self.prev_traj is not None:
+            dg_final = self._learn_fn(self.dg, self.prev_traj)
+        jax.block_until_ready(dg_final)   # honest wall time / SPS
         self.wall_time = time.perf_counter() - t_start
         empty = np.zeros((0, cfg.alpha, cfg.n_envs), np.float32)
         return RunResult(

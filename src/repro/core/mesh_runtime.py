@@ -105,10 +105,15 @@ def make_hts_step(policy_apply: Callable, env: Env, opt: Optimizer,
 
 def init_carry(policy_params, opt: Optimizer, env: Env, cfg: HTSConfig,
                policy_apply: Callable):
-    """Initial (dg_state, env_state, obs, zero read buffer, j=0)."""
+    """Initial (dg_state, env_state, obs, zero read buffer, j=0).
+
+    ``policy_params`` is copied: the carry is donated into the interval
+    program (engine.ScanRuntimeBase._program), and in-place updates must
+    never invalidate the caller's parameter tree — run() replays and
+    cross-runtime comparisons hand the same params to many runtimes."""
     keys = jax.random.split(jax.random.key(cfg.seed ^ 0x5EED), cfg.n_envs)
     env_state, obs = env.reset(keys)
-    dg = delayed_grad.init(policy_params, opt)
+    dg = delayed_grad.init(jax.tree.map(jnp.copy, policy_params), opt)
     zero_traj = {
         "obs": jnp.zeros((cfg.alpha,) + obs.shape, obs.dtype),
         "actions": jnp.zeros((cfg.alpha, cfg.n_envs), jnp.int32),

@@ -85,10 +85,14 @@ class ShardedHTSRL(ScanRuntimeBase):
             return jax.lax.scan(self._step, carry, None,
                                 length=n_intervals)
 
+        # carry donated like every scan runtime (see
+        # engine.ScanRuntimeBase._program): params/opt-state/trajectory
+        # shards update in place across the program boundary
         return jax.jit(shard_map(body, mesh=self.mesh,
                                  in_specs=(carry_specs,),
                                  out_specs=(carry_specs, metric_specs),
-                                 check_rep=False))
+                                 check_rep=False),
+                       donate_argnums=0)
 
     def _finalize(self, carry):
         # reporting-only trailing learner pass (same update-count contract

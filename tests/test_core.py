@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import delayed_grad, losses, vtrace
-from repro.core.buffers import DoubleBuffer, HostStorage
+from repro.core.buffers import SlabPair
 from repro.optim import sgd, rmsprop, adam, apply_updates
 
 
@@ -42,22 +42,27 @@ def test_delayed_gradient_skip():
     assert int(dg3.step) == 1
 
 
-def test_double_buffer_swap_discipline():
-    spec = {"x": ((2,), np.float32)}
-    db = DoubleBuffer(4, spec)
-    w0 = db.write_storage
-    for i in range(4):
-        db.write(x=np.full(2, i, np.float32))
-    assert db.write_storage.full
-    assert db.write_storage is w0
-    db.swap()
-    # roles flipped; new write storage is the (reset) other one
-    assert db.write_storage is not w0
-    assert not db.write_storage.full
-    assert db.read_storage is w0
-    np.testing.assert_array_equal(db.read_storage.data["x"][3],
-                                  [3.0, 3.0])
-    assert db.generation == 1
+def test_slab_pair_swap_discipline():
+    """Roles alternate with interval parity; slab j%2 is the SAME memory
+    at intervals j and j+2 (preallocated, no per-interval allocation);
+    the learner hand-off is by reference, not by copy."""
+    spec = {"obs": ((2,), np.float32), "rewards": ((), np.float32)}
+    sp = SlabPair(3, 4, spec)
+    s0, b0 = sp.write_view(0)
+    s1, b1 = sp.write_view(1)
+    assert s0 is not s1 and b0 is not b1
+    assert sp.write_view(2)[0] is s0       # parity reuse, same memory
+    assert s0["obs"].shape == (3, 4, 2)
+    assert b0.shape == (4, 2)
+    s0["rewards"][1, 2] = 7.0
+    traj = sp.as_traj(0)
+    assert set(traj) == {"obs", "rewards", "bootstrap_obs"}
+    assert float(traj["rewards"][1, 2]) == 7.0
+    # by-reference hand-off: later slab writes are visible through a
+    # traj taken BEFORE them (the coordinator's swap barrier, not a
+    # copy, is what protects the learner)
+    s0["rewards"][0, 0] = 3.0
+    assert float(sp.as_traj(0)["rewards"][0, 0]) == 3.0
 
 
 def test_n_step_returns_manual():

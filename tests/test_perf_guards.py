@@ -1,0 +1,162 @@
+"""Performance regression guards for the zero-redispatch hot path.
+
+Two families:
+
+* **Compile-count guards** — a warm second ``run(n)`` must not retrace
+  or recompile any jitted program, on the host runtime (whose hot path
+  is a fixed set of fixed-shape jitted functions) and on every scan
+  runtime (one cached program per interval count). A retrace here means
+  some argument leaked a fresh Python object/shape into the hot path —
+  the exact bug class that silently multiplies dispatch cost.
+
+* **Batched-stepper equivalence under skew** — the host runtime groups
+  whatever env-step requests are ready into one padded dispatch, so
+  simulated ``step_time`` skew makes envs finish out of order and the
+  group compositions racy. The determinism contract (keys are pure
+  functions of ``(seed, env_id, step)``; the batched step is a vmapped
+  row-independent program) says composition cannot matter: trajectories
+  and parameters must stay bit-identical to the fused mesh runtime and
+  to an unskewed host run.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import engine
+from repro.core.engine import HTSConfig
+from repro.core.host_runtime import HostConfig
+from repro.envs import catch
+from repro.envs.steptime import StepTimeModel
+from repro.models.cnn_policy import apply_mlp_policy, init_mlp_policy
+from repro.optim import rmsprop
+
+
+def _setup():
+    env1 = catch.make()
+    cfg = HTSConfig(alpha=5, n_envs=4, seed=3)
+
+    def papply(p, obs):
+        return apply_mlp_policy(p, obs.reshape(obs.shape[0], -1))
+
+    params = init_mlp_policy(jax.random.key(0),
+                             int(np.prod(env1.obs_shape)), env1.n_actions)
+    opt = rmsprop(7e-4, eps=1e-5)
+    return env1, cfg, papply, params, opt
+
+
+def _maxdiff(a, b):
+    return max(float(jnp.max(jnp.abs(x - y)))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _make(name, **kwargs):
+    env1, cfg, papply, params, opt = _setup()
+    return engine.make_runtime(name, env1, papply, params, opt, cfg,
+                               **kwargs)
+
+
+# ------------------------------------------------------- compile counts
+def test_host_warm_run_does_not_recompile():
+    rt = _make("host")
+    rt.run(3)
+    jitted = {
+        "actor_fwd": rt._actor_fwd,
+        "step_batch": rt._step_batch,
+        "tables": rt._tables_fn,
+        "learn": rt._learn_fn,
+        "learn_stream": rt._learn_stream,
+        "env_reset": rt._env_reset_v,
+    }
+    sizes = {k: f._cache_size() for k, f in jitted.items()}
+    assert all(v == 1 for v in sizes.values()), sizes
+    rt.run(3)
+    warm = {k: f._cache_size() for k, f in jitted.items()}
+    assert warm == sizes, f"warm rerun retraced: {sizes} -> {warm}"
+
+
+def test_host_interval_count_is_not_a_trace_axis():
+    """The interval index is a traced device scalar, so neither more
+    intervals nor a later starting interval (run_from) retraces."""
+    rt = _make("host")
+    rt.run(2)
+    s = rt.state()
+    rt.run_from(s, 3)
+    rt.run(5)
+    assert rt._tables_fn._cache_size() == 1
+    assert rt._actor_fwd._cache_size() == 1
+    assert rt._step_batch._cache_size() == 1
+
+
+@pytest.mark.parametrize("name", ["mesh", "sharded", "sync", "async"])
+def test_scan_runtime_warm_run_does_not_recompile(name):
+    kwargs = {}
+    if name == "sharded":
+        from jax.sharding import Mesh
+        kwargs["mesh"] = Mesh(np.array(jax.devices()[:1]), ("data",))
+    rt = _make(name, **kwargs)
+    rt.run(3)
+    assert set(rt._programs) == {3}
+    assert rt._programs[3]._cache_size() == 1
+    rt.run(3)
+    assert set(rt._programs) == {3}
+    assert rt._programs[3]._cache_size() == 1, "warm rerun recompiled"
+
+
+# ------------------------------------- batched stepping under steptime skew
+SKEW = StepTimeModel(shape=0.25, rate=0.25)   # mean 1, var 4 (paper HIGH_VAR)
+
+
+def test_batched_stepping_bitexact_under_skew():
+    """Envs finishing out of order (high-variance simulated step times)
+    change the stepper's group compositions but not one bit of the
+    result: skewed host == unskewed host == fused mesh."""
+    skewed = _make("host",
+                   host=HostConfig(n_actors=2, step_time=SKEW,
+                                   time_scale=2e-3)).run(3)
+    plain = _make("host").run(3)
+    fused = _make("mesh").run(3)
+    for other in (plain, fused):
+        assert _maxdiff(skewed.params, other.params) == 0.0
+        np.testing.assert_array_equal(skewed.rewards, other.rewards)
+        np.testing.assert_array_equal(skewed.dones, other.dones)
+
+
+def test_skewed_host_continuation_bitexact(tmp_path):
+    """Skew composes with the continuation contract: a mid-run capsule
+    from a skewed host run resumes (on mesh, even) bit-exactly."""
+    from repro.checkpoint import io as ckpt_io
+    straight = _make("mesh").run(4)
+    a = _make("host", host=HostConfig(n_actors=2, step_time=SKEW,
+                                      time_scale=2e-3))
+    a.run(2)
+    path = str(tmp_path / "skewed")
+    ckpt_io.save(path, a.state())
+    b = _make("mesh")
+    out = b.run_from(ckpt_io.restore(path, b.state()), 2)
+    assert _maxdiff(straight.params, out.params) == 0.0
+
+
+# ------------------------------------------------------- donation safety
+def test_donated_buffers_never_leak_into_caller_state():
+    """The donated carries/learner inputs are runtime-private: the
+    caller's params survive any number of runs, and a captured capsule
+    stays readable after further (donating) segments."""
+    env1, cfg, papply, params, opt = _setup()
+    leaves_before = [np.array(x) for x in jax.tree.leaves(params)]
+    for name in ("host", "mesh", "sync", "async"):
+        rt = engine.make_runtime(name, env1, papply, params, opt, cfg)
+        rt.run(2)
+        s = rt.state()
+        snapshot = [np.array(x) for x in jax.tree.leaves(s)]
+        rt.run_from(s, 1)
+        rt.run(2)
+        # capsule bit-unchanged after two donating segments: a missing
+        # copy-on-capture would leave s aliasing slab/donated memory the
+        # later segments overwrite (or delete) in place
+        for before, leaf in zip(snapshot, jax.tree.leaves(s)):
+            np.testing.assert_array_equal(before, np.asarray(leaf),
+                                          err_msg=name)
+    for before, leaf in zip(leaves_before,
+                            jax.tree.leaves(params)):
+        np.testing.assert_array_equal(before, np.asarray(leaf))
