@@ -5,10 +5,15 @@
 ``sps`` mapping of ``engine_sps_<runtime> -> steps/second``. CI appends
 a fresh record on every push and then runs this checker, which compares
 the LAST record (the run that just happened) against the most recent
-PRIOR record measured with the same ``intervals`` setting AND the same
-host fingerprint (``benchmarks.run.host_fingerprint``) — the committed
-baseline. Records from different hardware are never compared: that
-would gate on machine identity, not on code.
+PRIOR record measured with the same ``intervals`` setting, the same
+host fingerprint (``benchmarks.run.host_fingerprint``), AND the same
+workload config fingerprint (``benchmarks.engine_sps.
+config_fingerprint``: alpha, n_envs, env, algorithm, staleness, ...) —
+the committed baseline. Records from different hardware or different
+workloads are never compared: that would gate on machine/workload
+identity, not on code. Old records written before config fingerprinting
+are skipped as baselines — loudly, so the vacuous comparison is visible
+in CI logs.
 
     python -m benchmarks.check_sps BENCH_sps.json \
         --key engine_sps_mesh --max-regression 0.30
@@ -59,7 +64,7 @@ def check(records, key: str, max_regression: float):
     if not _is_fresh(current, key):
         return True, (f"skip: last record's {key} was replayed from a "
                       f"sweep checkpoint, not measured")
-    baseline = None
+    baseline, unfingerprinted = None, 0
     for rec in reversed(records[:-1]):
         if rec.get("sps", {}).get(key) is None:
             continue
@@ -71,13 +76,25 @@ def check(records, key: str, max_regression: float):
             continue          # ... and on equal hardware (a CI runner vs
             #                   a dev-machine baseline measures hardware,
             #                   not code)
+        if "config" not in rec:
+            # pre-fingerprint record: it may have been measured with ANY
+            # HTSConfig (alpha/n_envs/env/staleness), so treating it as
+            # the baseline would gate on workload identity, not code.
+            # Skip it — loudly, below — rather than guess.
+            unfingerprinted += 1
+            continue
+        if rec.get("config") != current.get("config"):
+            continue          # different workload — SPS not comparable
         baseline = rec
         break
     if baseline is None:
+        extra = (f" ({unfingerprinted} otherwise-comparable record(s) "
+                 f"skipped: no config fingerprint, cannot verify the "
+                 f"workload matches)" if unfingerprinted else "")
         return True, (f"skip: no prior record with {key} at "
                       f"intervals={current.get('intervals')} on host "
-                      f"{current.get('host')!r} — nothing to regress "
-                      f"against")
+                      f"{current.get('host')!r} with matching config "
+                      f"fingerprint — nothing to regress against{extra}")
     base_sps = baseline["sps"][key]
     if base_sps <= 0:
         return True, f"skip: degenerate baseline {key}={base_sps}"

@@ -7,6 +7,10 @@ Tab. A2 — adding a runtime to the registry automatically adds it here.
 
 ``run(runtimes=..., intervals=...)`` is also the backend of
 ``benchmarks.run --runtime ...`` and the CI SPS smoke check.
+``config_fingerprint`` is what gets stamped into each ``BENCH_sps.json``
+record: benchmarks/check_sps.py only compares SPS between records whose
+fingerprints match, so a sweep run with a different alpha/n_envs/env/
+staleness can never silently become the regression gate's baseline.
 """
 import numpy as np
 import jax
@@ -19,9 +23,19 @@ from repro.optim import rmsprop
 IV = 12
 
 
-def run(runtimes=None, intervals=IV, alpha=8, n_envs=8):
+def config_fingerprint(alpha=8, n_envs=8, staleness=1):
+    """Everything about the benchmark workload that changes what an SPS
+    number means (env, model, optimizer, and the HTSConfig knobs the
+    sweep exposes) — comparable across records only when equal."""
+    return {"env": "catch", "model": "mlp", "opt": "rmsprop",
+            "algorithm": "a2c", "seed": 0, "alpha": alpha,
+            "n_envs": n_envs, "staleness": staleness}
+
+
+def run(runtimes=None, intervals=IV, alpha=8, n_envs=8, staleness=1):
     env1 = catch.make()
-    cfg = engine.HTSConfig(alpha=alpha, n_envs=n_envs, seed=0)
+    cfg = engine.HTSConfig(alpha=alpha, n_envs=n_envs, seed=0,
+                           staleness=staleness)
     params = init_mlp_policy(jax.random.key(0),
                              int(np.prod(env1.obs_shape)), env1.n_actions)
     opt = rmsprop(7e-4)
@@ -29,6 +43,10 @@ def run(runtimes=None, intervals=IV, alpha=8, n_envs=8):
 
     rows = []
     for name in (runtimes or engine.runtime_names()):
+        # staleness reaches every runtime unmodified: the baselines
+        # refuse K != 1 with a loud ValueError (sync is undelayed, async
+        # has AsyncConfig.staleness) rather than silently running a
+        # different workload than the record's config fingerprint claims
         rt = engine.make_runtime(name, env1, policy, params, opt, cfg)
         rt.run(intervals)              # warmup: compile + caches
         out = rt.run(intervals)

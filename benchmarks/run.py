@@ -43,6 +43,7 @@ MODULES = [
     "tabA1_correction",
     "tabA2_impl_sps",       # (engine_sps backs it; full sweep via --runtime)
     "profile_hot_path",     # host runtime per-phase breakdown
+    "staleness_sweep",      # throughput-vs-staleness frontier (K sweep)
     "roofline_table",
 ]
 
@@ -60,7 +61,8 @@ def _load_progress(args) -> dict:
     except (OSError, ValueError):
         return {}
     # completed runtimes are only reusable if the sweep shape matches
-    if saved.get("intervals") != args.intervals:
+    if (saved.get("intervals") != args.intervals
+            or saved.get("staleness", 1) != args.staleness):
         return {}
     return saved.get("done", {})
 
@@ -69,7 +71,8 @@ def _save_progress(args, done: dict) -> None:
     os.makedirs(args.ckpt_dir, exist_ok=True)
     tmp = _progress_path(args) + ".tmp"
     with open(tmp, "w") as f:
-        json.dump({"intervals": args.intervals, "done": done}, f, indent=1)
+        json.dump({"intervals": args.intervals,
+                   "staleness": args.staleness, "done": done}, f, indent=1)
     os.replace(tmp, _progress_path(args))
 
 
@@ -90,7 +93,8 @@ def _run_runtime_sweep(args) -> None:
         else:
             try:
                 sub = engine_sps.run(runtimes=[rt_name],
-                                     intervals=args.intervals)
+                                     intervals=args.intervals,
+                                     staleness=args.staleness)
             except Exception:
                 failed += 1
                 print(f"# runtime {rt_name} FAILED:\n"
@@ -108,6 +112,11 @@ def _run_runtime_sweep(args) -> None:
             "ts": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
             "intervals": args.intervals,
             "host": host_fingerprint(),
+            # workload fingerprint: check_sps only compares records with
+            # equal configs, so a sweep run with different HTSConfig
+            # knobs can never silently become the gate's baseline
+            "config": engine_sps.config_fingerprint(
+                staleness=args.staleness),
             "wall_s": round(time.time() - t0, 2),
             "sps": {name: round(value, 2) for name, value, _ in rows},
         }
@@ -133,6 +142,11 @@ def main() -> None:
                          "SPS sweep instead of the paper tables")
     ap.add_argument("--intervals", type=int, default=12,
                     help="intervals per timed run for --runtime")
+    ap.add_argument("--staleness", type=int, default=1,
+                    help="HTSConfig.staleness for the --runtime sweep "
+                         "(host/mesh/sharded); the sync/async baselines "
+                         "refuse staleness != 1 — drop them from "
+                         "--runtime when sweeping K")
     ap.add_argument("--append-sps", default=None, metavar="FILE",
                     help="with --runtime: append the sweep as a JSON line "
                          "to FILE (e.g. BENCH_sps.json)")

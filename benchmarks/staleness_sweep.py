@@ -1,0 +1,153 @@
+"""The throughput-vs-staleness frontier (DESIGN.md §4).
+
+Sweeps the host runtime over K ∈ {1, 2, 4, 8} under *learner-dominated*
+simulated profiles: environment steps follow a seeded ``steptime`` model
+(the paper's Fig. 3 distributions) while ``HostConfig.learner_time``
+models a serial learner whose per-update duration rivals — or exceeds —
+one interval of rollout. This is exactly the regime where the paper's
+K=1 "price of determinism" bites: the coordinator stalls on the
+previous learner every interval. A staleness budget K gives every
+gradient pass K intervals of rollout wall time before anything blocks
+on it, so throughput recovers toward the asynchronous bound while the
+behavior lag stays structurally bounded at K (delayed-gradient delay-K
+rule, core/delayed_grad.py) — the Staleness-Constrained Rollout
+Coordination tradeoff, reproduced deterministically.
+
+    PYTHONPATH=src python -m benchmarks.staleness_sweep \
+        [--append-sps BENCH_sps.json]
+
+Rows are named ``staleness_sps_host_<profile>_k<K>`` (distinct from the
+``engine_sps_*`` regression-gate keys, so the sweep never pollutes the
+gate's baseline search). The same simulated profile is also run through
+the analytic runtime model's synchronized bound for reference.
+"""
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+import jax
+
+from repro.core import engine
+from repro.core.host_runtime import HostConfig
+from repro.envs import catch
+from repro.envs.steptime import StepTimeModel
+from repro.models.cnn_policy import apply_mlp_policy, init_mlp_policy
+from repro.optim import rmsprop
+
+K_VALUES = (1, 2, 4, 8)
+INTERVALS = 16
+ALPHA, N_ENVS = 4, 4
+SCALE = 4e-3      # simulated seconds-per-unit; keeps the sweep fast
+
+# learner-dominated profiles: the learner's per-update duration rivals a
+# full interval of rollout (mean env interval ≈ alpha * mean_step +
+# dispatch overhead), so at K=1 the coordinator pays
+# max(interval_j, learner_j) EVERY interval — the synchronization loss
+# the paper calls the price of determinism. A staleness budget K >= 2
+# pools that jitter across the pipeline (throughput moves from
+# sum-of-maxes toward max-of-sums); the gain scales with the VARIANCE
+# of the two sides, which is why the heavy-tailed profiles (the paper's
+# Fig. 3 regime, and real game engines / real learners) are the
+# interesting ones. A learner much slower than rollout is rate-bound at
+# EVERY K (no schedule beats a saturated serial learner), so the
+# profiles sit at the ~1x crossover where the frontier actually moves.
+PROFILES = {
+    # (env step model, learner_time: units, const or a StepTimeModel)
+    "hivar_constL": (StepTimeModel(shape=0.1, rate=0.1), 10.0),
+    "hivar_hivarL": (StepTimeModel(shape=0.1, rate=0.1),
+                     StepTimeModel(shape=0.25, rate=0.25 / 14.0)),
+}
+
+
+def _predicted_total(model, lt, K, intervals):
+    """The analytic pipeline bound on the same seeded traces the host
+    runtime will draw (core/runtime_model.staleness_pipeline_runtime) —
+    simulated durations only, so it predicts the speedup shape, not the
+    absolute SPS (real dispatch overheads sit on top)."""
+    from repro.core.runtime_model import staleness_pipeline_runtime
+    R = [max(sum(model.sample(e, j * ALPHA + t, 0)
+                 for t in range(ALPHA)) for e in range(N_ENVS))
+         for j in range(intervals)]
+    L = [lt.sample(0, j, 0 ^ 0x1EA12) if isinstance(lt, StepTimeModel)
+         else lt for j in range(intervals)]
+    return staleness_pipeline_runtime(R, L, K)
+
+
+def _desc(t):
+    """JSON-able description of a duration spec (const or StepTimeModel)."""
+    if isinstance(t, StepTimeModel):
+        return {"gamma_shape": t.shape, "gamma_rate": t.rate, "base": t.base}
+    return t
+
+
+def run(k_values=K_VALUES, intervals=INTERVALS):
+    env1 = catch.make()
+    params = init_mlp_policy(jax.random.key(0),
+                             int(np.prod(env1.obs_shape)), env1.n_actions)
+    opt = rmsprop(7e-4)
+    policy = lambda p, o: apply_mlp_policy(p, o.reshape(o.shape[0], -1))
+
+    rows = []
+    for pname, (model, learner_time) in PROFILES.items():
+        for K in k_values:
+            cfg = engine.HTSConfig(alpha=ALPHA, n_envs=N_ENVS, seed=0,
+                                   staleness=K)
+            rt = engine.make_runtime(
+                "host", env1, policy, params, opt, cfg,
+                host=HostConfig(n_actors=2, step_time=model,
+                                time_scale=SCALE,
+                                learner_time=learner_time))
+            rt.run(intervals)            # warmup: compile + caches
+            out = rt.run(intervals)
+            rows.append((f"staleness_sps_host_{pname}_k{K}", out.sps,
+                         "sps"))
+    return rows
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--append-sps", default=None, metavar="FILE",
+                    help="append the sweep as a JSON line to FILE "
+                         "(e.g. BENCH_sps.json)")
+    ap.add_argument("--intervals", type=int, default=INTERVALS)
+    args = ap.parse_args()
+    t0 = time.time()
+    rows = run(intervals=args.intervals)
+    print("name,value,unit")
+    for name, value, unit in rows:
+        print(f"{name},{value:.6g},{unit}")
+    for pname, (model, lt) in PROFILES.items():
+        k1 = next(v for n, v, _ in rows if n.endswith(f"{pname}_k1"))
+        best = max(v for n, v, _ in rows if f"_{pname}_k" in n)
+        pred = {K: _predicted_total(model, lt, K, args.intervals)
+                for K in K_VALUES}
+        print(f"# {pname}: best/k1 speedup = {best / k1:.2f}x; analytic "
+              f"pipeline model predicts "
+              + ", ".join(f"k{K}={pred[1] / pred[K]:.2f}x"
+                          for K in K_VALUES),
+              file=sys.stderr)
+    if args.append_sps:
+        from benchmarks.run import host_fingerprint
+        record = {
+            "ts": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+            "bench": "staleness_sweep",
+            "intervals": args.intervals,
+            "host": host_fingerprint(),
+            "config": {"env": "catch", "model": "mlp", "alpha": ALPHA,
+                       "n_envs": N_ENVS,
+                       "profiles": {p: [_desc(m), _desc(lt)]
+                                    for p, (m, lt) in PROFILES.items()},
+                       "time_scale": SCALE},
+            "wall_s": round(time.time() - t0, 2),
+            "sps": {name: round(value, 2) for name, value, _ in rows},
+        }
+        with open(args.append_sps, "a") as f:
+            f.write(json.dumps(record) + "\n")
+        print(f"# appended to {args.append_sps}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -25,10 +25,14 @@ def main():
     ap.add_argument("--runtime", default="mesh",
                     choices=engine.runtime_names())
     ap.add_argument("--intervals", type=int, default=400)
+    ap.add_argument("--staleness", type=int, default=1,
+                    help="staleness bound K for the HTS-family runtimes "
+                         "(slab-ring depth K+1, delay-K gradient; 1 = "
+                         "the paper's double buffer)")
     args = ap.parse_args()
 
     env1 = catch.make()
-    cfg = HTSConfig(alpha=8, n_envs=16, seed=0)
+    cfg = HTSConfig(alpha=8, n_envs=16, seed=0, staleness=args.staleness)
 
     def policy(params, obs):
         return apply_mlp_policy(params, obs.reshape(obs.shape[0], -1))

@@ -115,8 +115,21 @@ def restore(path: str, like: Any) -> Any:
     for i, ref in enumerate(leaves):
         arr = data[f"leaf_{i}"]
         if tuple(arr.shape) != tuple(ref.shape):
+            # a staleness-K capsule differs from a staleness-K' one only
+            # in ring depth: same pytree, leading axes off by the ring
+            # length. Diagnose that case specifically — it is the config
+            # mismatch users actually hit.
+            hint = ""
+            if (tuple(arr.shape[1:]) == tuple(ref.shape)
+                    or tuple(arr.shape) == tuple(ref.shape[1:])
+                    or (arr.ndim == ref.ndim and arr.ndim > 0
+                        and tuple(arr.shape[1:]) == tuple(ref.shape[1:]))):
+                hint = (" — only the leading (ring) axis differs; was "
+                        "this checkpoint written with a different "
+                        "staleness than the restoring runtime's?")
             raise ValueError(
-                f"leaf {i}: checkpoint shape {arr.shape} != {ref.shape}")
+                f"leaf {i}: checkpoint shape {arr.shape} != {ref.shape}"
+                f"{hint}")
         if manifest is not None:
             saved_dt = manifest.get("dtypes", [None] * len(leaves))[i]
             if saved_dt is not None and saved_dt != str(ref.dtype):

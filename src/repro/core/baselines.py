@@ -127,6 +127,15 @@ class _BaselineRuntime(ScanRuntimeBase):
     def __init__(self, env: Env, policy_apply: Callable, params,
                  opt: Optimizer, cfg: HTSConfig):
         super().__init__(env, policy_apply, params, opt, cfg)
+        if cfg.staleness != 1:
+            # the slab-ring staleness bound is an HTS-family knob: sync
+            # has no delay at all and async models staleness through
+            # AsyncConfig — silently ignoring cfg.staleness here would
+            # make sweep comparisons lie
+            raise ValueError(
+                f"{type(self).__name__} does not implement "
+                f"HTSConfig.staleness={cfg.staleness}; sync is undelayed "
+                f"and async takes AsyncConfig(staleness=...)")
         self.venv = vectorize(env, cfg.n_envs)
 
     def _result_state(self, carry):
@@ -168,6 +177,14 @@ class AsyncRuntime(_BaselineRuntime):
     def __init__(self, env, policy_apply, params, opt, cfg,
                  acfg: Optional[AsyncConfig] = None, **acfg_kwargs):
         super().__init__(env, policy_apply, params, opt, cfg)
+        if acfg is not None and acfg_kwargs:
+            # same guard as HostHTSRL: with both forms present the
+            # kwargs used to be silently discarded — e.g.
+            # AsyncRuntime(..., acfg=AsyncConfig(), staleness=16) ran
+            # with staleness=8 and nobody noticed
+            raise TypeError(
+                f"pass either acfg=AsyncConfig(...) or AsyncConfig field "
+                f"kwargs, not both (got acfg and {sorted(acfg_kwargs)})")
         self.acfg = acfg if acfg is not None else AsyncConfig(**acfg_kwargs)
 
     def _build(self) -> None:

@@ -1,17 +1,18 @@
-"""The two data storages (paper Fig. 1(e)) — double-buffered trajectory
-storage.
+"""The data storages (paper Fig. 1(e)) — trajectory storage generalized
+from the paper's double buffer to a staleness-K slab ring.
 
 Two views:
 
-* ``SlabPair`` — two preallocated numpy slab dicts with the paper's swap
-  discipline for the threaded host runtime: roles alternate with
-  interval parity, and a slab is handed to the learner by reference
-  (the barrier that bounds staleness to one lives in the coordinator
-  loop — see DESIGN.md §2.1/§4).
+* ``SlabRing`` — ``n_slots`` preallocated numpy slab dicts with the
+  ring discipline for the threaded host runtime: slot roles rotate with
+  the interval index, and a slab is handed to the learner by reference
+  (the barrier that bounds staleness to K = n_slots - 1 lives in the
+  coordinator loop — see DESIGN.md §2.1/§4). ``n_slots=2`` is the
+  paper's double buffer with its swap discipline.
 
 * ``device_rollout_buffer`` — a functional pytree used by the mesh runtime,
-  where the "swap" is positional in the scan carry (the freshly produced
-  rollout becomes next iteration's read buffer).
+  where the "ring" is positional in the scan carry (the freshly produced
+  rollout is appended, the oldest slot dropped).
 """
 from __future__ import annotations
 
@@ -22,27 +23,35 @@ import jax.numpy as jnp
 
 
 # ------------------------------------------------------------------ slabs
-class SlabPair:
-    """The zero-copy double buffer for the batched host runtime.
+class SlabRing:
+    """The zero-copy slab ring for the batched host runtime.
 
-    Two preallocated slab dicts of ``(alpha, n_envs, ...)`` numpy arrays
-    (plus a bootstrap-observation row pair) whose roles alternate with
-    interval parity: interval ``j``'s executors write slab ``j % 2``
-    (slot ``(t, env_id)`` owned by exactly one executor thread — no
-    lock) while the learner reads slab ``(j - 1) % 2``. The hand-off to
-    the learner is **by reference** (``as_traj`` wraps the arrays with
-    ``jnp.asarray``, which may alias the numpy memory zero-copy on the
-    CPU backend) — no per-interval copy of the interval's data.
+    ``n_slots`` preallocated slab dicts of ``(alpha, n_envs, ...)`` numpy
+    arrays (plus a bootstrap-observation row block each) whose roles
+    rotate with the interval index: interval ``j``'s executors write slab
+    ``j % n_slots`` (slot ``(t, env_id)`` owned by exactly one executor
+    thread — no lock) while up to ``K = n_slots - 1`` earlier intervals
+    sit unconsumed in the other slots, waiting on the learner. The
+    hand-off to the learner is **by reference** (``as_traj`` wraps the
+    arrays with ``jnp.asarray``, which may alias the numpy memory
+    zero-copy on the CPU backend) — no per-interval copy.
 
-    The swap discipline that bounds staleness at one interval: slab
-    ``j % 2`` is rewritten at interval ``j + 2``, and the coordinator
-    blocks on the learner dispatched at interval ``j + 1`` (the reader
-    of slab ``j % 2``) before releasing interval ``j + 2``'s executors —
-    the paper's "write full AND read exhausted" barrier (DESIGN.md §4),
-    enforced by loop structure instead of locks.
+    The ring discipline that bounds staleness at K intervals: slab
+    ``j % n_slots`` is rewritten at interval ``j + n_slots``, and the
+    coordinator blocks on the learner pass that read interval ``j``'s
+    data — the gradient dispatched at the end of interval ``j``, applied
+    at interval ``j + K`` — before releasing interval ``j + n_slots``'s
+    executors. That is the paper's "write full AND read exhausted"
+    barrier (DESIGN.md §4) generalized from parity swap to ring
+    rotation, enforced by loop structure instead of locks. At
+    ``n_slots=2`` (K=1) it degenerates to exactly the paper's
+    double-buffer swap.
     """
 
-    def __init__(self, alpha: int, n_envs: int, specs: Dict[str, tuple]):
+    def __init__(self, alpha: int, n_envs: int, specs: Dict[str, tuple],
+                 n_slots: int = 2):
+        if n_slots < 2:
+            raise ValueError(f"SlabRing needs >= 2 slots, got {n_slots}")
         def make():
             return {k: np.zeros((alpha, n_envs) + tuple(s), d)
                     for k, (s, d) in specs.items()}
@@ -52,12 +61,13 @@ class SlabPair:
         def make_boot():
             return np.zeros((n_envs,) + tuple(obs_shape), obs_dtype)
 
-        self.slabs = (make(), make())
-        self.bootstrap = (make_boot(), make_boot())
+        self.n_slots = n_slots
+        self.slabs = tuple(make() for _ in range(n_slots))
+        self.bootstrap = tuple(make_boot() for _ in range(n_slots))
 
     def write_view(self, j: int):
         """(slab dict, bootstrap row block) interval ``j`` writes into."""
-        return self.slabs[j % 2], self.bootstrap[j % 2]
+        return self.slabs[j % self.n_slots], self.bootstrap[j % self.n_slots]
 
     def as_traj(self, j: int) -> Dict[str, jnp.ndarray]:
         """Interval ``j``'s finished data as a learner trajectory pytree —
@@ -72,9 +82,9 @@ class SlabPair:
 def device_rollout_buffer(n_envs: int, alpha: int, obs_shape, obs_dtype,
                           action_dtype=jnp.int32):
     """Zero-initialized (alpha, n_envs, ...) trajectory pytree for the mesh
-    runtime's scan carry. The double buffer is positional: the learner reads
-    the carry slot while the rollout fills a fresh pytree; the new pytree
-    replaces the carry slot at the end of the interval."""
+    runtime's scan carry. The ring is positional: the learner reads the
+    oldest carry slot while the rollout fills a fresh pytree; the new
+    pytree is appended to the carry ring at the end of the interval."""
     return {
         "obs": jnp.zeros((alpha, n_envs) + tuple(obs_shape), obs_dtype),
         "actions": jnp.zeros((alpha, n_envs), action_dtype),

@@ -1,16 +1,30 @@
-"""One-step delayed gradient (paper Sec. 4.1, Eq. 6; appendix C).
+"""Delayed gradient with a configurable staleness bound K (paper Sec. 4.1,
+Eq. 6 at K=1; appendix C):
 
-    theta_{j+1} = theta_j + eta * grad_{theta_{j-1}} J(theta_{j-1}, D^{theta_{j-1}})
+    theta_{j+1} = theta_j + eta * grad_{theta_{j-K}} J(theta_{j-K}, D^{theta_{j-K}})
 
-The gradient is computed at the *behavior* parameters (one update old) on
+The gradient is computed at the *behavior* parameters (K updates old) on
 the data those parameters generated — so the pg estimator itself stays
-on-policy — and only its application point is delayed by one. With the
-double-buffer schedule the delay is exactly one by construction, keeping
-the O(1/sqrt(T)) rate of the undelayed method (Langford et al., 2009).
+on-policy — and only its application point is delayed by K. With the
+slab-ring schedule (core/buffers.SlabRing) the delay is exactly K by
+construction: K=1 is the paper's double buffer ("price of determinism");
+K>1 trades a bounded, structural staleness for pipeline slack (the
+learner gets K rollout intervals of wall time per update — see
+DESIGN.md §4 and benchmarks/staleness_sweep.py).
 
-``DelayedGradState`` carries (params_cur, params_prev, opt_state). The
-``update`` is a pure function usable under jit/pjit; ``grads`` must have
-been taken at ``state.params_prev``.
+``DelayedGradState`` carries (params, params_prev, opt_state, step).
+``params_prev`` is the behavior history:
+
+* K=1 — the plain one-update-old parameter pytree (unchanged from the
+  delay-1 implementation, so every existing delay-1 consumer — the LLM
+  learner path, sharding rules, examples — keeps working untouched);
+* K>1 — a stacked ring: each leaf gains a leading K axis, oldest first,
+  holding theta_{j-K} .. theta_{j-1}.
+
+The depth is *structural* — ``behavior_lag`` reads it off the leaf
+shapes, so there is no staleness scalar to keep in sync (or to lose in a
+checkpoint). ``update`` is a pure function usable under jit/pjit;
+``grads`` must have been taken at ``behavior_params(state)``.
 """
 from __future__ import annotations
 
@@ -24,29 +38,64 @@ from repro.optim import Optimizer, apply_updates
 
 class DelayedGradState(NamedTuple):
     params: Any         # theta_j  (target policy — receives updates)
-    params_prev: Any    # theta_{j-1} (behavior policy — gradient point)
+    params_prev: Any    # behavior history (plain at K=1, (K, ...) ring else)
     opt_state: Any
     step: jnp.ndarray
 
 
-def init(params, opt: Optimizer) -> DelayedGradState:
+def init(params, opt: Optimizer, staleness: int = 1) -> DelayedGradState:
+    if staleness < 1:
+        raise ValueError(f"staleness must be >= 1, got {staleness}")
+    if staleness == 1:
+        prev = jax.tree.map(jnp.copy, params)
+    else:
+        prev = jax.tree.map(
+            lambda p: jnp.stack([jnp.asarray(p)] * staleness), params)
     return DelayedGradState(
         params=params,
-        params_prev=jax.tree.map(jnp.copy, params),
+        params_prev=prev,
         opt_state=opt.init(params),
         step=jnp.zeros((), jnp.int32),
     )
 
 
+def behavior_lag(state: DelayedGradState) -> int:
+    """The structural staleness bound K: how many updates the behavior
+    history spans. Read off the leaf shapes — a ring leaf carries one
+    extra leading axis relative to its parameter leaf — so the lag can
+    never silently disagree with the stored history."""
+    p = jax.tree.leaves(state.params)[0]
+    h = jax.tree.leaves(state.params_prev)[0]
+    return int(h.shape[0]) if h.ndim == p.ndim + 1 else 1
+
+
+def behavior_params(state: DelayedGradState):
+    """theta_{j-K} — the gradient point for the next update (the oldest
+    behavior snapshot; at K=1 this is just ``params_prev``)."""
+    if behavior_lag(state) == 1:
+        return state.params_prev
+    return jax.tree.map(lambda h: h[0], state.params_prev)
+
+
+def _advance_history(state: DelayedGradState):
+    """Roll the behavior history forward by one: drop theta_{j-K}, append
+    theta_j. At K=1 the history IS theta_j."""
+    if behavior_lag(state) == 1:
+        return state.params
+    return jax.tree.map(
+        lambda h, p: jnp.concatenate([h[1:], p[None]], axis=0),
+        state.params_prev, state.params)
+
+
 def update(state: DelayedGradState, grads, opt: Optimizer,
            skip: jnp.ndarray | None = None) -> DelayedGradState:
-    """Apply a gradient taken at params_prev to params.
+    """Apply a gradient taken at ``behavior_params(state)`` to params.
 
     skip: optional bool — when True the parameter update is suppressed but
-    the behavior snapshot still advances (used for the bootstrap interval
-    where the read storage is still empty). A skipped update does not
-    count toward ``step``, so ``step`` always equals the number of
-    updates actually applied (comparable across runtimes)."""
+    the behavior history still advances (used for the first K bootstrap
+    intervals, where the read ring slot is still empty). A skipped update
+    does not count toward ``step``, so ``step`` always equals the number
+    of updates actually applied (comparable across runtimes)."""
     updates, opt_state = opt.update(grads, state.opt_state, state.params)
     new_params = apply_updates(state.params, updates)
     applied = jnp.ones((), jnp.int32)
@@ -58,12 +107,7 @@ def update(state: DelayedGradState, grads, opt: Optimizer,
         applied = jnp.where(skip, 0, 1).astype(jnp.int32)
     return DelayedGradState(
         params=new_params,
-        params_prev=state.params,     # behavior policy advances by one
+        params_prev=_advance_history(state),  # behavior advances by one
         opt_state=opt_state,
         step=state.step + applied,
     )
-
-
-def behavior_lag(state: DelayedGradState) -> int:
-    """The structural guarantee: behavior is exactly one update behind."""
-    return 1

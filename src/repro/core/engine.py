@@ -60,6 +60,13 @@ class HTSConfig(NamedTuple):
     gae_lambda: float = 0.95
     ppo_clip: float = 0.2
     seed: int = 0
+    # staleness bound K for the HTS family: how many intervals of rollout
+    # may run ahead of the learner (slab-ring depth K+1, delay-K update
+    # rule — DESIGN.md §4/§5). 1 = the paper's double buffer. The sync
+    # baseline has no delay and the async baseline has its own
+    # AsyncConfig.staleness; both reject staleness != 1 rather than
+    # silently ignore it.
+    staleness: int = 1
 
 
 class TrainState(NamedTuple):
@@ -75,9 +82,13 @@ class TrainState(NamedTuple):
       otherwise the resumed policy lag would differ from the straight run).
     * ``env_state`` — stacked per-replica environment state (n_envs, ...).
     * ``obs``       — current observations (n_envs, ...).
-    * ``buffer``    — double-buffer occupancy: the read storage's
-      UNCONSUMED trajectory, i.e. the data the next interval's learner
-      will differentiate on ({} for baselines, which consume immediately).
+    * ``buffer``    — slab-ring occupancy: the read storage's UNCONSUMED
+      trajectories, i.e. the data the next K intervals' learner passes
+      will differentiate on. At staleness=1 this is the single pending
+      trajectory pytree (the paper's double buffer); at staleness=K>1
+      each leaf gains a leading K axis (ring slots, oldest first —
+      slots for not-yet-run intervals hold the zero trajectory). {} for
+      baselines, which consume immediately.
     * ``interval``  — the global interval counter j (int32 scalar). It
       seeds the rollout step offset (j * alpha), so resuming at j draws
       exactly the (run_seed, env_id, step) PRNG keys the straight run
@@ -220,9 +231,9 @@ class ScanRuntimeBase:
                 state.interval)
 
     def _finalize(self, carry):
-        """Reporting-only: consume the unconsumed read buffer (HTS
-        trailing learner pass). Baselines consume data immediately, so
-        the default is the identity."""
+        """Reporting-only: drain the unconsumed read ring (the HTS
+        family's K trailing learner passes). Baselines consume data
+        immediately, so the default is the identity."""
         return carry
 
     # --------------------------------------------------------- plumbing

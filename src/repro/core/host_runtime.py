@@ -11,35 +11,48 @@ The hot path dispatches O(1) compiled programs per *batch*, not per
 env-step:
 
   * persistent worker pools — actor/executor/stepper threads are spawned
-    once per ``run`` segment and reused across all intervals (previously
-    ``n_actors + n_envs`` threads were spawned and joined per interval);
+    once per ``run`` segment and reused across all intervals;
   * batched env stepping — executors submit ready (env, step, action)
     requests to a stepper that groups them into ONE fixed-shape padded
-    dispatch over device-resident stacked env states (previously one
-    ``jit(env.step)`` dispatch + three forced host syncs per env-step);
+    dispatch over device-resident stacked env states;
   * per-interval seed tables — all ``(env, step)`` action and transition
-    keys for an interval are derived in one device call (previously two
-    ``fold_in`` dispatches per observation);
-  * slab hand-off — the double buffer is a ``SlabPair`` of preallocated
-    numpy slabs passed to the learner by reference (previously the whole
-    interval was copied on every hand-off).
+    keys for an interval are derived in one device call;
+  * slab hand-off — the trajectory storage is a ``SlabRing`` of K+1
+    preallocated numpy slabs passed to the learner by reference.
+
+The staleness-K pipeline (``HTSConfig.staleness``; DESIGN.md §4): the
+learner is split into a *gradient* pass and an *apply* pass. The
+gradient for interval ``j``'s data is dispatched the moment interval
+``j`` finishes — at theta_j, the params that generated it — and applied
+K intervals later (delay-K update, Eq. 6 generalized):
+
+    theta_{j+1} = theta_j + eta * grad J(theta_{j-K}, D^{theta_{j-K}})
+
+so every gradient has K intervals of rollout wall time to complete
+before anything blocks on it. At K=1 this is exactly the paper's
+double-buffer schedule (the coordinator effectively blocks on the
+previous interval's learner); at K>1 the coordinator only blocks on the
+learner pass from K+1 intervals back, which is what recovers
+asynchronous-style throughput under a slow learner while keeping the
+staleness bound — and the determinism contract — intact
+(benchmarks/staleness_sweep.py measures the frontier).
 
 Key properties implemented exactly as in the paper:
   * state buffer / action buffer between executors and actors (queues),
     actors poll and batch asynchronously;
   * per-observation executor-attached seeds -> deterministic actions
     regardless of actor count/batching (Sec. 4.1 'full determinism');
-  * two data storages with the swap barrier (core/buffers.SlabPair: the
-    coordinator blocks on the previous learner before a slab is reused);
-  * learner computes the gradient at theta_{j-1} on D^{theta_{j-1}} while
-    executors collect D^{theta_j} — one-step delayed gradient (Eq. 6);
+  * K+1 data storages with the ring barrier (core/buffers.SlabRing: the
+    coordinator blocks on the gradient pass that read a slab before the
+    slab is reused);
   * batch synchronization every alpha steps.
 
 The actor computation and the learner update are the SAME functions the
 fused/sharded runtimes use (core/rollout.actor_forward,
-mesh_runtime.make_learner_update) — the thread scheduling here and the
-XLA scheduling there are two executions of one program, which is why
-tests/test_equivalence.py can demand bit-identical parameters. Batch
+mesh_runtime.make_learner_update and its grad/apply split) — the thread
+scheduling here and the XLA scheduling there are two executions of one
+program, which is why tests/test_equivalence.py and tests/
+test_staleness.py can demand bit-identical parameters at every K. Batch
 composition cannot affect values: keys are pure functions of
 (seed, env_id, step) and both the actor forward and the batched env
 step are vmapped row-independent programs, so ANY grouping of ready
@@ -47,13 +60,18 @@ envs — including the out-of-order groupings ``step_time`` skew produces
 — writes bit-identical trajectories (tests/test_perf_guards.py).
 
 ``step_time`` (optional) injects simulated environment step durations via
-``time.sleep`` for wall-clock throughput experiments.
+``time.sleep``; ``learner_time`` injects a simulated per-update learner
+duration (a dedicated sim thread completes gradient passes FIFO, one
+``learner_time`` apart — a serial learner) for wall-clock throughput
+experiments. Neither changes a single computed value.
 """
 from __future__ import annotations
 
 import queue
 import threading
 import time
+import traceback
+from collections import deque
 from dataclasses import dataclass
 from typing import Callable, Dict, Optional
 
@@ -62,10 +80,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import delayed_grad, determinism
-from repro.core.buffers import SlabPair
+from repro.core.buffers import SlabRing
 from repro.core.engine import (HTSConfig, RunResult, TrainState,
                                register_runtime)
-from repro.core.mesh_runtime import make_learner_update
+from repro.core.mesh_runtime import (make_grad_fn, make_learner_update,
+                                     make_ring_drain)
 from repro.core.rollout import actor_forward
 from repro.envs.interfaces import Env
 from repro.envs.steptime import StepTimeModel
@@ -80,6 +99,10 @@ class HostConfig:
     step_time: Optional[StepTimeModel] = None
     time_scale: float = 1.0          # multiply simulated durations
     actor_compute: float = 0.0       # optional simulated actor latency
+    # simulated per-update learner duration: a float (constant) or a
+    # StepTimeModel sampled per update index — deterministic like
+    # step_time, so throughput experiments are replayable
+    learner_time: "float | StepTimeModel" = 0.0
     profile: bool = False            # accumulate per-phase wall times
 
 
@@ -90,6 +113,15 @@ class HostHTSRL:
     def __init__(self, env: Env, policy_apply: Callable, params,
                  opt: Optimizer, cfg: HTSConfig,
                  host: Optional[HostConfig] = None, **host_kwargs):
+        if host is not None and host_kwargs:
+            # both forms at once used to silently discard the kwargs —
+            # e.g. HostHTSRL(..., host=HostConfig(), n_actors=8) ran
+            # with 4 actors and nobody noticed
+            raise TypeError(
+                f"pass either host=HostConfig(...) or HostConfig field "
+                f"kwargs, not both (got host and {sorted(host_kwargs)})")
+        if cfg.staleness < 1:
+            raise ValueError(f"staleness must be >= 1, got {cfg.staleness}")
         self.env = env
         self.cfg = cfg
         self.host = host if host is not None else HostConfig(**host_kwargs)
@@ -154,21 +186,34 @@ class HostHTSRL:
 
         self._step_batch = jax.jit(step_batch, donate_argnums=(0,))
 
-        learn = make_learner_update(policy_apply, self.opt, cfg)
-        # trailing reporting-only pass: must NOT donate (self.dg and the
-        # capsule keep using its inputs)
-        self._learn_fn = jax.jit(learn)
+        # the learner, split at the staleness pipeline's joint:
+        #   grad   — dispatched the moment interval j's data is complete,
+        #            at theta_j (the params that generated it). Depends
+        #            only on (theta_j, D_j), so it runs concurrently with
+        #            the next K intervals of rollout.
+        #   apply  — consumes the K-intervals-old pending gradient and
+        #            advances (params, behavior history, opt state).
+        # The fused runtimes compute the identical composition inside one
+        # XLA program; splitting changes scheduling, not values.
+        self._grad_fn = jax.jit(make_grad_fn(policy_apply, cfg))
 
-        # in-stream learner: theta_{j-1} and the old opt state are dead
-        # once the update is applied, so they are donated and updated in
-        # place. params (theta_j) is NOT donated — the actor pool is
-        # still sampling with it for the rest of the interval.
-        def stream_learn(params_prev, opt_state, step, params, traj):
+        def stream_apply(params_prev, opt_state, step, params, grads):
             dg = delayed_grad.DelayedGradState(params, params_prev,
                                                opt_state, step)
-            return learn(dg, traj)
+            return delayed_grad.update(dg, grads, self.opt)
 
-        self._learn_stream = jax.jit(stream_learn, donate_argnums=(0, 1))
+        # theta_{j-K} (the history's oldest slot) and the old opt state
+        # are dead once the update is applied, so they are donated and
+        # updated in place. params (theta_j) is NOT donated — the actor
+        # pool is still sampling with it, and in-flight gradient passes
+        # read the unstacked theta buffers it chains from.
+        self._apply_fn = jax.jit(stream_apply, donate_argnums=(0, 1))
+
+        # trailing reporting-only drain of the K pending ring slots: the
+        # SAME drain the fused runtimes jit (make_ring_drain), must NOT
+        # donate (self.dg and the capsule keep using its inputs)
+        learn = make_learner_update(policy_apply, self.opt, cfg)
+        self._final_fn = jax.jit(make_ring_drain(learn, cfg.staleness))
 
         obs_shape = env.obs_shape
         self._spec = {
@@ -178,7 +223,8 @@ class HostHTSRL:
             "dones": ((), np.float32),
             "behavior_logprob": ((), np.float32),
         }
-        self._slabs = SlabPair(cfg.alpha, cfg.n_envs, self._spec)
+        self._slabs = SlabRing(cfg.alpha, cfg.n_envs, self._spec,
+                               n_slots=cfg.staleness + 1)
         self._built = True
 
     def init(self) -> None:
@@ -187,13 +233,16 @@ class HostHTSRL:
         # params0 is copied so in-place (donating) updates can never
         # invalidate the caller's parameter tree across run() replays
         self.dg = delayed_grad.init(jax.tree.map(jnp.copy, self.params0),
-                                    self.opt)
+                                    self.opt, staleness=cfg.staleness)
         keys = jax.random.split(jax.random.key(cfg.seed ^ 0x5EED),
                                 cfg.n_envs)
         self.env_states, obs = self._env_reset_v(keys)
         self.obs_np = np.array(obs)     # writable host copy
         self.j = 0              # global interval counter
-        self.prev_traj = None   # unconsumed read-buffer trajectory
+        # gradient passes in flight: oldest-first, one entry per
+        # unconsumed ring slot — {"j", "traj" (slab-aliased), "grads"
+        # (dispatched), "ready" (sim-learner gate or None)}
+        self._pending: deque = deque()
         self._reset_logs()
 
     def _reset_logs(self) -> None:
@@ -209,7 +258,7 @@ class HostHTSRL:
 
     # ------------------------------------------------------ continuation
     def _zero_traj(self):
-        """The j=0 read buffer: all-zero trajectory with dones=1 (mirrors
+        """An empty ring slot: all-zero trajectory with dones=1 (mirrors
         mesh_runtime.init_carry so host/mesh capsules are one structure)."""
         cfg = self.cfg
         obs_shape, obs_dtype = self._spec["obs"]
@@ -225,6 +274,20 @@ class HostHTSRL:
                                        obs_dtype),
         }
 
+    def _buffer_ring(self):
+        """The unconsumed read storage as the capsule/drain pytree: slot
+        p holds interval ``j - K + p``'s trajectory (zero for intervals
+        that never ran). K=1 keeps the plain single-trajectory dict so
+        the capsule structure is unchanged from the double-buffer days;
+        K>1 stacks the K slots oldest-first (mirrors the fused carry)."""
+        K = self.cfg.staleness
+        have = {e["j"]: e["traj"] for e in self._pending}
+        slots = [have.get(self.j - K + p) or self._zero_traj()
+                 for p in range(K)]
+        if K == 1:
+            return dict(slots[0])
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *slots)
+
     def state(self) -> TrainState:
         """The continuation capsule — structurally identical to the fused
         runtimes' (same TrainState fields, same buffer pytree), so a host
@@ -233,10 +296,8 @@ class HostHTSRL:
         and a later segment would otherwise mutate them under the capsule."""
         if self.dg is None:
             self.init()
-        buf = (self.prev_traj if self.prev_traj is not None
-               else self._zero_traj())
         capsule = TrainState(self.dg, self.env_states,
-                             jnp.asarray(self.obs_np), dict(buf),
+                             jnp.asarray(self.obs_np), self._buffer_ring(),
                              jnp.asarray(self.j, jnp.int32))
         return jax.tree.map(jnp.copy, capsule)
 
@@ -247,8 +308,25 @@ class HostHTSRL:
         self.env_states = jax.tree.map(jnp.copy, state.env_state)
         self.obs_np = np.array(state.obs)
         self.j = int(state.interval)
-        self.prev_traj = (jax.tree.map(jnp.asarray, dict(state.buffer))
-                          if self.j > 0 else None)
+        K = self.cfg.staleness
+        # re-dispatch the in-flight gradient passes the capsule implies:
+        # ring slot p (data of interval j-K+p) differentiated at its
+        # behavior params (history slot p) — exactly the gradients the
+        # uninterrupted run would have pending
+        self._pending = deque()
+        for p in range(K):
+            i = self.j - K + p
+            if i < 0:
+                continue          # slot never filled (j < K)
+            traj = jax.tree.map(
+                jnp.copy,
+                dict(state.buffer) if K == 1
+                else jax.tree.map(lambda x, _p=p: x[_p], dict(state.buffer)))
+            bp = (self.dg.params_prev if K == 1 else
+                  jax.tree.map(lambda h, _p=p: h[_p], self.dg.params_prev))
+            self._pending.append({"j": i, "traj": traj,
+                                  "grads": self._grad_fn(bp, traj),
+                                  "ready": None})
         self._reset_logs()
 
     def run_from(self, state: TrainState, n_intervals: int,
@@ -273,6 +351,7 @@ class HostHTSRL:
                 f"new segment on this runtime")
         self._state_q: "queue.Queue" = queue.Queue()
         self._step_q: "queue.Queue" = queue.Queue()
+        self._sim_q: "queue.Queue" = queue.Queue()
         self._action_slots = [queue.Queue() for _ in range(cfg.n_envs)]
         self._step_slots = [queue.Queue() for _ in range(cfg.n_envs)]
         self._start_barrier = threading.Barrier(cfg.n_envs + 1)
@@ -288,6 +367,13 @@ class HostHTSRL:
             + [threading.Thread(target=self._guard,
                                 args=(self._executor_loop, i), daemon=True)
                for i in range(cfg.n_envs)])
+        self._sim_learner_on = (
+            isinstance(self.host.learner_time, StepTimeModel)
+            or bool(self.host.learner_time))
+        if self._sim_learner_on:
+            self._threads.append(threading.Thread(
+                target=self._guard, args=(self._sim_learner_loop,),
+                daemon=True))
         for th in self._threads:
             th.start()
 
@@ -306,8 +392,17 @@ class HostHTSRL:
         for _ in range(self.host.n_actors):
             self._state_q.put(_SHUTDOWN)
         self._step_q.put(_SHUTDOWN)
+        self._sim_q.put(_SHUTDOWN)
         for slot in list(self._action_slots) + list(self._step_slots):
             slot.put(_SHUTDOWN)
+        # the coordinator may be parked on a pending gradient's ready
+        # gate (sim learner): if the sim thread is the one that died, no
+        # one would ever set it — wake every pending gate so the
+        # coordinator reaches a (broken) barrier and re-raises via
+        # _check_pool instead of hanging
+        for ent in list(getattr(self, "_pending", ())):
+            if ent.get("ready") is not None:
+                ent["ready"].set()
 
     def _shutdown_pools(self) -> None:
         self._release_pool_waits()
@@ -319,20 +414,27 @@ class HostHTSRL:
         self._threads = []
 
     def _guard(self, fn, *args) -> None:
-        """Worker wrapper: record the exception and release every pool
-        wait so the coordinator (and sibling workers) unblock instead of
-        hanging."""
+        """Worker wrapper: record the exception (with its traceback, for
+        the coordinator to re-raise loudly) and release every pool wait
+        so the coordinator (and sibling workers) unblock instead of
+        hanging. Catches BaseException: a KeyboardInterrupt/SystemExit
+        delivered to a worker thread must ALSO fail the run — an
+        uncaught one would kill the thread silently and leave the
+        coordinator blocked on a barrier forever."""
         try:
             fn(*args)
-        except Exception as e:          # noqa: BLE001 — repropagated
+        except BaseException as e:      # noqa: BLE001 — repropagated
             if self._pool_stop:
                 return                  # normal teardown (aborted barrier)
-            self._pool_exc.append(e)
+            self._pool_exc.append((e, traceback.format_exc()))
             self._release_pool_waits()
 
     def _check_pool(self) -> None:
         if self._pool_exc:
-            raise self._pool_exc[0]
+            exc, tb = self._pool_exc[0]
+            raise RuntimeError(
+                f"host runtime worker thread died: {exc!r}\n"
+                f"--- worker thread traceback ---\n{tb}") from exc
 
     def _drain_batch(self, q: "queue.Queue", first) -> Optional[list]:
         """The shared actor/stepper batching protocol: take the blocking
@@ -423,6 +525,29 @@ class HostHTSRL:
                 self._step_slots[ids[i]].put(
                     (nobs[i], float(r[i]), float(d[i])))
 
+    # ------------------------------------------------------- sim learner
+    def _sim_learner_loop(self) -> None:
+        """The simulated serial learner (``HostConfig.learner_time``):
+        completes submitted gradient passes FIFO, each taking the real
+        compute time plus the simulated duration — so gradient i's
+        completion chains on gradient i-1's, like a single learner
+        process. Durations come from a constant or a seeded
+        StepTimeModel keyed on the data interval index (deterministic,
+        replayable). Only the *timing* of the ready gate is simulated;
+        the gradient values were dispatched by the coordinator
+        untouched."""
+        lt = self.host.learner_time
+        while True:
+            item = self._sim_q.get()
+            if item is _SHUTDOWN:
+                return
+            data_j, grads, ready = item
+            jax.block_until_ready(grads)
+            dt = (lt.sample(0, data_j, self.cfg.seed ^ 0x1EA12)
+                  if isinstance(lt, StepTimeModel) else lt)
+            time.sleep(dt * self.host.time_scale)
+            ready.set()
+
     # --------------------------------------------------------- executors
     def _executor_loop(self, env_id: int) -> None:
         cfg, host = self.cfg, self.host
@@ -476,16 +601,21 @@ class HostHTSRL:
         return self._segment(n_intervals)
 
     def _run_intervals(self, n_intervals: int) -> None:
-        cfg = self.cfg
-        prof = self.host.profile
+        cfg, host = self.cfg, self.host
+        K = cfg.staleness
+        prof = host.profile
         self._spawn_pools()
         try:
-            prev_traj = self.prev_traj
             for j in range(self.j, self.j + n_intervals):
                 self._check_pool()
-                # swap barrier: the learner dispatched LAST interval read
-                # the slab this interval overwrites — "write full AND
-                # read exhausted" before the roles flip (DESIGN.md §4)
+                # ring-reuse barrier: the slab interval j rewrites was
+                # last read by the gradient pass over interval j-K-1's
+                # data, which the apply dispatched at interval j-1
+                # consumed — blocking on the applied state therefore
+                # guarantees "read exhausted" before the roles rotate
+                # (DESIGN.md §4). With K > 1 that gradient was dispatched
+                # K intervals ago, so a learner slower than one interval
+                # no longer stalls every interval.
                 t0 = time.perf_counter() if prof else 0.0
                 jax.block_until_ready(self.dg)
                 if prof:
@@ -497,25 +627,47 @@ class HostHTSRL:
                 self._actor_table, self._step_table = self._tables_fn(
                     jnp.asarray(j, jnp.int32))
                 self._start_barrier.wait()          # release executors
-                # learner runs concurrently on the previous interval's
-                # data (one-step delayed gradient, Eq. 6)
-                if prev_traj is not None:
-                    self.dg = self._learn_stream(
+                # learner apply runs concurrently with rollout j: consume
+                # the K-intervals-old pending gradient (delay-K rule,
+                # Eq. 6); the first K intervals have nothing pending yet
+                # and skip (the behavior history already holds theta_0)
+                if len(self._pending) == K:
+                    # peek, wait, THEN pop: the entry must stay visible
+                    # to _release_pool_waits while the coordinator is
+                    # parked on its ready gate, or a dying sim-learner
+                    # thread could strand the coordinator forever
+                    ent = self._pending[0]
+                    if ent["ready"] is not None:
+                        t0 = time.perf_counter() if prof else 0.0
+                        ent["ready"].wait()
+                        if prof:
+                            self._prof("sim_learner_wait",
+                                       time.perf_counter() - t0)
+                    self._pending.popleft()
+                    self.dg = self._apply_fn(
                         self.dg.params_prev, self.dg.opt_state,
-                        self.dg.step, self.dg.params, prev_traj)
+                        self.dg.step, self.dg.params, ent["grads"])
                 t0 = time.perf_counter() if prof else 0.0
                 self._end_barrier.wait()            # executors finished
                 if prof:
                     self._prof("interval_barrier",
                                time.perf_counter() - t0)
-                # interval done: hand the slab to the learner by
-                # reference; only the small reporting streams are copied
-                prev_traj = self._slabs.as_traj(j)
+                # interval done: dispatch the gradient for D_j at theta_j
+                # immediately (by reference to the slab — only the small
+                # reporting streams are copied). It now has K intervals
+                # of rollout wall time before its apply blocks on it.
+                traj_j = self._slabs.as_traj(j)
+                grads = self._grad_fn(self._behavior, traj_j)
+                ready = None
+                if self._sim_learner_on:
+                    ready = threading.Event()
+                    self._sim_q.put((j, grads, ready))
+                self._pending.append({"j": j, "traj": traj_j,
+                                      "grads": grads, "ready": ready})
                 self.rewards_log.append(slab["rewards"].copy())
                 self.dones_log.append(slab["dones"].copy())
                 self.sps_steps += cfg.alpha * cfg.n_envs
             self.j += n_intervals
-            self.prev_traj = prev_traj
         except threading.BrokenBarrierError:
             self._check_pool()
             raise
@@ -528,13 +680,14 @@ class HostHTSRL:
         t_start = time.perf_counter()
         if n_intervals > 0:
             self._run_intervals(n_intervals)
-        # trailing learner pass on the final interval's data — REPORTING
-        # ONLY: self.dg stays mid-stream (prev_traj unconsumed), so
+        # trailing learner drain of the K pending ring slots — REPORTING
+        # ONLY: self.dg stays mid-stream (ring unconsumed), so
         # state()/run_from continue bit-exactly without double-applying
-        # this update (same split as ScanRuntimeBase._finalize).
+        # these updates (same split as ScanRuntimeBase._finalize).
         dg_final = self.dg
-        if finalize and self.prev_traj is not None:
-            dg_final = self._learn_fn(self.dg, self.prev_traj)
+        if finalize:
+            dg_final = self._final_fn(self.dg, self._buffer_ring(),
+                                      jnp.asarray(self.j, jnp.int32))
         jax.block_until_ready(dg_final)   # honest wall time / SPS
         self.wall_time = time.perf_counter() - t_start
         empty = np.zeros((0, cfg.alpha, cfg.n_envs), np.float32)

@@ -2,18 +2,21 @@
 
 Per synchronization interval j, one XLA program computes BOTH:
 
-  * learner:  g = grad J(theta_{j-1}, D^{theta_{j-1}}) from the read buffer,
-              applied to theta_j  (one-step delayed gradient, Eq. 6);
+  * learner:  g = grad J(theta_{j-K}, D^{theta_{j-K}}) from the oldest
+              ring slot, applied to theta_j (delay-K gradient — Eq. 6 at
+              the default staleness K=1);
   * rollout:  D^{theta_j} collected with the *pre-update* params.
 
-The two halves share no dataflow (grads depend on (theta_{j-1}, D_{j-1});
+The two halves share no dataflow (grads depend on (theta_{j-K}, D_{j-K});
 rollout on (theta_j, env_state)), so XLA is free to schedule them
 concurrently — the compiler-level equivalent of the paper's process-level
 concurrency, with identical update semantics (verified bit-exact against
 the threaded host runtime in tests/test_equivalence.py).
 
-The double buffer is positional in the scan carry: the freshly produced
-trajectory replaces the read slot for the next interval.
+The slab ring is positional in the scan carry: at K=1 the freshly
+produced trajectory replaces the read slot for the next interval (the
+paper's double buffer); at K>1 the carry holds a K-deep stacked ring —
+the oldest slot is consumed, the fresh trajectory appended.
 
 The update math itself lives in repro.algorithms (selected by
 ``cfg.algorithm``); this module is pure scheduling. ``make_hts_step``
@@ -47,31 +50,75 @@ def _interval_loss(policy_apply, params, traj, cfg: HTSConfig):
         policy_apply, params, traj, cfg)
 
 
+def make_grad_fn(policy_apply: Callable, cfg: HTSConfig):
+    """``grad(params, traj)`` of the registry algorithm's interval loss —
+    the ONE copy of the learner's gradient expression. Both the fused
+    learner (make_learner_update, below) and the host runtime's split
+    gradient pass build on this, which is what makes the cross-runtime
+    bit-exactness contract a property of one function rather than of two
+    copies staying in sync."""
+    return jax.grad(
+        lambda p, traj: _interval_loss(policy_apply, p, traj, cfg)[0],
+        has_aux=False)
+
+
 def make_learner_update(policy_apply: Callable, opt: Optimizer,
                         cfg: HTSConfig, axis_name: Optional[str] = None):
     """The learner half: ``learn(dg, traj, skip) -> dg'``.
 
-    Differentiates the registry algorithm at ``dg.params_prev`` (the
-    behavior policy — Eq. 6) on ``traj``, all-reduces across
-    ``axis_name`` when data-parallel, and applies the one-step delayed
-    update. Exactly ONE update per interval: with both the
-    differentiation point (theta_{j-1}) and the PPO clip reference
-    (behavior_logprob) fixed, re-running "epochs" on the same interval
-    data would reproduce the identical gradient — true multi-epoch PPO
-    needs updates *between* epochs, which the delayed-gradient schedule
-    (and the cross-runtime bit-exactness contract) deliberately excludes.
+    Differentiates the registry algorithm at ``behavior_params(dg)`` (the
+    oldest behavior snapshot theta_{j-K} — Eq. 6 generalized to delay K)
+    on ``traj``, all-reduces across ``axis_name`` when data-parallel, and
+    applies the delay-K update. Exactly ONE update per interval: with
+    both the differentiation point (theta_{j-K}) and the PPO clip
+    reference (behavior_logprob) fixed, re-running "epochs" on the same
+    interval data would reproduce the identical gradient — true
+    multi-epoch PPO needs updates *between* epochs, which the
+    delayed-gradient schedule (and the cross-runtime bit-exactness
+    contract) deliberately excludes.
     """
-    grad_fn = jax.grad(
-        lambda p, traj: _interval_loss(policy_apply, p, traj, cfg)[0],
-        has_aux=False)
+    grad_fn = make_grad_fn(policy_apply, cfg)
 
     def learn(dg, traj, skip=None):
-        grads = grad_fn(dg.params_prev, traj)
+        grads = grad_fn(delayed_grad.behavior_params(dg), traj)
         if axis_name is not None:
             grads = jax.lax.pmean(grads, axis_name)
         return delayed_grad.update(dg, grads, opt, skip=skip)
 
     return learn
+
+
+def ring_read(buf, staleness: int):
+    """The ring slot the next learner pass consumes: the single pending
+    trajectory at K=1, the oldest stacked slot otherwise."""
+    return buf if staleness == 1 else jax.tree.map(lambda x: x[0], buf)
+
+
+def ring_append(buf, traj, staleness: int):
+    """Advance the positional ring: drop the consumed oldest slot, append
+    the freshly produced trajectory. At K=1 the ring IS the trajectory."""
+    if staleness == 1:
+        return traj
+    return jax.tree.map(
+        lambda r, t: jnp.concatenate([r[1:], t[None]], axis=0), buf, traj)
+
+
+def make_ring_drain(learn, staleness: int):
+    """The reporting-only trailing pass, generalized: consume the K
+    pending ring slots in interval order so ``run(n)`` reflects exactly
+    ``n`` updates. Pass p consumes the data of global interval
+    ``j - K + p``; ``skip`` guards slots that no interval has filled yet
+    (the n < K edge, and the n = 0 edge at K=1). Shared by the host,
+    mesh, and sharded runtimes — one drain, three schedulers."""
+
+    def drain(dg, buf, j):
+        for p in range(staleness):
+            traj = (buf if staleness == 1
+                    else jax.tree.map(lambda x, _p=p: x[_p], buf))
+            dg = learn(dg, traj, skip=(j - staleness + p < 0))
+        return dg
+
+    return drain
 
 
 def make_hts_step(policy_apply: Callable, env: Env, opt: Optimizer,
@@ -86,11 +133,16 @@ def make_hts_step(policy_apply: Callable, env: Env, opt: Optimizer,
     rcfg = RolloutConfig(cfg.alpha, cfg.n_envs)
     master = jax.random.key(cfg.seed)
     learn = make_learner_update(policy_apply, opt, cfg, axis_name)
+    K = cfg.staleness
 
     def step(carry, _):
-        dg, env_state, obs, buf_read, j = carry
-        # ---- learner half: delayed gradient at theta_{j-1} on D_{j-1}
-        dg_next = learn(dg, buf_read, skip=(j == 0))
+        dg, env_state, obs, buf_ring, j = carry
+        # ---- learner half: delay-K gradient at theta_{j-K} on D_{j-K}
+        # (the oldest ring slot; the first K intervals have nothing to
+        # consume yet, so their updates are skipped — run(n) still
+        # reflects n updates because _finalize drains the K pending
+        # passes)
+        dg_next = learn(dg, ring_read(buf_ring, K), skip=(j < K))
         # ---- rollout half: behavior policy is theta_j (pre-update)
         offset = (jax.lax.axis_index(axis_name) * cfg.n_envs
                   if axis_name is not None else 0)
@@ -98,14 +150,15 @@ def make_hts_step(policy_apply: Callable, env: Env, opt: Optimizer,
             policy_apply, env, dg.params, env_state, obs, master,
             j * cfg.alpha, rcfg, env_offset=offset)
         metrics = {"rewards": traj["rewards"], "dones": traj["dones"]}
-        return (dg_next, env_state, obs, traj, j + 1), metrics
+        return (dg_next, env_state, obs, ring_append(buf_ring, traj, K),
+                j + 1), metrics
 
     return step
 
 
 def init_carry(policy_params, opt: Optimizer, env: Env, cfg: HTSConfig,
                policy_apply: Callable):
-    """Initial (dg_state, env_state, obs, zero read buffer, j=0).
+    """Initial (dg_state, env_state, obs, zero read ring, j=0).
 
     ``policy_params`` is copied: the carry is donated into the interval
     program (engine.ScanRuntimeBase._program), and in-place updates must
@@ -113,7 +166,8 @@ def init_carry(policy_params, opt: Optimizer, env: Env, cfg: HTSConfig,
     cross-runtime comparisons hand the same params to many runtimes."""
     keys = jax.random.split(jax.random.key(cfg.seed ^ 0x5EED), cfg.n_envs)
     env_state, obs = env.reset(keys)
-    dg = delayed_grad.init(jax.tree.map(jnp.copy, policy_params), opt)
+    dg = delayed_grad.init(jax.tree.map(jnp.copy, policy_params), opt,
+                           staleness=cfg.staleness)
     zero_traj = {
         "obs": jnp.zeros((cfg.alpha,) + obs.shape, obs.dtype),
         "actions": jnp.zeros((cfg.alpha, cfg.n_envs), jnp.int32),
@@ -122,6 +176,9 @@ def init_carry(policy_params, opt: Optimizer, env: Env, cfg: HTSConfig,
         "behavior_logprob": jnp.zeros((cfg.alpha, cfg.n_envs), jnp.float32),
         "bootstrap_obs": jnp.zeros_like(obs),
     }
+    if cfg.staleness > 1:
+        zero_traj = jax.tree.map(
+            lambda x: jnp.stack([x] * cfg.staleness), zero_traj)
     return (dg, env_state, obs, zero_traj, jnp.zeros((), jnp.int32))
 
 
@@ -153,6 +210,8 @@ class MeshRuntime(ScanRuntimeBase):
     def __init__(self, env: Env, policy_apply: Callable, params,
                  opt: Optimizer, cfg: HTSConfig):
         super().__init__(env, policy_apply, params, opt, cfg)
+        if cfg.staleness < 1:
+            raise ValueError(f"staleness must be >= 1, got {cfg.staleness}")
         self.venv = vectorize(env, cfg.n_envs)
 
     def _build(self) -> None:
@@ -160,13 +219,13 @@ class MeshRuntime(ScanRuntimeBase):
                                    self.cfg)
         self._learn = make_learner_update(self.policy_apply, self.opt,
                                           self.cfg)
-        # reporting-only trailing learner pass on the final interval's
-        # data, so run(n) applies exactly n updates (matching the host
-        # runtime); skip guards the n=0 edge (buffer still zeros). Kept
-        # OUT of _program: the scan carry must stay mid-stream so
+        # reporting-only trailing learner passes draining the K pending
+        # ring slots, so run(n) applies exactly n updates (matching the
+        # host runtime); skip guards the not-yet-filled slots (n < K).
+        # Kept OUT of _program: the scan carry must stay mid-stream so
         # state()/run_from never double-consume an interval.
         self._final_fn = jax.jit(
-            lambda dg, buf, j: self._learn(dg, buf, skip=(j == 0)))
+            make_ring_drain(self._learn, self.cfg.staleness))
 
     def _initial_carry(self):
         return init_carry(self.params0, self.opt, self.venv, self.cfg,

@@ -41,6 +41,8 @@ class ShardedHTSRL(ScanRuntimeBase):
                  opt: Optimizer, cfg: HTSConfig, mesh=None,
                  axis: str = "data"):
         super().__init__(env, policy_apply, params, opt, cfg)
+        if cfg.staleness < 1:
+            raise ValueError(f"staleness must be >= 1, got {cfg.staleness}")
         self.mesh = mesh if mesh is not None else make_host_mesh()
         self.axis = axis
         n_shards = self.mesh.shape[axis]
@@ -72,8 +74,11 @@ class ShardedHTSRL(ScanRuntimeBase):
         dg, env_state, obs, buf, j = carry
         rep = lambda tree: jax.tree.map(lambda _: P(), tree)
         shard0 = lambda tree: jax.tree.map(lambda _: P(self.axis), tree)
-        buf_spec = {k: (P(self.axis) if k == "bootstrap_obs"
-                        else P(None, self.axis)) for k in buf}
+        # ring slots (K>1) prepend a replicated staleness axis in front
+        # of the (alpha, n_envs, ...) trajectory leaves
+        ring = (None,) if self.cfg.staleness > 1 else ()
+        buf_spec = {k: (P(*ring, self.axis) if k == "bootstrap_obs"
+                        else P(*ring, None, self.axis)) for k in buf}
         return (rep(dg), shard0(env_state), P(self.axis), buf_spec, P())
 
     def _program(self, n_intervals: int):
@@ -95,16 +100,15 @@ class ShardedHTSRL(ScanRuntimeBase):
                        donate_argnums=0)
 
     def _finalize(self, carry):
-        # reporting-only trailing learner pass (same update-count contract
-        # as host/mesh; skip guards the n=0 edge). Its pmean needs the
-        # mesh axis, so it is its own shard_map program — separate from
-        # the scan, which must leave the carry mid-stream for run_from.
+        # reporting-only trailing learner passes draining the K pending
+        # ring slots (same update-count contract as host/mesh; skip
+        # guards the not-yet-filled slots). Its pmean needs the mesh
+        # axis, so it is its own shard_map program — separate from the
+        # scan, which must leave the carry mid-stream for run_from.
         if self._final_prog is None:
             dg_spec, _, _, buf_spec, j_spec = self._carry_specs(carry)
-
-            def fin(dg, buf, j):
-                return self._learn(dg, buf, skip=(j == 0))
-
+            fin = mesh_runtime.make_ring_drain(self._learn,
+                                               self.cfg.staleness)
             self._final_prog = jax.jit(shard_map(
                 fin, mesh=self.mesh,
                 in_specs=(dg_spec, buf_spec, j_spec),

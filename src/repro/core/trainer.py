@@ -106,6 +106,7 @@ class Trainer:
             "seed": cfg.seed,
             "alpha": cfg.alpha,
             "n_envs": cfg.n_envs,
+            "staleness": cfg.staleness,
             "intervals": intervals,
             "metrics": stream.state_dict(),
         })
@@ -134,16 +135,20 @@ class Trainer:
                 f"{path} is not a trainer checkpoint "
                 f"(format={meta.get('format')!r})")
         cfg = self.runtime.cfg
-        for key, have in (("runtime", self.runtime.name),
-                          ("algorithm", cfg.algorithm), ("seed", cfg.seed),
-                          ("alpha", cfg.alpha), ("n_envs", cfg.n_envs)):
+        # staleness defaults to 1 for checkpoints written before the
+        # slab-ring generalization (their capsules ARE K=1 capsules)
+        for key, have, default in (
+                ("runtime", self.runtime.name, None),
+                ("algorithm", cfg.algorithm, None), ("seed", cfg.seed, None),
+                ("alpha", cfg.alpha, None), ("n_envs", cfg.n_envs, None),
+                ("staleness", getattr(cfg, "staleness", 1), 1)):
             # runtime may legitimately differ (the capsule is
             # cross-runtime, tests/test_continuation.py) — warn-level
             # concerns are config fields that change the math
-            if key != "runtime" and meta.get(key) != have:
+            if key != "runtime" and meta.get(key, default) != have:
                 raise ValueError(
                     f"resume mismatch: checkpoint has {key}="
-                    f"{meta.get(key)!r}, runtime has {have!r}")
+                    f"{meta.get(key, default)!r}, runtime has {have!r}")
         state = ckpt_io.restore(path, self.runtime.state())
         return state, int(meta["intervals"]), meta.get("metrics")
 

@@ -1,0 +1,80 @@
+"""The SPS regression gate's comparability rules (benchmarks/check_sps).
+
+A baseline is only valid when it measured the SAME code-independent
+context: sweep shape (intervals), hardware (host fingerprint), and
+workload (config fingerprint — alpha/n_envs/env/algorithm/staleness).
+Records written before config fingerprinting are skipped as baselines,
+loudly, rather than guessed about: a record produced with a different
+HTSConfig silently becoming the gate's baseline is exactly the bug this
+pins down.
+"""
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import check_sps  # noqa: E402
+
+KEY = "engine_sps_mesh"
+CFG_A = {"env": "catch", "alpha": 8, "n_envs": 8, "staleness": 1}
+CFG_B = {"env": "catch", "alpha": 8, "n_envs": 8, "staleness": 4}
+
+
+def _rec(sps, cfg=CFG_A, host="h1", intervals=12, **extra):
+    r = {"intervals": intervals, "host": host, "sps": {KEY: sps}}
+    if cfg is not None:
+        r["config"] = cfg
+    r.update(extra)
+    return r
+
+
+def test_gate_compares_matching_config():
+    ok, msg = check_sps.check([_rec(100.0), _rec(95.0)], KEY, 0.30)
+    assert ok and msg.startswith("OK")
+    ok, msg = check_sps.check([_rec(100.0), _rec(60.0)], KEY, 0.30)
+    assert not ok and "REGRESSION" in msg
+
+
+def test_different_config_is_not_a_baseline():
+    """A K=4 sweep (different workload, naturally different SPS) must
+    never gate a K=1 run — with no matching record the gate skips."""
+    ok, msg = check_sps.check([_rec(1000.0, cfg=CFG_B), _rec(60.0)],
+                              KEY, 0.30)
+    assert ok and msg.startswith("skip")
+
+
+def test_unfingerprinted_record_skips_loudly():
+    """Pre-fingerprint records are skipped as baselines AND the skip
+    message says so — a silently-vacuous gate is the failure mode."""
+    ok, msg = check_sps.check([_rec(1000.0, cfg=None), _rec(60.0)],
+                              KEY, 0.30)
+    assert ok
+    assert "no config fingerprint" in msg
+
+
+def test_matching_config_found_behind_mismatches():
+    """The baseline search walks past non-comparable records (other
+    configs, other hosts, replays) to the most recent comparable one."""
+    records = [
+        _rec(100.0),                              # the true baseline
+        _rec(1000.0, cfg=CFG_B),                  # different workload
+        _rec(1000.0, host="h2"),                  # different hardware
+        _rec(1000.0, cfg=None),                   # unfingerprinted
+        _rec(1000.0, restored_runtimes=["mesh"]),  # replayed, not measured
+        _rec(95.0),                               # current run
+    ]
+    ok, msg = check_sps.check(records, KEY, 0.30)
+    assert ok and "baseline=100.0" in msg
+
+
+def test_live_bench_file_parses_and_gate_runs():
+    """The committed BENCH_sps.json stays loadable end-to-end."""
+    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_sps.json")
+    if not os.path.exists(path):
+        pytest.skip("no committed BENCH_sps.json")
+    records = check_sps.load_records(path)
+    assert records
+    ok, _ = check_sps.check(records, KEY, max_regression=1.0)
+    assert ok in (True, False)

@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import delayed_grad, losses, vtrace
-from repro.core.buffers import SlabPair
+from repro.core.buffers import SlabRing
 from repro.optim import sgd, rmsprop, adam, apply_updates
 
 
@@ -42,12 +42,13 @@ def test_delayed_gradient_skip():
     assert int(dg3.step) == 1
 
 
-def test_slab_pair_swap_discipline():
-    """Roles alternate with interval parity; slab j%2 is the SAME memory
-    at intervals j and j+2 (preallocated, no per-interval allocation);
-    the learner hand-off is by reference, not by copy."""
+def test_slab_ring_rotation_discipline():
+    """Roles rotate with the interval index; slab j % n_slots is the
+    SAME memory at intervals j and j + n_slots (preallocated, no
+    per-interval allocation); the learner hand-off is by reference, not
+    by copy. n_slots=2 is the paper's parity-swap double buffer."""
     spec = {"obs": ((2,), np.float32), "rewards": ((), np.float32)}
-    sp = SlabPair(3, 4, spec)
+    sp = SlabRing(3, 4, spec)               # default: double buffer
     s0, b0 = sp.write_view(0)
     s1, b1 = sp.write_view(1)
     assert s0 is not s1 and b0 is not b1
@@ -59,10 +60,23 @@ def test_slab_pair_swap_discipline():
     assert set(traj) == {"obs", "rewards", "bootstrap_obs"}
     assert float(traj["rewards"][1, 2]) == 7.0
     # by-reference hand-off: later slab writes are visible through a
-    # traj taken BEFORE them (the coordinator's swap barrier, not a
+    # traj taken BEFORE them (the coordinator's ring barrier, not a
     # copy, is what protects the learner)
     s0["rewards"][0, 0] = 3.0
     assert float(sp.as_traj(0)["rewards"][0, 0]) == 3.0
+
+
+def test_slab_ring_staleness_depth():
+    """A staleness-K ring holds K+1 distinct slabs: interval j's slab is
+    reused exactly at j + K + 1, and the K intermediate intervals write
+    K other slabs (what lets rollout run K intervals ahead)."""
+    spec = {"obs": ((2,), np.float32)}
+    ring = SlabRing(3, 4, spec, n_slots=4)          # K = 3
+    slabs = [ring.write_view(j)[0] for j in range(4)]
+    assert len({id(s) for s in slabs}) == 4
+    assert ring.write_view(4)[0] is slabs[0]
+    with pytest.raises(ValueError):
+        SlabRing(3, 4, spec, n_slots=1)
 
 
 def test_n_step_returns_manual():

@@ -64,8 +64,9 @@ def test_host_warm_run_does_not_recompile():
         "actor_fwd": rt._actor_fwd,
         "step_batch": rt._step_batch,
         "tables": rt._tables_fn,
-        "learn": rt._learn_fn,
-        "learn_stream": rt._learn_stream,
+        "grad": rt._grad_fn,
+        "apply": rt._apply_fn,
+        "final_drain": rt._final_fn,
         "env_reset": rt._env_reset_v,
     }
     sizes = {k: f._cache_size() for k, f in jitted.items()}

@@ -12,6 +12,7 @@ from repro.core.host_runtime import HostConfig, HostHTSRL
 from repro.core.mesh_runtime import HTSConfig
 from repro.envs import catch
 from repro.envs.interfaces import vectorize
+from repro.envs.steptime import StepTimeModel
 from repro.models.cnn_policy import apply_mlp_policy, init_mlp_policy
 from repro.optim import rmsprop
 
@@ -109,6 +110,101 @@ def test_async_staleness_changes_training():
     (ap, *_), _ = run_async(ac)
     (sp, *_), _ = run_sync(sc)
     assert _maxdiff(ap, sp) > 0.0    # stale behavior policy diverges
+
+
+def test_host_rejects_conflicting_config_forms():
+    """host=HostConfig(...) plus HostConfig-field kwargs used to silently
+    drop the kwargs — now a TypeError names the conflict."""
+    env1, cfg, papply, params, opt = _setup()
+    with pytest.raises(TypeError, match="n_actors"):
+        HostHTSRL(env1, papply, params, opt, cfg,
+                  host=HostConfig(n_actors=2), n_actors=8)
+    # each form alone still works
+    HostHTSRL(env1, papply, params, opt, cfg, host=HostConfig(n_actors=2))
+    HostHTSRL(env1, papply, params, opt, cfg, n_actors=2)
+
+
+def test_async_rejects_conflicting_config_forms():
+    from repro.core.baselines import AsyncRuntime
+    env1, cfg, papply, params, opt = _setup()
+    with pytest.raises(TypeError, match="staleness"):
+        AsyncRuntime(env1, papply, params, opt, cfg,
+                     acfg=AsyncConfig(staleness=4), staleness=16)
+    AsyncRuntime(env1, papply, params, opt, cfg, staleness=4)
+
+
+# ------------------------------------------------ pool failure handling
+class _BombTime(StepTimeModel):
+    """A duration model that detonates in a worker thread at a chosen
+    (id, index) — as step_time it kills an executor; as learner_time it
+    kills the sim-learner thread."""
+
+    def __init__(self, env_id, step):
+        super().__init__()
+        object.__setattr__(self, "env_id", env_id)
+        object.__setattr__(self, "step", step)
+
+    def sample(self, env_id, step, seed=0):
+        if env_id == self.env_id and step >= self.step:
+            raise RuntimeError("boom: simulated env failure")
+        return 0.0
+
+
+def test_executor_death_propagates_instead_of_hanging():
+    """An executor thread dying mid-interval must fail run() loudly —
+    with the worker's traceback — not leave the coordinator (and CI)
+    blocked on the interval barrier forever."""
+    env1, cfg, papply, params, opt = _setup()
+    host = HostHTSRL(env1, papply, params, opt, cfg,
+                     host=HostConfig(n_actors=2,
+                                     step_time=_BombTime(2, 7)))
+    with pytest.raises(RuntimeError) as ei:
+        host.run(4)
+    msg = str(ei.value)
+    assert "worker thread died" in msg
+    assert "boom: simulated env failure" in msg
+    assert "worker thread traceback" in msg      # debuggable, not bare
+
+
+def test_actor_death_propagates_instead_of_hanging():
+    """Same contract for the actor/stepper pools: executors blocked on
+    their action slots are unblocked by the shutdown sentinel, and the
+    coordinator re-raises the original failure."""
+    env1, cfg, papply, params, opt = _setup()
+    host = HostHTSRL(env1, papply, params, opt, cfg,
+                     host=HostConfig(n_actors=2))
+    host._build()
+    real = host._actor_fwd
+    calls = []
+
+    def dying_actor_fwd(*a, **k):
+        calls.append(1)
+        if len(calls) > 3:
+            raise ValueError("actor fwd blew up")
+        return real(*a, **k)
+
+    host._actor_fwd = dying_actor_fwd
+    try:
+        with pytest.raises(RuntimeError, match="actor fwd blew up"):
+            host.run(4)
+    finally:
+        host._actor_fwd = real
+    # a later run on the SAME runtime recovers (pools respawn cleanly)
+    out = host.run(2)
+    assert out.steps == 2 * cfg.alpha * cfg.n_envs
+
+
+def test_sim_learner_death_propagates_instead_of_hanging():
+    """The simulated-learner thread dying (e.g. a user-supplied
+    learner_time model raising) must not leave the coordinator parked on
+    a pending gradient's ready gate forever — the release path wakes the
+    gate and run() re-raises the worker failure."""
+    env1, cfg, papply, params, opt = _setup()
+    host = HostHTSRL(env1, papply, params, opt, cfg,
+                     host=HostConfig(n_actors=2,
+                                     learner_time=_BombTime(0, 2)))
+    with pytest.raises(RuntimeError, match="boom: simulated env failure"):
+        host.run(5)
 
 
 def test_episode_returns_extraction():

@@ -1,0 +1,286 @@
+"""Staleness-K slab ring: the generalized determinism contract.
+
+``HTSConfig.staleness`` bounds how many intervals of rollout may run
+ahead of the learner (DESIGN.md §4). The contract this suite pins:
+
+* K=1 is the paper's double buffer — covered by the committed goldens
+  (tests/test_goldens.py runs the default config, which must stay
+  bit-identical across this refactor).
+* At every K, host/mesh/sharded are one program under three concurrency
+  models: bit-identical parameters AND streams (the determinism
+  contract §3 is untouched — keys are still pure functions of
+  ``(seed, env_id, step)``, so the rollout data cannot depend on K; only
+  the update schedule does).
+* The continuation contract survives the ring: ``run(n)`` ≡ any
+  partition into ``run_from`` segments with a checkpoint round-trip at
+  every boundary, for K ∈ {1, 2, 4} — the capsule carries the ring
+  occupancy (TrainState.buffer gains a leading K axis) and the behavior
+  history (DelayedGradState.params_prev ring).
+* ``behavior_lag`` is structural: read off the history leaves, never a
+  config scalar that could drift from the stored state.
+
+The 2-device subprocess test is the K>1 cell of the CI matrix: every
+push exercises staleness=2 on a real 2-shard data mesh.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import io as ckpt_io
+from repro.core import delayed_grad, engine
+from repro.core.engine import HTSConfig
+from repro.envs import catch
+from repro.models.cnn_policy import apply_mlp_policy, init_mlp_policy
+from repro.optim import rmsprop
+
+
+def _setup(staleness, algorithm="a2c", alpha=4, n_envs=4):
+    env1 = catch.make()
+    cfg = HTSConfig(alpha=alpha, n_envs=n_envs, seed=3,
+                    algorithm=algorithm, staleness=staleness)
+
+    def papply(p, obs):
+        return apply_mlp_policy(p, obs.reshape(obs.shape[0], -1))
+
+    params = init_mlp_policy(jax.random.key(0),
+                             int(np.prod(env1.obs_shape)), env1.n_actions)
+    opt = rmsprop(7e-4, eps=1e-5)
+    return env1, cfg, papply, params, opt
+
+
+def _make(name, staleness, algorithm="a2c"):
+    env1, cfg, papply, params, opt = _setup(staleness, algorithm)
+    kwargs = {}
+    if name == "sharded":
+        from jax.sharding import Mesh
+        kwargs["mesh"] = Mesh(np.array(jax.devices()[:1]), ("data",))
+    return engine.make_runtime(name, env1, papply, params, opt, cfg,
+                               **kwargs)
+
+
+def _maxdiff(a, b):
+    return max(float(jnp.max(jnp.abs(x - y)))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ----------------------------------------------------- cross-runtime K>1
+@pytest.mark.parametrize("staleness", [2, 4])
+def test_runtimes_bit_identical_at_staleness(staleness):
+    """host/mesh/sharded at K>1: same params, same streams, bit-exact —
+    the ring changes the schedule, not one floating-point operation."""
+    outs = {name: _make(name, staleness).run(6)
+            for name in ("host", "mesh", "sharded")}
+    ref = outs["mesh"]
+    for name, out in outs.items():
+        assert _maxdiff(ref.params, out.params) == 0.0, name
+        np.testing.assert_array_equal(ref.rewards, out.rewards,
+                                      err_msg=name)
+        np.testing.assert_array_equal(ref.dones, out.dones, err_msg=name)
+
+
+@pytest.mark.parametrize("algorithm", ["ppo", "vtrace"])
+def test_staleness2_across_algorithms(algorithm):
+    """The delay-K schedule is algorithm-independent: PPO clipping and
+    V-trace corrections see the same (theta_{j-K}, D_{j-K}) pairs on
+    every runtime."""
+    a = _make("host", 2, algorithm).run(5)
+    b = _make("mesh", 2, algorithm).run(5)
+    assert _maxdiff(a.params, b.params) == 0.0
+
+
+def test_staleness_changes_training_but_not_data():
+    """K is a real knob: the delay changes the parameter trajectory (the
+    gradients are applied K updates late) while the FIRST K intervals'
+    rollouts — collected at theta_0 either way — stay identical."""
+    o1 = _make("mesh", 1).run(6)
+    o2 = _make("mesh", 2).run(6)
+    assert _maxdiff(o1.params, o2.params) > 0.0
+    np.testing.assert_array_equal(o1.rewards[:1], o2.rewards[:1])
+
+
+def test_update_counts_match_across_staleness():
+    """run(n) reflects exactly n updates at every K: the in-stream
+    applies plus the K-pass reporting drain."""
+    for K in (1, 2, 4):
+        out = _make("mesh", K).run(5)
+        assert int(out.state.step) == 5, K
+        # mid-stream state is K updates behind the reported params
+        rt = _make("host", K)
+        rt.run(5)
+        assert int(rt.state().algo.step) == 5 - K
+
+
+def test_run_shorter_than_staleness():
+    """n < K edge: only n real updates exist; the drain skips the
+    never-filled ring slots, and host/mesh still agree bit-exactly."""
+    a = _make("host", 4).run(2)
+    b = _make("mesh", 4).run(2)
+    assert _maxdiff(a.params, b.params) == 0.0
+    assert int(a.state.step) == 2
+
+
+# ------------------------------------------------------- continuation
+@pytest.mark.parametrize("staleness", [1, 2, 4])
+@pytest.mark.parametrize("name", ["host", "mesh", "sharded"])
+def test_partition_with_checkpoint_roundtrip(name, staleness, tmp_path):
+    """run(5) ≡ run_from segments with a disk checkpoint round-trip at
+    every boundary, at every K — the capsule's ring occupancy (buffer
+    slots + behavior history) restores the exact pipeline state."""
+    straight = _make(name, staleness).run(5)
+    rt = _make(name, staleness)
+    template = rt.state()
+    state, rewards = template, []
+    for i, n in enumerate((2, 3)):
+        out = rt.run_from(state, n)
+        rewards.append(out.rewards)
+        path = str(tmp_path / f"boundary_{i}")
+        ckpt_io.save(path, rt.state())
+        state = ckpt_io.restore(path, template)
+    assert _maxdiff(straight.params, out.params) == 0.0
+    np.testing.assert_array_equal(straight.rewards,
+                                  np.concatenate(rewards))
+
+
+def test_capsule_is_cross_runtime_at_staleness2(tmp_path):
+    """A K=2 host checkpoint resumes on mesh (and back): the stacked
+    ring is one structure for the whole HTS family."""
+    straight = _make("mesh", 2).run(6)
+    a = _make("host", 2)
+    a.run(3)
+    path = str(tmp_path / "xfer")
+    ckpt_io.save(path, a.state())
+    b = _make("mesh", 2)
+    out = b.run_from(ckpt_io.restore(path, b.state()), 3)
+    assert _maxdiff(straight.params, out.params) == 0.0
+
+
+def test_staleness_mismatch_checkpoint_refused(tmp_path):
+    """A K=2 capsule cannot silently restore into a K=1 runtime: the
+    ring shapes differ, and checkpoint/io fails with the staleness hint
+    instead of unflattening mismatched leaves."""
+    a = _make("mesh", 2)
+    a.run(3)
+    path = str(tmp_path / "k2")
+    ckpt_io.save(path, a.state())
+    b = _make("mesh", 1)
+    with pytest.raises(ValueError, match="staleness|leaves|shape"):
+        ckpt_io.restore(path, b.state())
+
+
+# ------------------------------------------------- analytic pipeline model
+def test_pipeline_model_hand_example():
+    """Worked example of the staleness-K schedule recursion: alternating
+    fast/slow rollouts against a constant learner — K=2 hides the slow
+    learner behind the fast intervals, K=1 pays max() every interval."""
+    from repro.core.runtime_model import staleness_pipeline_runtime
+    R, L = [1.0, 3.0, 1.0, 3.0], [2.0, 2.0, 2.0, 2.0]
+    assert staleness_pipeline_runtime(R, L, 1) == 11.0
+    assert staleness_pipeline_runtime(R, L, 2) == 10.0
+
+
+def test_pipeline_model_monotone_in_staleness():
+    """A larger staleness budget never predicts a slower schedule on the
+    same traces (the ring constraint set only shrinks), and a saturated
+    serial learner is rate-bound at EVERY K (no schedule beats it)."""
+    from repro.core.runtime_model import staleness_pipeline_runtime
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        n = int(rng.integers(1, 30))
+        R = rng.gamma(0.5, 2.0, size=n)
+        L = rng.gamma(0.5, 2.0, size=n)
+        totals = [staleness_pipeline_runtime(R, L, K)
+                  for K in (1, 2, 4, 8, n + 1)]
+        assert all(a >= b - 1e-12 for a, b in zip(totals, totals[1:]))
+        # full drain is always paid: the learner backlog bounds below
+        assert totals[-1] >= float(np.sum(L))
+    slow = staleness_pipeline_runtime([1.0] * 8, [5.0] * 8, 1)
+    for K in (2, 4, 8):
+        assert staleness_pipeline_runtime([1.0] * 8, [5.0] * 8, K) == slow
+
+
+# ------------------------------------------------------- structural lag
+def test_behavior_lag_is_structural():
+    opt = rmsprop(1e-3)
+    params = {"w": jnp.ones((3, 2))}
+    assert delayed_grad.behavior_lag(delayed_grad.init(params, opt)) == 1
+    dg3 = delayed_grad.init(params, opt, staleness=3)
+    assert delayed_grad.behavior_lag(dg3) == 3
+    assert jax.tree.leaves(dg3.params_prev)[0].shape == (3, 3, 2)
+    # the gradient point is the OLDEST slot, and updates roll the ring
+    dg3 = delayed_grad.update(dg3, {"w": jnp.ones((3, 2))}, opt)
+    assert delayed_grad.behavior_lag(dg3) == 3
+    np.testing.assert_array_equal(
+        np.asarray(delayed_grad.behavior_params(dg3)["w"]), np.ones((3, 2)))
+
+
+def test_staleness_validation():
+    env1, cfg, papply, params, opt = _setup(0)
+    for name in ("host", "mesh", "sharded"):
+        with pytest.raises(ValueError, match="staleness"):
+            engine.make_runtime(name, env1, papply, params, opt, cfg)
+    # baselines refuse the knob entirely rather than silently ignore it
+    env1, cfg2, papply, params, opt = _setup(2)
+    for name in ("sync", "async"):
+        with pytest.raises(ValueError, match="staleness"):
+            engine.make_runtime(name, env1, papply, params, opt, cfg2)
+
+
+# --------------------------------------------------- 2-device sharded
+_MULTIDEV_SCRIPT = textwrap.dedent("""
+    import numpy as np, jax, jax.numpy as jnp, tempfile
+    assert len(jax.devices()) == 2, jax.devices()
+    from repro.checkpoint import io as ckpt_io
+    from repro.core import engine
+    from repro.core.engine import HTSConfig
+    from repro.envs import catch
+    from repro.models.cnn_policy import apply_mlp_policy, init_mlp_policy
+    from repro.optim import rmsprop
+    env1 = catch.make()
+    cfg = HTSConfig(alpha=4, n_envs=4, seed=3, staleness=2)
+    papply = lambda p, o: apply_mlp_policy(p, o.reshape(o.shape[0], -1))
+    params = init_mlp_policy(jax.random.key(0),
+                             int(np.prod(env1.obs_shape)), env1.n_actions)
+    opt = rmsprop(7e-4, eps=1e-5)
+    mk = lambda: engine.make_runtime("sharded", env1, papply, params, opt,
+                                     cfg)
+    straight = mk().run(6)
+    # trajectories are device-count independent at K>1 too: compare the
+    # reward stream against the single-device host runtime
+    host = engine.make_runtime("host", env1, papply, params, opt,
+                               cfg).run(6)
+    np.testing.assert_array_equal(straight.rewards, host.rewards)
+    a = mk()
+    a.run(3)
+    d = tempfile.mkdtemp()
+    ckpt_io.save(f"{d}/step_00000003", a.state())
+    b = mk()   # fresh instance: restore crosses process-lifetime state
+    state = ckpt_io.restore(f"{d}/step_00000003", b.state())
+    out = b.run_from(state, 3)
+    md = max(float(jnp.max(jnp.abs(x - y))) for x, y in
+             zip(jax.tree.leaves(straight.params),
+                 jax.tree.leaves(out.params)))
+    assert md == 0.0, md
+    print("OK", md)
+""")
+
+
+def test_sharded_two_device_staleness2():
+    """The K>1 cell of the CI matrix: on a real 2-device 'data' mesh
+    (subprocess — the device count locks at first jax init), staleness=2
+    trajectories match the host runtime bit-exactly and a mid-run
+    checkpoint (ring occupancy gathered via device_get) restores into a
+    fresh runtime and continues bit-exactly."""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=2",
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    r = subprocess.run([sys.executable, "-c", _MULTIDEV_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert r.stdout.startswith("OK")
