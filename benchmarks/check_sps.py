@@ -53,6 +53,19 @@ def _is_fresh(rec, key: str) -> bool:
                    for r in rec.get("restored_runtimes", []))
 
 
+def _config_diff(a, b) -> str:
+    """Field-level differences between two workload config fingerprints
+    (canonical spec dicts — benchmarks.engine_sps.config_fingerprint),
+    one ``path: ours != theirs`` line each. Falls back to repr for
+    fingerprints that predate the spec form."""
+    try:
+        from repro.api.spec import diff_canonical
+        lines = diff_canonical(a or {}, b or {})
+    except ImportError:       # standalone use without PYTHONPATH=src
+        return f"current={a!r} vs candidate={b!r}"
+    return "; ".join(lines) if lines else "(equal)"
+
+
 def check(records, key: str, max_regression: float):
     """Returns (ok: bool, message: str). ok=True includes skips."""
     if not records:
@@ -64,7 +77,7 @@ def check(records, key: str, max_regression: float):
     if not _is_fresh(current, key):
         return True, (f"skip: last record's {key} was replayed from a "
                       f"sweep checkpoint, not measured")
-    baseline, unfingerprinted = None, 0
+    baseline, unfingerprinted, near_miss = None, 0, None
     for rec in reversed(records[:-1]):
         if rec.get("sps", {}).get(key) is None:
             continue
@@ -84,13 +97,21 @@ def check(records, key: str, max_regression: float):
             unfingerprinted += 1
             continue
         if rec.get("config") != current.get("config"):
-            continue          # different workload — SPS not comparable
+            # different workload — SPS not comparable; keep the nearest
+            # one so the skip message can show WHICH fields differ
+            # instead of an opaque "fingerprint differs"
+            near_miss = near_miss or rec
+            continue
         baseline = rec
         break
     if baseline is None:
         extra = (f" ({unfingerprinted} otherwise-comparable record(s) "
                  f"skipped: no config fingerprint, cannot verify the "
                  f"workload matches)" if unfingerprinted else "")
+        if near_miss is not None:
+            extra += (f"; nearest candidate ({near_miss.get('ts', '?')}) "
+                      f"differs in: "
+                      f"{_config_diff(current.get('config'), near_miss.get('config'))}")
         return True, (f"skip: no prior record with {key} at "
                       f"intervals={current.get('intervals')} on host "
                       f"{current.get('host')!r} with matching config "

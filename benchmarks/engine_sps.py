@@ -1,45 +1,61 @@
 """Registry-driven throughput sweep: every runtime through one code path.
 
-Each registered runtime (host, mesh, sharded, sync, async) trains the same
-policy on the same envs with the same HTSConfig; we report steps/second
-after a warmup run absorbs compilation. This is the generalization of
-Tab. A2 — adding a runtime to the registry automatically adds it here.
+Each registered runtime (host, mesh, sharded, sync, async) trains the
+same declarative workload — ``bench_spec()``, the default bench
+ExperimentSpec (catch x mlp x rmsprop x a2c) — with only the spec's
+``runtime`` axis swapped; we report steps/second after a warmup run
+absorbs compilation. This is the generalization of Tab. A2 — adding a
+runtime to the registry automatically adds it here.
 
 ``run(runtimes=..., intervals=...)`` is also the backend of
 ``benchmarks.run --runtime ...`` and the CI SPS smoke check.
-``config_fingerprint`` is what gets stamped into each ``BENCH_sps.json``
-record: benchmarks/check_sps.py only compares SPS between records whose
-fingerprints match, so a sweep run with a different alpha/n_envs/env/
-staleness can never silently become the regression gate's baseline.
+``config_fingerprint`` — stamped into each ``BENCH_sps.json`` record —
+IS the spec's canonical JSON (repro.api.workload_fingerprint), minus
+the runtime axis (one record spans every runtime in the sweep):
+benchmarks/check_sps.py only compares SPS between records whose
+fingerprints match, and prints the field-level spec diff when they
+don't, so a sweep run with a different alpha/n_envs/env/staleness can
+never silently become the regression gate's baseline.
 """
-import numpy as np
-import jax
-
-from repro.core import engine
-from repro.envs import catch
-from repro.models.cnn_policy import apply_mlp_policy, init_mlp_policy
-from repro.optim import rmsprop
+from repro import api
 
 IV = 12
 
 
+def bench_spec(runtime: str = "mesh", alpha: int = 8, n_envs: int = 8,
+               staleness: int = 1, intervals: int = IV) -> api.ExperimentSpec:
+    """The default bench workload as a declarative spec."""
+    return api.ExperimentSpec(
+        env="catch",
+        policy="mlp",
+        optimizer={"name": "rmsprop", "kwargs": {"lr": 7e-4}},
+        algorithm="a2c",
+        runtime=runtime,
+        hts={"alpha": alpha, "n_envs": n_envs, "seed": 0,
+             "staleness": staleness},
+        intervals=intervals)
+
+
 def config_fingerprint(alpha=8, n_envs=8, staleness=1):
     """Everything about the benchmark workload that changes what an SPS
-    number means (env, model, optimizer, and the HTSConfig knobs the
-    sweep exposes) — comparable across records only when equal."""
-    return {"env": "catch", "model": "mlp", "opt": "rmsprop",
-            "algorithm": "a2c", "seed": 0, "alpha": alpha,
-            "n_envs": n_envs, "staleness": staleness}
+    number means — the bench spec's canonical serialization, minus the
+    runtime axis (the record's ``sps`` mapping is keyed per runtime).
+    Comparable across records only when equal."""
+    fp = api.workload_fingerprint(
+        bench_spec(alpha=alpha, n_envs=n_envs, staleness=staleness))
+    fp.pop("runtime")
+    return fp
 
 
-def run(runtimes=None, intervals=IV, alpha=8, n_envs=8, staleness=1):
-    env1 = catch.make()
-    cfg = engine.HTSConfig(alpha=alpha, n_envs=n_envs, seed=0,
-                           staleness=staleness)
-    params = init_mlp_policy(jax.random.key(0),
-                             int(np.prod(env1.obs_shape)), env1.n_actions)
-    opt = rmsprop(7e-4)
-    policy = lambda p, o: apply_mlp_policy(p, o.reshape(o.shape[0], -1))
+def run(runtimes=None, intervals=IV, alpha=8, n_envs=8, staleness=1,
+        progress=None):
+    """``progress`` (optional) is attached as a Session ``on_interval``
+    observer during the WARMUP run only, never the timed run. It fires
+    live per interval on coordinator runtimes (host); the fused
+    runtimes deliver it in one burst when the warmup program returns —
+    still a progress marker between runtimes, not a per-interval
+    heartbeat."""
+    from repro.core import engine
 
     rows = []
     for name in (runtimes or engine.runtime_names()):
@@ -47,8 +63,15 @@ def run(runtimes=None, intervals=IV, alpha=8, n_envs=8, staleness=1):
         # refuse K != 1 with a loud ValueError (sync is undelayed, async
         # has AsyncConfig.staleness) rather than silently running a
         # different workload than the record's config fingerprint claims
-        rt = engine.make_runtime(name, env1, policy, params, opt, cfg)
-        rt.run(intervals)              # warmup: compile + caches
-        out = rt.run(intervals)
+        session = api.build(bench_spec(runtime=name, alpha=alpha,
+                                       n_envs=n_envs, staleness=staleness,
+                                       intervals=intervals))
+        if progress is not None:
+            observer = session.on_interval(
+                lambda m, _n=name: progress(_n, m))
+        session.run(intervals)         # warmup: compile + caches
+        if progress is not None:
+            session.remove_observer(observer)
+        out = session.run(intervals)
         rows.append((f"engine_sps_{name}", out.sps, "sps"))
     return rows

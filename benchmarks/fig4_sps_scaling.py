@@ -2,15 +2,14 @@
 threaded host runtime with real (scaled) exponential step delays, catch
 policy. HTS-RL SPS should scale ~linearly in n_envs; the synchronous
 baseline's shouldn't (straggler effect)."""
-import numpy as np
 import jax
 
+from repro import models
 from repro.core.host_runtime import HostConfig, HostHTSRL
 from repro.core.mesh_runtime import HTSConfig
 from repro.core.runtime_model import expected_runtime
 from repro.envs import catch
 from repro.envs.steptime import StepTimeModel
-from repro.models.cnn_policy import apply_mlp_policy, init_mlp_policy
 from repro.optim import rmsprop
 
 SCALE = 0.004            # seconds per simulated mean step
@@ -18,8 +17,8 @@ SCALE = 0.004            # seconds per simulated mean step
 
 def run():
     env1 = catch.make()
-    params = init_mlp_policy(jax.random.key(0),
-                             int(np.prod(env1.obs_shape)), env1.n_actions)
+    policy = models.get_policy("mlp", env1)
+    params = policy.init(jax.random.key(0))
     opt = rmsprop(7e-4)
     rows = []
     for n_envs in (2, 4, 8, 16):
@@ -27,12 +26,9 @@ def run():
         host = HostConfig(n_actors=2,
                           step_time=StepTimeModel(shape=1.0, rate=1.0),
                           time_scale=SCALE)
-        runner = HostHTSRL(
-            env1, lambda p, o: apply_mlp_policy(
-                p, o.reshape(o.shape[0], -1)),
-            params, opt, cfg, host)
+        runner = HostHTSRL(env1, policy.apply, params, opt, cfg, host)
         out = runner.run(4)
-        rows.append((f"fig4r_hts_envs{n_envs}", out["sps"], "sps"))
+        rows.append((f"fig4r_hts_envs{n_envs}", out.sps, "sps"))
         # sync baseline: same steps, modeled (alpha=1 barrier per step)
         K = 4 * cfg.alpha * n_envs
         t_sync = expected_runtime(K, n_envs, 1, beta=1.0) * SCALE

@@ -20,13 +20,12 @@ fully hides behind the rollout — the paper's overlap claim.
 
     PYTHONPATH=src python -m benchmarks.run --only profile
 """
-import numpy as np
 import jax
 
+from repro import models
 from repro.core import engine
 from repro.core.host_runtime import HostConfig
 from repro.envs import catch
-from repro.models.cnn_policy import apply_mlp_policy, init_mlp_policy
 from repro.optim import rmsprop
 
 IV = 12
@@ -35,11 +34,10 @@ IV = 12
 def run(intervals=IV, alpha=8, n_envs=8):
     env1 = catch.make()
     cfg = engine.HTSConfig(alpha=alpha, n_envs=n_envs, seed=0)
-    params = init_mlp_policy(jax.random.key(0),
-                             int(np.prod(env1.obs_shape)), env1.n_actions)
+    policy = models.get_policy("mlp", env1)
+    params = policy.init(jax.random.key(0))
     opt = rmsprop(7e-4)
-    policy = lambda p, o: apply_mlp_policy(p, o.reshape(o.shape[0], -1))
-    rt = engine.make_runtime("host", env1, policy, params, opt, cfg,
+    rt = engine.make_runtime("host", env1, policy.apply, params, opt, cfg,
                              host=HostConfig(profile=True))
     rt.run(intervals)              # warmup: compile + caches
     out = rt.run(intervals)

@@ -76,6 +76,18 @@ def _save_progress(args, done: dict) -> None:
     os.replace(tmp, _progress_path(args))
 
 
+def _sweep_progress(rt_name: str, m: dict) -> None:
+    """Session on_interval observer for the sweep's warmup runs: a
+    stderr marker that each runtime's warmup actually produced data
+    (live per interval on the host runtime; one post-program burst on
+    the fused ones). The timed run carries no observer —
+    engine_sps.run."""
+    if m["interval"] % 4 == 0:
+        print(f"# {rt_name} warmup interval {m['interval']} "
+              f"reward/step {float(m['rewards'].mean()):+.3f}",
+              file=sys.stderr, flush=True)
+
+
 def _run_runtime_sweep(args) -> None:
     from benchmarks import engine_sps
     names = args.runtime.split(",")
@@ -94,7 +106,8 @@ def _run_runtime_sweep(args) -> None:
             try:
                 sub = engine_sps.run(runtimes=[rt_name],
                                      intervals=args.intervals,
-                                     staleness=args.staleness)
+                                     staleness=args.staleness,
+                                     progress=_sweep_progress)
             except Exception:
                 failed += 1
                 print(f"# runtime {rt_name} FAILED:\n"

@@ -26,15 +26,8 @@ import json
 import sys
 import time
 
-import numpy as np
-import jax
-
-from repro.core import engine
-from repro.core.host_runtime import HostConfig
-from repro.envs import catch
+from repro import api
 from repro.envs.steptime import StepTimeModel
-from repro.models.cnn_policy import apply_mlp_policy, init_mlp_policy
-from repro.optim import rmsprop
 
 K_VALUES = (1, 2, 4, 8)
 INTERVALS = 16
@@ -82,25 +75,38 @@ def _desc(t):
     return t
 
 
-def run(k_values=K_VALUES, intervals=INTERVALS):
-    env1 = catch.make()
-    params = init_mlp_policy(jax.random.key(0),
-                             int(np.prod(env1.obs_shape)), env1.n_actions)
-    opt = rmsprop(7e-4)
-    policy = lambda p, o: apply_mlp_policy(p, o.reshape(o.shape[0], -1))
+def _stm_json(m: StepTimeModel) -> dict:
+    """StepTimeModel -> the JSON runtime-kwargs form repro.api decodes
+    (repro.api.session._decode_steptime)."""
+    return {"shape": m.shape, "rate": m.rate, "base": m.base}
 
+
+def sweep_spec(pname: str, K: int,
+               intervals: int = INTERVALS) -> api.ExperimentSpec:
+    """One sweep cell as a declarative spec — the simulated host profile
+    rides in the runtime kwargs, JSON end to end."""
+    model, learner_time = PROFILES[pname]
+    host = {"n_actors": 2, "step_time": _stm_json(model),
+            "time_scale": SCALE,
+            "learner_time": (_stm_json(learner_time)
+                             if isinstance(learner_time, StepTimeModel)
+                             else learner_time)}
+    return api.ExperimentSpec(
+        env="catch", policy="mlp",
+        optimizer={"name": "rmsprop", "kwargs": {"lr": 7e-4}},
+        algorithm="a2c",
+        runtime={"name": "host", "kwargs": {"host": host}},
+        hts={"alpha": ALPHA, "n_envs": N_ENVS, "seed": 0, "staleness": K},
+        intervals=intervals)
+
+
+def run(k_values=K_VALUES, intervals=INTERVALS):
     rows = []
-    for pname, (model, learner_time) in PROFILES.items():
+    for pname in PROFILES:
         for K in k_values:
-            cfg = engine.HTSConfig(alpha=ALPHA, n_envs=N_ENVS, seed=0,
-                                   staleness=K)
-            rt = engine.make_runtime(
-                "host", env1, policy, params, opt, cfg,
-                host=HostConfig(n_actors=2, step_time=model,
-                                time_scale=SCALE,
-                                learner_time=learner_time))
-            rt.run(intervals)            # warmup: compile + caches
-            out = rt.run(intervals)
+            session = api.build(sweep_spec(pname, K, intervals))
+            session.run(intervals)       # warmup: compile + caches
+            out = session.run(intervals)
             rows.append((f"staleness_sps_host_{pname}_k{K}", out.sps,
                          "sps"))
     return rows

@@ -3,30 +3,29 @@ final scores are IDENTICAL (full determinism)."""
 import numpy as np
 import jax
 
+from repro import models
 from repro.core.host_runtime import HostConfig, HostHTSRL
 from repro.core.mesh_runtime import HTSConfig
 from repro.envs import catch
 from repro.envs.steptime import StepTimeModel
-from repro.models.cnn_policy import apply_mlp_policy, init_mlp_policy
 from repro.optim import rmsprop
 
 
 def run():
     env1 = catch.make()
     cfg = HTSConfig(alpha=8, n_envs=8, seed=0)
-    params = init_mlp_policy(jax.random.key(0),
-                             int(np.prod(env1.obs_shape)), env1.n_actions)
+    policy = models.get_policy("mlp", env1)
+    params = policy.init(jax.random.key(0))
     opt = rmsprop(7e-4)
-    policy = lambda p, o: apply_mlp_policy(p, o.reshape(o.shape[0], -1))
     rows, finals = [], []
     for n_actors in (1, 2, 4):
         host = HostConfig(n_actors=n_actors,
                           step_time=StepTimeModel(1.0, 1.0),
                           time_scale=0.002)
-        out = HostHTSRL(env1, policy, params, opt, cfg, host).run(4)
+        out = HostHTSRL(env1, policy.apply, params, opt, cfg, host).run(4)
         finals.append(np.concatenate(
             [np.asarray(x).ravel() for x in
-             jax.tree.leaves(out["params"])]))
+             jax.tree.leaves(out.params)]))
     identical = all(np.array_equal(finals[0], f) for f in finals[1:])
     rows.append(("tab4_scores_identical_1_2_4_actors", float(identical),
                  "bool"))

@@ -1,6 +1,7 @@
 """HTS-RL(A2C) vs synchronous A2C vs IMPALA-style async on a pixel env —
 the paper's Tab. 1 / Fig. 5 comparison, end-to-end, with every contender
-selected from the runtime registry (one code path, swap the name).
+one declarative spec (repro.api): same env/policy/optimizer axes, only
+the ``runtime`` axis (and its kwargs) swapped.
 
 Uses the paper's conv policy trunk on GridMaze (the deterministic
 pixel-observation Atari stand-in; see DESIGN.md §8 for why not ALE).
@@ -12,22 +13,15 @@ throughput under a high-variance step-time model (Claim 1's regime).
 import argparse
 
 import numpy as np
-import jax
 
-from repro.configs.paper_cnn import CNNPolicyConfig
-from repro.core import engine
-from repro.core.baselines import AsyncConfig
-from repro.core.engine import HTSConfig
+from repro import api
 from repro.core.runtime_model import expected_runtime
-from repro.envs import gridmaze
-from repro.models.cnn_policy import apply_cnn, init_cnn
-from repro.optim import rmsprop
 
 RUNTIMES = (
     ("mesh", "HTS-RL(A2C)", {}),
     ("sync", "sync A2C", {}),
     ("async", "async+vtrace (k=8)",
-     {"acfg": AsyncConfig(staleness=8, correction="vtrace")}),
+     {"acfg": {"staleness": 8, "correction": "vtrace"}}),
 )
 
 
@@ -38,18 +32,19 @@ def main():
     ap.add_argument("--alpha", type=int, default=5)
     args = ap.parse_args()
 
-    env1 = gridmaze.make()
-    cfg = HTSConfig(alpha=args.alpha, n_envs=args.n_envs, seed=0,
-                    entropy_coef=0.01)
-    ccfg = CNNPolicyConfig(obs_shape=env1.obs_shape, conv_sizes=(3, 3, 3),
-                           conv_strides=(1, 1, 1), hidden=128)
-
-    def policy(params, obs):
-        return apply_cnn(params, obs, ccfg)
-
-    params = init_cnn(jax.random.key(0), ccfg, env1.n_actions,
-                      env1.obs_shape)
-    opt = rmsprop(7e-4, eps=1e-5)
+    def spec(runtime, kwargs):
+        return api.ExperimentSpec(
+            env="gridmaze",
+            policy={"name": "cnn",
+                    "kwargs": {"conv_sizes": [3, 3, 3],
+                               "conv_strides": [1, 1, 1], "hidden": 128}},
+            optimizer={"name": "rmsprop",
+                       "kwargs": {"lr": 7e-4, "eps": 1e-5}},
+            algorithm="a2c",
+            runtime={"name": runtime, "kwargs": kwargs},
+            hts={"alpha": args.alpha, "n_envs": args.n_envs, "seed": 0,
+                 "entropy_coef": 0.01},
+            intervals=args.intervals)
 
     def tail(rewards):
         r = np.asarray(rewards)
@@ -60,16 +55,15 @@ def main():
     # mostly measure XLA compilation)
     print("final-metric reward/step (last 20%):")
     for name, label, kw in RUNTIMES:
-        out = engine.make_runtime(name, env1, policy, params, opt, cfg,
-                                  **kw).run(args.intervals)
+        out = api.build(spec(name, kw)).run()
         print(f"  {label + ':':<22}{tail(out.rewards):+.4f}")
 
     # virtual-time: same steps, modeled wall-clock (Claim 1 regime:
     # exponential step times, mean 1)
-    K = args.intervals * cfg.alpha * cfg.n_envs
-    t_hts = expected_runtime(K, cfg.n_envs, cfg.alpha, beta=1.0)
-    t_sync = expected_runtime(K, cfg.n_envs, 1, beta=1.0) + \
-        args.intervals * cfg.alpha * 0.05   # alternating learner time
+    K = args.intervals * args.alpha * args.n_envs
+    t_hts = expected_runtime(K, args.n_envs, args.alpha, beta=1.0)
+    t_sync = expected_runtime(K, args.n_envs, 1, beta=1.0) + \
+        args.intervals * args.alpha * 0.05   # alternating learner time
     print(f"modeled wall-clock for {K} steps (exp step times): "
           f"HTS-RL {t_hts:.0f}s vs sync-A2C {t_sync:.0f}s "
           f"({t_sync / t_hts:.2f}x speedup)")

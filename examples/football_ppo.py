@@ -1,29 +1,24 @@
 """HTS-RL(PPO) on the mini-football academy drill (GFootball stand-in) —
 the paper's Tab. 2 setting: PPO + high step-time variance environment,
 with the threaded host runtime exercising the real executor/actor/learner
-concurrency + double-buffer swap discipline. The runtime comes from the
-registry: pass ``--runtime mesh`` (or ``sharded``) to run the identical
-experiment on a fused scheduler instead.
+concurrency + slab-ring swap discipline. The whole experiment is one
+declarative spec (repro.api): pass ``--runtime mesh`` (or ``sharded``)
+to run the identical experiment on a fused scheduler instead — only the
+spec's runtime axis changes. The simulated step-time model rides inside
+the spec's runtime kwargs as plain JSON.
 
     PYTHONPATH=src python examples/football_ppo.py --intervals 40
 """
 import argparse
 
-import jax
-
-from repro.core import engine
-from repro.core.engine import HTSConfig
-from repro.core.host_runtime import HostConfig
-from repro.envs import football
-from repro.envs.steptime import StepTimeModel
-from repro.models.cnn_policy import apply_mlp_policy, init_mlp_policy
-from repro.optim import rmsprop
+from repro import api
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--runtime", default="host",
-                    choices=engine.runtime_names())
+                    choices=[n for n in api.runtime_names()
+                             if n != "stream"])
     ap.add_argument("--intervals", type=int, default=40)
     ap.add_argument("--n-envs", type=int, default=8)
     ap.add_argument("--n-actors", type=int, default=2)
@@ -33,27 +28,28 @@ def main():
                          "host runtime only)")
     args = ap.parse_args()
 
-    env1 = football.make()
-    cfg = HTSConfig(alpha=args.alpha, n_envs=args.n_envs, seed=0,
-                    algorithm="ppo", use_gae=True)
-
-    params = init_mlp_policy(jax.random.key(0), env1.obs_shape[0],
-                             env1.n_actions)
-    opt = rmsprop(3e-4, eps=1e-5)
     kw = {}
     if args.runtime != "host" and (args.n_actors != 2
                                    or args.simulate_step_time):
         print(f"note: --n-actors/--simulate-step-time only affect the "
               f"host runtime; ignored for '{args.runtime}'")
     if args.runtime == "host":
-        kw["host"] = HostConfig(
-            n_actors=args.n_actors,
-            step_time=StepTimeModel(shape=1.0, rate=1.0)
-            if args.simulate_step_time else None,
-            time_scale=0.002)
-    runner = engine.make_runtime(args.runtime, env1, apply_mlp_policy,
-                                 params, opt, cfg, **kw)
-    out = runner.run(args.intervals)
+        host = {"n_actors": args.n_actors, "time_scale": 0.002}
+        if args.simulate_step_time:
+            host["step_time"] = {"shape": 1.0, "rate": 1.0}
+        kw["host"] = host
+
+    spec = api.ExperimentSpec(
+        env="football",
+        policy="mlp",
+        optimizer={"name": "rmsprop", "kwargs": {"lr": 3e-4, "eps": 1e-5}},
+        algorithm="ppo",
+        runtime={"name": args.runtime, "kwargs": kw},
+        hts={"alpha": args.alpha, "n_envs": args.n_envs, "seed": 0,
+             "use_gae": True},
+        intervals=args.intervals)
+
+    out = api.build(spec).run()
     r = out.rewards
     print(f"[{args.runtime}] steps: {out.steps}  "
           f"wall: {out.wall_time:.1f}s  SPS: {out.sps:.0f} (incl. compile)")

@@ -1,28 +1,31 @@
 """End-to-end driver: HTS-RL training of a transformer policy.
 
 The assigned-architecture backbones as RL policies on the token
-environment: rollouts are collected with the behavior snapshot
-(theta_{j-1}-delayed), the learner applies the one-step delayed gradient
-— the complete HTS-RL loop at language-model shape. Defaults to a ~4M
-parameter starcoder2-family config so a few hundred intervals finish on
-CPU; pass --arch/--layers/--d-model to scale (the same code pjit's onto
-the production mesh via launch/train.py).
+environment, declared as one spec: env ``token_stream`` x policy
+``backbone`` x runtime ``stream`` (the engine-contract LLM learner,
+core/stream_runtime.py — rollouts are collected with the behavior
+snapshot, theta_{j-1}-delayed, and the learner applies the one-step
+delayed gradient: the complete HTS-RL loop at language-model shape).
+Defaults to a ~4M parameter starcoder2-family config so a few hundred
+intervals finish on CPU; pass --arch/--layers/--d-model to scale (the
+same spec pjit's onto the production mesh via ``runtime.kwargs.mesh``,
+which is what repro.launch.train sets).
+
+Progress comes through the Session's streaming observer; the
+behavior-policy accuracy probe rides on ``state()`` capsules between
+``run_from`` segments — the training stream itself is untouched.
 
     PYTHONPATH=src python examples/llm_policy_hts.py --intervals 200
 """
 import argparse
-import dataclasses
 import time
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import get_config
-from repro.core import delayed_grad, learner
-from repro.data.pipeline import TokenStream
+from repro import api, envs
 from repro.models import backbone
-from repro.optim import adam
 
 
 def main():
@@ -36,36 +39,54 @@ def main():
     ap.add_argument("--vocab", type=int, default=256)
     args = ap.parse_args()
 
-    cfg = dataclasses.replace(
-        get_config(args.arch).reduced(),
-        n_layers=args.layers, d_model=args.d_model,
-        vocab_size=args.vocab, d_ff=4 * args.d_model)
+    spec = api.ExperimentSpec(
+        env={"name": "token_stream",
+             "kwargs": {"vocab": args.vocab, "batch": args.batch,
+                        "seq": args.seq}},
+        policy={"name": "backbone",
+                "kwargs": {"arch": args.arch, "reduced": True,
+                           "n_layers": args.layers,
+                           "d_model": args.d_model,
+                           "vocab_size": args.vocab,
+                           "d_ff": 4 * args.d_model}},
+        optimizer={"name": "adam", "kwargs": {"lr": 3e-4}},
+        algorithm="a2c",
+        runtime="stream",
+        intervals=args.intervals)
+    session = api.build(spec)
+
+    cfg = session.policy.config
     n_params = sum(int(np.prod(s.shape)) for s in
                    jax.tree.leaves(backbone.abstract_params(cfg)))
     print(f"policy: {args.arch} reduced -> {n_params / 1e6:.1f}M params")
 
-    params = backbone.init_params(cfg, jax.random.key(0))
-    opt = adam(3e-4)
-    dg = delayed_grad.init(params, opt)
-    step = jax.jit(learner.make_train_step(cfg, opt), donate_argnums=(0,))
+    def behavior_accuracy(state) -> float:
+        """Next-token accuracy of the behavior policy (theta_{j-1}, the
+        capsule's params_prev) on the batch the stream serves next."""
+        probe = envs.get_env("token_stream", vocab=args.vocab,
+                             batch=args.batch, seq=args.seq).skip(
+            1 + int(state.interval)).next_batch()
+        h, _, _ = backbone.forward(state.algo.params_prev, cfg,
+                                   probe["tokens"])
+        logits, _ = backbone.logits_and_value(state.algo.params_prev,
+                                              cfg, h)
+        return float((jnp.argmax(logits, -1) == probe["actions"]).mean())
 
-    stream = TokenStream(cfg.vocab_size, args.batch, args.seq)
     t0 = time.time()
     correct = []
-    for j in range(args.intervals):
-        batch = stream.next_batch()
-        # behavior policy = dg.params_prev: measure its next-token accuracy
-        if j % 20 == 0 or j == args.intervals - 1:
-            h, _, _ = backbone.forward(dg.params_prev, cfg,
-                                       batch["tokens"])
-            logits, _ = backbone.logits_and_value(dg.params_prev, cfg, h)
-            acc = float((jnp.argmax(logits, -1) ==
-                         batch["actions"]).mean())
-            correct.append(acc)
-            print(f"interval {j:4d} behavior-policy accuracy {acc:.3f} "
-                  f"({(time.time() - t0) / (j + 1):.2f}s/interval)",
-                  flush=True)
-        dg, stats = step(dg, batch)
+    state = session.state()
+    done = 0
+    while done < args.intervals:
+        acc = behavior_accuracy(state)
+        correct.append(acc)
+        print(f"interval {done:4d} behavior-policy accuracy {acc:.3f} "
+              f"({(time.time() - t0) / max(done, 1):.2f}s/interval)",
+              flush=True)
+        chunk = min(20, args.intervals - done)
+        session.run_from(state, chunk)
+        state = session.state()
+        done += chunk
+    correct.append(behavior_accuracy(state))
     print(f"accuracy: {correct[0]:.3f} -> {correct[-1]:.3f} "
           f"(reward = correct continuations under the token MDP)")
 

@@ -1,29 +1,33 @@
-"""Quickstart: HTS-RL in ~40 lines.
+"""Quickstart: HTS-RL in ~30 lines, through the declarative surface.
 
-Trains the paper's A2C (HTS-RL-scheduled: concurrent rollout+learning,
-one-step delayed gradient, deterministic executor seeding) on the Catch
-environment through the runtime registry, then verifies the paper's
-determinism claim by re-running. Swap ``--runtime`` for any registered
-scheduler — same algorithm, same data, different concurrency model.
+One ``ExperimentSpec`` names the whole experiment — env x policy x
+optimizer x algorithm x runtime x HTSConfig knobs, each a registry
+name — and ``api.build`` resolves it into a running Session. Trains the
+paper's A2C (HTS-RL-scheduled: concurrent rollout+learning, one-step
+delayed gradient, deterministic executor seeding) on the Catch
+environment, then verifies the paper's determinism claim by rebuilding
+the SAME spec from its canonical JSON and re-running. Swap ``--runtime``
+for any registered scheduler — same spec, same data, different
+concurrency model.
 
     PYTHONPATH=src python examples/quickstart.py [--runtime mesh]
+
+The committed spec file examples/specs/quickstart.json is this exact
+experiment; ``python -m repro.launch.run --spec`` runs it without this
+script.
 """
 import argparse
 
-import numpy as np
 import jax
 
-from repro.core import engine
-from repro.core.engine import HTSConfig
-from repro.envs import catch
-from repro.models.cnn_policy import apply_mlp_policy, init_mlp_policy
-from repro.optim import rmsprop
+from repro import api
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--runtime", default="mesh",
-                    choices=engine.runtime_names())
+                    choices=[n for n in api.runtime_names()
+                             if n != "stream"])
     ap.add_argument("--intervals", type=int, default=400)
     ap.add_argument("--staleness", type=int, default=1,
                     help="staleness bound K for the HTS-family runtimes "
@@ -31,18 +35,17 @@ def main():
                          "the paper's double buffer)")
     args = ap.parse_args()
 
-    env1 = catch.make()
-    cfg = HTSConfig(alpha=8, n_envs=16, seed=0, staleness=args.staleness)
+    spec = api.ExperimentSpec(
+        env="catch",
+        policy="mlp",
+        optimizer={"name": "rmsprop", "kwargs": {"lr": 7e-4, "eps": 1e-5}},
+        algorithm="a2c",
+        runtime=args.runtime,
+        hts={"alpha": 8, "n_envs": 16, "seed": 0,
+             "staleness": args.staleness},
+        intervals=args.intervals)
 
-    def policy(params, obs):
-        return apply_mlp_policy(params, obs.reshape(obs.shape[0], -1))
-
-    params = init_mlp_policy(jax.random.key(0),
-                             int(np.prod(env1.obs_shape)), env1.n_actions)
-    opt = rmsprop(7e-4, eps=1e-5)
-
-    out = engine.make_runtime(args.runtime, env1, policy, params, opt,
-                              cfg).run(args.intervals)
+    out = api.build(spec).run()
     r = out.rewards.reshape(args.intervals, -1)
     print(f"[{args.runtime}] {out.steps} steps in {out.wall_time:.1f}s "
           f"({out.sps:.0f} SPS incl. compile)")
@@ -51,13 +54,15 @@ def main():
     for i in range(0, args.intervals, q):
         print(f"  intervals {i:3d}-{i + q - 1:3d}: {r[i:i + q].mean():+.4f}")
 
-    out2 = engine.make_runtime(args.runtime, env1, policy, params, opt,
-                               cfg).run(args.intervals)
+    # determinism, end to end: the spec's canonical JSON rebuilds the
+    # experiment bit-identically
+    out2 = api.build(api.loads(api.dumps(spec))).run()
     identical = all(
         bool((a == b).all())
         for a, b in zip(jax.tree.leaves(out.params),
                         jax.tree.leaves(out2.params)))
-    print(f"full determinism (bit-identical rerun): {identical}")
+    print(f"full determinism (bit-identical rerun from the spec JSON): "
+          f"{identical}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,27 @@
+"""repro.api — the declarative experiment surface.
+
+One ``ExperimentSpec`` (env x policy x optimizer x algorithm x runtime
+x HTSConfig knobs x checkpoint policy, every axis a registry name) and
+one verb:
+
+    from repro import api
+
+    spec = api.ExperimentSpec(env="catch", runtime="mesh",
+                              hts={"alpha": 8, "n_envs": 16})
+    session = api.build(spec)
+    out = session.run(400)                  # engine RunResult
+
+    api.save(spec, "spec.json")             # canonical JSON
+    session = api.build(api.load("spec.json"))   # bit-identical rebuild
+
+Every surface in the repo — examples/, benchmarks/, the unified CLI
+(``python -m repro.launch.run --spec spec.json``), the LLM launcher
+(repro.launch.train) and the checkpointing trainer — consumes this one
+API instead of hand-wiring env/policy/optimizer/runtime construction.
+See spec.py for serialization + validation, session.py for build and
+the Session surface.
+"""
+from repro.api.session import Session, build, runtime_names  # noqa: F401
+from repro.api.spec import (  # noqa: F401
+    CheckpointSpec, ComponentSpec, ExperimentSpec, diff_canonical,
+    dumps, from_dict, load, loads, save, workload_fingerprint)

@@ -1,0 +1,264 @@
+"""``build(spec) -> Session``: resolve every ExperimentSpec axis through
+its registry and wrap the constructed runtime in one driving surface.
+
+``build`` is where declarative turns concrete — and where validation
+lives: unknown registry names, ``staleness < 1``, a non-Env workload
+under an Env runtime, a vocab-mismatched token stream all fail HERE
+with the offending field named, not three layers down with a shape
+error (and never a silent default).
+
+``Session`` wraps the engine contract (``run``/``state``/``run_from``,
+core/engine.py) and adds:
+
+  * ``fit`` — checkpointed training through core/trainer.Trainer, using
+    the spec's CheckpointSpec;
+  * ``on_interval`` observers — a reporting-only streaming hook: every
+    observer receives one metrics dict per completed interval
+    (``{"interval": j, "rewards": (alpha, n_envs), "dones": ...}``,
+    plus any runtime extras such as the stream runtime's loss stats).
+    Runtimes with a live coordinator (host, stream) deliver metrics
+    mid-run; fused scan runtimes deliver them from the RunResult's
+    metric streams right after the program returns. Either way the
+    observer sees the SAME sequence — and the training computation is
+    untouched (the goldens of tests/test_goldens.py do not move).
+
+Live objects that cannot ride in a JSON spec (a ``jax.sharding.Mesh``,
+a custom ``HostConfig``) are passed as ``build(spec, mesh=...)``
+overrides: they reach the runtime constructor verbatim, after —
+and taking precedence over — the spec's own runtime kwargs.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+
+from repro import algorithms, envs, models, optim
+from repro.api import spec as spec_mod
+from repro.api.spec import ExperimentSpec
+from repro.core import engine
+from repro.core.engine import HTSConfig, RunResult, TrainState
+from repro.envs.interfaces import Env
+
+# runtimes constructed outside the engine registry (different workload
+# contract: a TokenStream, not an Env — see core/stream_runtime.py)
+_STREAM_RUNTIME = "stream"
+
+
+def runtime_names() -> list:
+    return sorted(set(engine.runtime_names()) | {_STREAM_RUNTIME})
+
+
+def _decode_steptime(value, where: str):
+    """JSON -> StepTimeModel for HostConfig duration fields; floats pass
+    through (constant durations)."""
+    if isinstance(value, dict):
+        from repro.envs.steptime import StepTimeModel
+        unknown = set(value) - {"shape", "rate", "base"}
+        if unknown:
+            raise ValueError(
+                f"unknown StepTimeModel field(s) {sorted(unknown)} in "
+                f"{where}; known: ['shape', 'rate', 'base']")
+        return StepTimeModel(**value)
+    return value
+
+
+def _decode_runtime_kwargs(name: str, kwargs: Dict[str, Any]) -> dict:
+    """Rehydrate the JSON-able runtime kwargs a spec carries into the
+    config objects the runtime constructors take (HostConfig /
+    AsyncConfig / StepTimeModel)."""
+    out = dict(kwargs)
+    if name == "host":
+        host = out.get("host")
+        if isinstance(host, dict):
+            from repro.core.host_runtime import HostConfig
+            host = dict(host)
+            for key in ("step_time", "learner_time"):
+                if key in host:
+                    host[key] = _decode_steptime(host[key],
+                                                 f"runtime.kwargs.host.{key}")
+            try:
+                out["host"] = HostConfig(**host)
+            except TypeError as e:
+                raise ValueError(f"bad host runtime kwargs: {e}") from None
+    elif name == "async":
+        acfg = out.get("acfg")
+        if isinstance(acfg, dict):
+            from repro.core.baselines import AsyncConfig
+            try:
+                out["acfg"] = AsyncConfig(**acfg)
+            except TypeError as e:
+                raise ValueError(f"bad async runtime kwargs: {e}") from None
+    return out
+
+
+def build(spec: ExperimentSpec, **runtime_overrides) -> "Session":
+    """Construct the experiment a spec describes. ``runtime_overrides``
+    are merged over the spec's runtime kwargs (for live objects — a
+    Mesh, a HostConfig — that cannot ride in JSON)."""
+    if not isinstance(spec, ExperimentSpec):
+        raise TypeError(
+            f"build takes an ExperimentSpec (got {type(spec).__name__}); "
+            f"parse JSON with repro.api.loads/load first")
+
+    # resolve every axis through its registry — unknown names raise
+    # KeyError listing what IS registered
+    rt_name = spec.runtime.name
+    if rt_name != _STREAM_RUNTIME:
+        try:
+            engine.get_runtime(rt_name)    # existence check
+        except KeyError:
+            raise KeyError(f"unknown runtime {rt_name!r}; "
+                           f"registered: {runtime_names()}") from None
+    algorithms.get_algorithm(spec.algorithm)
+    env_factory = envs.get_env_factory(spec.env.name)
+    try:
+        env = env_factory(**spec.env.kwargs)
+    except TypeError as e:
+        raise ValueError(
+            f"bad env kwargs for {spec.env.name!r}: {e}") from None
+    # workload/runtime pairing — validated BEFORE the policy is sized to
+    # the env, so the error names the actual mismatch
+    from repro.data.pipeline import TokenStream
+    if rt_name == _STREAM_RUNTIME:
+        if not isinstance(env, TokenStream):
+            raise ValueError(
+                f"the 'stream' runtime consumes a TokenStream workload "
+                f"(env 'token_stream'), got env {spec.env.name!r} -> "
+                f"{type(env).__name__}")
+    elif not isinstance(env, Env):
+        raise ValueError(
+            f"runtime {rt_name!r} consumes an Env workload, got env "
+            f"{spec.env.name!r} -> {type(env).__name__} (the "
+            f"'token_stream' source pairs only with runtime 'stream')")
+    try:
+        policy = models.get_policy(spec.policy.name, env,
+                                   **spec.policy.kwargs)
+    except TypeError as e:
+        raise ValueError(
+            f"bad policy kwargs for {spec.policy.name!r}: {e}") from None
+    except AttributeError as e:
+        raise ValueError(
+            f"policy {spec.policy.name!r} could not be sized to env "
+            f"{spec.env.name!r}: {e} (the token stream pairs with "
+            f"config-backed policies like 'backbone')") from None
+    try:
+        opt = optim.get_optimizer(spec.optimizer.name,
+                                  **spec.optimizer.kwargs)
+    except TypeError as e:
+        raise ValueError(
+            f"bad optimizer kwargs for {spec.optimizer.name!r}: "
+            f"{e}") from None
+    cfg = spec.hts_config()
+    params = policy.init(jax.random.key(spec.params_seed))
+
+    rkw = _decode_runtime_kwargs(rt_name, spec.runtime.kwargs)
+    rkw.update(runtime_overrides)
+
+    if rt_name == _STREAM_RUNTIME:
+        from repro.core.stream_runtime import StreamRuntime
+        if policy.config is None:
+            raise ValueError(
+                f"the 'stream' runtime needs a config-backed policy "
+                f"(e.g. 'backbone'), got {spec.policy.name!r}")
+        if env.vocab != policy.config.vocab_size:
+            raise ValueError(
+                f"token stream vocab={env.vocab} != model "
+                f"vocab_size={policy.config.vocab_size}; make "
+                f"env.kwargs.vocab match the policy config")
+        runtime = StreamRuntime(
+            lambda: env_factory(**spec.env.kwargs), params, opt, cfg,
+            model_config=policy.config, **rkw)
+    else:
+        if policy.apply is None:
+            raise ValueError(
+                f"policy {spec.policy.name!r} has no per-step apply "
+                f"function; it pairs only with the 'stream' runtime")
+        runtime = engine.make_runtime(rt_name, env, policy.apply, params,
+                                      opt, cfg, **rkw)
+    return Session(spec, runtime, env, policy, params, opt, cfg)
+
+
+class Session:
+    """One constructed experiment: the spec, its resolved pieces, and
+    the engine-contract driving surface (plus observers and ``fit``)."""
+
+    def __init__(self, spec: ExperimentSpec, runtime, env, policy,
+                 params, opt, cfg: HTSConfig):
+        self.spec = spec
+        self.runtime = runtime
+        self.env = env
+        self.policy = policy
+        self.params = params      # initial parameters (policy.init)
+        self.opt = opt
+        self.cfg = cfg
+        self._observers: List[Callable[[dict], None]] = []
+
+    # ------------------------------------------------------- observers
+    def on_interval(self, fn: Callable[[dict], None]):
+        """Register a reporting-only per-interval metrics observer.
+        Usable as a decorator; returns ``fn``."""
+        self._observers.append(fn)
+        return fn
+
+    def remove_observer(self, fn) -> None:
+        self._observers.remove(fn)
+
+    def _emit(self, interval: int, metrics: dict) -> None:
+        payload = {"interval": int(interval), **metrics}
+        for fn in self._observers:
+            fn(payload)
+
+    def _dispatch_from_result(self, out: RunResult, start: int) -> None:
+        """Post-hoc observer dispatch from the RunResult's metric
+        streams (fused runtimes have no per-interval coordinator)."""
+        for i, metrics in out.interval_metrics():
+            self._emit(start + i, metrics)
+
+    def _run_observed(self, fn: Callable[[], RunResult],
+                      start: int) -> RunResult:
+        live = self._observers and hasattr(self.runtime, "on_interval")
+        if live:
+            self.runtime.on_interval = self._emit
+        try:
+            out = fn()
+        finally:
+            if live:
+                self.runtime.on_interval = None
+        if self._observers and not live:
+            self._dispatch_from_result(out, start)
+        return out
+
+    # -------------------------------------------------- engine contract
+    def run(self, n_intervals: Optional[int] = None) -> RunResult:
+        n = self.spec.intervals if n_intervals is None else n_intervals
+        return self._run_observed(lambda: self.runtime.run(n), start=0)
+
+    def state(self) -> TrainState:
+        return self.runtime.state()
+
+    def run_from(self, state: TrainState, n_intervals: int,
+                 finalize: bool = True) -> RunResult:
+        return self._run_observed(
+            lambda: self.runtime.run_from(state, n_intervals, finalize),
+            start=int(state.interval))
+
+    # ------------------------------------------------------------- fit
+    def fit(self, n_intervals: Optional[int] = None,
+            resume: bool = False, on_segment=None):
+        """Checkpointed training per the spec's CheckpointSpec
+        (core/trainer.Trainer). Observers receive every interval's
+        metrics, across segments and resumes."""
+        from repro.core.trainer import Trainer
+        ck = self.spec.checkpoint
+        trainer = Trainer(self.runtime, checkpoint_dir=ck.dir,
+                          ckpt_every=ck.every, keep=ck.keep,
+                          on_segment=on_segment,
+                          on_interval=(self._emit if self._observers
+                                       else None))
+        n = self.spec.intervals if n_intervals is None else n_intervals
+        return trainer.fit(n, resume=resume)
+
+    # ------------------------------------------------------------ misc
+    def describe(self) -> str:
+        return spec_mod.dumps(self.spec, indent=2)

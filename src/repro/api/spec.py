@@ -1,0 +1,251 @@
+"""ExperimentSpec: the declarative description of one experiment.
+
+One typed, JSON-round-trippable value names everything a run needs —
+environment x policy x optimizer x algorithm x runtime x HTSConfig
+knobs x checkpoint policy — each axis resolved through its registry
+(repro.envs / repro.models / repro.optim / repro.algorithms /
+repro.core.engine) at ``repro.api.build`` time:
+
+    spec = ExperimentSpec(env="catch", policy="mlp", runtime="mesh",
+                          hts={"alpha": 8, "n_envs": 16})
+    session = api.build(spec)
+    out = session.run(400)
+
+``dumps``/``loads`` round-trip the spec through its *canonical* JSON
+form (every field explicit, keys sorted): ``build(loads(dumps(spec)))``
+constructs bit-identically to ``build(spec)`` (tests/test_api.py).
+That canonical form is also the benchmark suite's workload fingerprint
+(``workload_fingerprint``): two SPS records are comparable exactly when
+their spec JSONs match (benchmarks/check_sps.py prints the field-level
+diff when they don't).
+
+Validation is eager and loud: unknown field names, ``staleness < 1``,
+``alpha < 1`` and friends raise at construction/``loads`` time with the
+offending field named — never a silent default. Registry-name existence
+(is there an env called "catch"?) is checked at ``build`` time, where
+the registries are consulted anyway.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Union
+
+from repro.core.engine import HTSConfig
+
+# HTSConfig knobs a spec may set. ``algorithm`` is excluded: it is a
+# first-class spec axis (``ExperimentSpec.algorithm``), and allowing it
+# in both places would invite the two disagreeing silently.
+_HTS_FIELDS = tuple(f for f in HTSConfig._fields if f != "algorithm")
+
+
+def _jsonable(value, where: str):
+    """Reject values that would not survive a JSON round-trip (function
+    objects, device arrays, Mesh handles...) with the field named."""
+    try:
+        return json.loads(json.dumps(value))
+    except (TypeError, ValueError):
+        raise TypeError(
+            f"{where} is not JSON-serializable: {value!r}; pass live "
+            f"objects (meshes, callables) as build(spec, ...) overrides "
+            f"instead of putting them in the spec") from None
+
+
+@dataclass(frozen=True)
+class ComponentSpec:
+    """A registry name plus construction kwargs."""
+    name: str
+    kwargs: Dict[str, Any] = field(default_factory=dict)
+
+    def canonical(self) -> dict:
+        return {"name": self.name,
+                "kwargs": _jsonable(dict(self.kwargs), self.name)}
+
+    @staticmethod
+    def of(value: Union[str, dict, "ComponentSpec"],
+           where: str) -> "ComponentSpec":
+        if isinstance(value, ComponentSpec):
+            return value
+        if isinstance(value, str):
+            return ComponentSpec(value)
+        if isinstance(value, dict):
+            unknown = set(value) - {"name", "kwargs"}
+            if unknown:
+                raise ValueError(
+                    f"unknown {where} field(s) {sorted(unknown)}; a "
+                    f"component is {{'name': ..., 'kwargs': {{...}}}}")
+            if "name" not in value:
+                raise ValueError(f"{where} needs a 'name'")
+            return ComponentSpec(value["name"],
+                                 dict(value.get("kwargs", {})))
+        raise TypeError(f"{where} must be a name, dict, or "
+                        f"ComponentSpec, got {type(value).__name__}")
+
+
+@dataclass(frozen=True)
+class CheckpointSpec:
+    """Checkpoint/eval policy for ``Session.fit`` (core/trainer.py)."""
+    dir: Optional[str] = None
+    every: int = 0               # intervals per segment (0: one segment)
+    keep: int = 3                # most-recent checkpoints retained
+
+    def canonical(self) -> dict:
+        return {"dir": self.dir, "every": int(self.every),
+                "keep": int(self.keep)}
+
+    @staticmethod
+    def of(value) -> "CheckpointSpec":
+        if isinstance(value, CheckpointSpec):
+            return value
+        if value is None:
+            return CheckpointSpec()
+        if isinstance(value, dict):
+            unknown = set(value) - {"dir", "every", "keep"}
+            if unknown:
+                raise ValueError(
+                    f"unknown checkpoint field(s) {sorted(unknown)}; "
+                    f"known: ['dir', 'every', 'keep']")
+            return CheckpointSpec(**value)
+        raise TypeError(f"checkpoint must be a dict or CheckpointSpec, "
+                        f"got {type(value).__name__}")
+
+
+@dataclass(frozen=True)
+class ExperimentSpec:
+    env: ComponentSpec = field(default_factory=lambda: ComponentSpec("catch"))
+    policy: ComponentSpec = field(default_factory=lambda: ComponentSpec("mlp"))
+    optimizer: ComponentSpec = field(
+        default_factory=lambda: ComponentSpec("rmsprop", {"lr": 7e-4}))
+    algorithm: str = "a2c"
+    runtime: ComponentSpec = field(default_factory=lambda: ComponentSpec("mesh"))
+    hts: Dict[str, Any] = field(default_factory=dict)  # HTSConfig knobs
+    params_seed: int = 0         # PRNG key for policy.init
+    intervals: int = 100         # default run length (Session.run())
+    checkpoint: CheckpointSpec = field(default_factory=CheckpointSpec)
+
+    def __post_init__(self):
+        object.__setattr__(self, "env", ComponentSpec.of(self.env, "env"))
+        object.__setattr__(self, "policy",
+                           ComponentSpec.of(self.policy, "policy"))
+        object.__setattr__(self, "optimizer",
+                           ComponentSpec.of(self.optimizer, "optimizer"))
+        object.__setattr__(self, "runtime",
+                           ComponentSpec.of(self.runtime, "runtime"))
+        object.__setattr__(self, "hts", dict(self.hts))
+        object.__setattr__(self, "checkpoint",
+                           CheckpointSpec.of(self.checkpoint))
+        self._validate()
+
+    def _validate(self) -> None:
+        unknown = set(self.hts) - set(_HTS_FIELDS)
+        if unknown:
+            hint = (" (set spec.algorithm, not hts['algorithm'])"
+                    if "algorithm" in unknown else "")
+            raise ValueError(
+                f"unknown HTSConfig knob(s) {sorted(unknown)}{hint}; "
+                f"known: {sorted(_HTS_FIELDS)}")
+        cfg = self.hts_config()
+        if cfg.alpha < 1:
+            raise ValueError(f"alpha must be >= 1, got {cfg.alpha}")
+        if cfg.n_envs < 1:
+            raise ValueError(f"n_envs must be >= 1, got {cfg.n_envs}")
+        if cfg.staleness < 1:
+            raise ValueError(
+                f"staleness must be >= 1, got {cfg.staleness}")
+        if self.intervals < 0:
+            raise ValueError(
+                f"intervals must be >= 0, got {self.intervals}")
+        if self.checkpoint.every < 0 or self.checkpoint.keep < 0:
+            raise ValueError(
+                f"checkpoint.every/keep must be >= 0, got "
+                f"{self.checkpoint.every}/{self.checkpoint.keep}")
+
+    # ------------------------------------------------------ serialization
+    def hts_config(self) -> HTSConfig:
+        return HTSConfig(algorithm=self.algorithm, **self.hts)
+
+    def canonical(self) -> dict:
+        """The fully-explicit JSON form: every field present (including
+        defaults), component kwargs verified JSON-round-trippable. Equal
+        specs have equal canonical dicts and equal ``dumps`` strings."""
+        return {
+            "env": self.env.canonical(),
+            "policy": self.policy.canonical(),
+            "optimizer": self.optimizer.canonical(),
+            "algorithm": self.algorithm,
+            "runtime": self.runtime.canonical(),
+            "hts": _jsonable(dict(self.hts), "hts"),
+            "params_seed": int(self.params_seed),
+            "intervals": int(self.intervals),
+            "checkpoint": self.checkpoint.canonical(),
+        }
+
+    def replace(self, **changes) -> "ExperimentSpec":
+        return dataclasses.replace(self, **changes)
+
+
+_SPEC_FIELDS = tuple(f.name for f in dataclasses.fields(ExperimentSpec))
+
+
+def from_dict(d: dict) -> ExperimentSpec:
+    if not isinstance(d, dict):
+        raise TypeError(f"spec must be a JSON object, got "
+                        f"{type(d).__name__}")
+    unknown = set(d) - set(_SPEC_FIELDS)
+    if unknown:
+        raise ValueError(f"unknown spec field(s) {sorted(unknown)}; "
+                         f"known: {sorted(_SPEC_FIELDS)}")
+    return ExperimentSpec(**d)
+
+
+def dumps(spec: ExperimentSpec, indent: Optional[int] = None) -> str:
+    """Canonical JSON serialization (sorted keys, every field explicit).
+    ``loads(dumps(spec))`` == ``spec``."""
+    return json.dumps(spec.canonical(), sort_keys=True, indent=indent)
+
+
+def loads(s: str) -> ExperimentSpec:
+    return from_dict(json.loads(s))
+
+
+def load(path: str) -> ExperimentSpec:
+    with open(path) as f:
+        return from_dict(json.load(f))
+
+
+def save(spec: ExperimentSpec, path: str) -> None:
+    with open(path, "w") as f:
+        f.write(dumps(spec, indent=2) + "\n")
+
+
+def workload_fingerprint(spec: ExperimentSpec) -> dict:
+    """Everything about the spec that changes what a throughput or
+    learning-curve number *means* — the canonical form minus run length
+    and checkpoint policy (recorded separately by the bench harness).
+    benchmarks/check_sps.py compares records by this dict and prints a
+    field-level diff on mismatch."""
+    fp = spec.canonical()
+    fp.pop("intervals")
+    fp.pop("checkpoint")
+    return fp
+
+
+def diff_canonical(a: dict, b: dict, prefix: str = "") -> list:
+    """Field-level differences between two canonical spec dicts, as
+    ``path: a_value != b_value`` strings (recursing into nested
+    objects) — what check_sps prints instead of an opaque
+    "fingerprint differs"."""
+    out = []
+    if isinstance(a, dict) and isinstance(b, dict):
+        for key in sorted(set(a) | set(b)):
+            path = f"{prefix}.{key}" if prefix else key
+            if key not in a:
+                out.append(f"{path}: <absent> != {b[key]!r}")
+            elif key not in b:
+                out.append(f"{path}: {a[key]!r} != <absent>")
+            else:
+                out.extend(diff_canonical(a[key], b[key], path))
+    elif a != b:
+        out.append(f"{prefix or '<root>'}: {a!r} != {b!r}")
+    return out

@@ -108,8 +108,14 @@ class RunResult:
 
     ``rewards``/``dones`` are (n_intervals, alpha, n_envs) numpy arrays;
     ``state`` is the runtime's full carry (a DelayedGradState for the HTS
-    family). Mapping-style access (``out["params"]``, ``out["dg"]``) is
-    kept for existing benchmarks/tests.
+    family). ``metrics`` (optional) carries extra per-interval streams —
+    leading axis n_intervals — for runtimes whose workload has no
+    reward/done semantics (the stream runtime's loss stats); the
+    Session observer hook (repro.api) forwards them per interval.
+
+    Mapping-style access (``out["params"]``, ``out["dg"]``) is
+    DEPRECATED — use the attributes (``out.params``; ``out["dg"]`` is
+    ``out.state``).
     """
     params: Any
     state: Any
@@ -118,11 +124,28 @@ class RunResult:
     sps: float
     rewards: np.ndarray
     dones: np.ndarray
+    metrics: Any = None
 
     def __getitem__(self, key):
-        if key == "dg":
-            return self.state
-        return getattr(self, key)
+        import warnings
+        attr = "state" if key == "dg" else key
+        warnings.warn(
+            f"RunResult[{key!r}] mapping-style access is deprecated; "
+            f"use the RunResult.{attr} attribute",
+            DeprecationWarning, stacklevel=2)
+        return getattr(self, attr)
+
+    def interval_metrics(self):
+        """Yield ``(i, metrics)`` per interval: the reward/done slices
+        plus any extra ``metrics`` streams, sliced on their leading
+        interval axis — the one payload shape every observer consumer
+        (repro.api.Session, core/trainer.Trainer) dispatches."""
+        extras = self.metrics or {}
+        for i in range(self.rewards.shape[0]):
+            m = {"rewards": self.rewards[i], "dones": self.dones[i]}
+            for key, arr in extras.items():
+                m[key] = arr[i]
+            yield i, m
 
 
 @runtime_checkable

@@ -132,6 +132,11 @@ class HostHTSRL:
         self.dg = None    # built lazily: run() always starts via init()
         self.profile: Dict[str, float] = {}
         self._prof_lock = threading.Lock()
+        # reporting-only live observer: called by the coordinator as
+        # ``on_interval(j, {"rewards": (alpha, n_envs), "dones": ...})``
+        # the moment interval j's slab is complete (repro.api.Session
+        # installs it). Never touches the training computation.
+        self.on_interval: Optional[Callable[[int, dict], None]] = None
 
     # ------------------------------------------------------------- build
     def _build(self) -> None:
@@ -667,6 +672,11 @@ class HostHTSRL:
                 self.rewards_log.append(slab["rewards"].copy())
                 self.dones_log.append(slab["dones"].copy())
                 self.sps_steps += cfg.alpha * cfg.n_envs
+                if self.on_interval is not None:
+                    # the copies above decouple the observer from slab
+                    # reuse; rollout j+1 proceeds while it runs
+                    self.on_interval(j, {"rewards": self.rewards_log[-1],
+                                         "dones": self.dones_log[-1]})
             self.j += n_intervals
         except threading.BrokenBarrierError:
             self._check_pool()

@@ -75,17 +75,24 @@ class Trainer:
       RunResult.params are mid-stream (one reporting update behind).
     * ``keep``         — how many most-recent checkpoints to retain
       (0 = keep all).
+    * ``on_interval``  — optional reporting-only metrics observer,
+      ``callback(interval, {"rewards": (alpha, n_envs), "dones": ...})``
+      called once per completed interval (global index, so a resumed fit
+      continues the numbering), after each segment returns — the
+      streaming hook repro.api.Session threads through here.
     """
 
     def __init__(self, runtime: Runtime, checkpoint_dir: Optional[str] = None,
                  ckpt_every: int = 0,
                  on_segment: Optional[Callable[[int, Any], None]] = None,
-                 keep: int = 3):
+                 keep: int = 3,
+                 on_interval: Optional[Callable[[int, dict], None]] = None):
         self.runtime = runtime
         self.checkpoint_dir = checkpoint_dir
         self.ckpt_every = ckpt_every
         self.on_segment = on_segment
         self.keep = keep
+        self.on_interval = on_interval
 
     # ----------------------------------------------------------- ckpt io
     def _ckpt_path(self, intervals: int) -> str:
@@ -185,6 +192,9 @@ class Trainer:
             # learner pass; intermediate segments just stream metrics
             out = self.runtime.run_from(
                 state, chunk, finalize=(done + chunk >= n_intervals))
+            if self.on_interval is not None:
+                for i, metrics in out.interval_metrics():
+                    self.on_interval(done + i, metrics)
             done += chunk
             state = self.runtime.state()
             stream.extend(out.rewards, out.dones)

@@ -5,9 +5,17 @@
 
 On this container it runs the reduced config on 1 CPU device; on a real
 cluster the same code path pjit's over make_production_mesh() (pass
---mesh pod, requires the devices to exist). The data source is the
-deterministic TokenStream; swap in traj_to_batch-fed rollouts for a live
-environment (see examples/llm_policy_hts.py for the full HTS-RL loop).
+--mesh pod, requires the devices to exist).
+
+Since the api redesign this launcher is a thin shell over the
+declarative surface: the flags become an ``ExperimentSpec`` (env
+``token_stream`` x policy ``backbone`` x the chosen optimizer/algorithm
+x runtime ``stream``) and the loop is the engine-contract stream
+runtime (core/stream_runtime.py) — the same ``learner.make_train_step``
+pjit over the same stream batches, so losses are step-for-step
+identical with the pre-api launcher, and checkpoints written by either
+resume bit-exactly under the other (the checkpoint format — the
+DelayedGradState plus arch/step metadata — is unchanged).
 """
 from __future__ import annotations
 
@@ -16,18 +24,11 @@ import time
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
-from repro import algorithms
+from repro import api
 from repro.checkpoint import io as ckpt_io
-from repro.configs.base import get_config
-from repro.core import delayed_grad, learner
-from repro.data.pipeline import TokenStream
-from repro.launch.mesh import (as_shardings, make_host_mesh,
-                               make_production_mesh, use_mesh)
-from repro.models import backbone
-from repro.optim import adam, rmsprop
-from repro.sharding import rules
+from repro.core import delayed_grad
+from repro.core.engine import TrainState
 
 
 def main():
@@ -61,24 +62,23 @@ def main():
     if args.resume and not args.ckpt_dir:
         ap.error("--resume requires --checkpoint-dir")
 
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    opt = adam(args.lr) if args.opt == "adam" else rmsprop(args.lr)
-
-    if args.mesh == "host":
-        mesh = make_host_mesh()
-    else:
-        mesh = make_production_mesh(multi_pod=(args.mesh == "multipod"))
-
-    params = backbone.init_params(cfg, jax.random.key(0))
-    dg = delayed_grad.init(params, opt)
-    # resolve through the registry so launcher strings and runtime
-    # algorithms stay one namespace
-    alg = algorithms.get_algorithm(args.algorithm)
-    step_fn = learner.make_train_step(cfg, opt, alg.name)
+    # the flags, as a declarative spec (api.save-able; the same
+    # experiment runs under `python -m repro.launch.run --spec ...`).
+    # The stream's vocab must match the (possibly reduced) model config.
+    spec = api.ExperimentSpec(
+        env={"name": "token_stream",
+             "kwargs": {"vocab": _vocab_of(args), "batch": args.batch,
+                        "seq": args.seq}},
+        policy={"name": "backbone",
+                "kwargs": {"arch": args.arch, "reduced": args.reduced}},
+        optimizer={"name": args.opt, "kwargs": {"lr": args.lr}},
+        algorithm=args.algorithm,
+        runtime={"name": "stream", "kwargs": {"mesh": args.mesh}},
+        intervals=args.steps)
+    session = api.build(spec)
 
     start_step = 0
+    state = None
     if args.resume:
         path = ckpt_io.latest(args.ckpt_dir)
         if path is not None:
@@ -95,54 +95,63 @@ def main():
                     raise SystemExit(
                         f"checkpoint {path} has {key}={meta[key]!r}, "
                         f"but this run was launched with {have!r}")
-            dg = ckpt_io.restore(path, jax.eval_shape(lambda: dg))
+            dg = ckpt_io.restore(path, jax.eval_shape(
+                lambda: delayed_grad.init(session.params, session.opt)))
             start_step = int(meta.get("step", meta.get("steps", 0)))
+            state = TrainState(algo=dg, env_state={}, obs={}, buffer={},
+                               interval=jnp.asarray(start_step, jnp.int32))
             print(f"resuming from {path} at step {start_step}", flush=True)
+    if state is None:
+        state = session.state()
 
-    pspecs = rules.param_pspecs(jax.eval_shape(lambda: params), mesh)
-    dg_specs = rules.dg_state_pspecs(
-        jax.eval_shape(lambda: dg), pspecs, mesh)
-    stream = TokenStream(cfg.vocab_size, args.batch, args.seq)
-    sample = stream.next_batch()
-    # loop iteration i consumes stream batch i+1 (the probe above took
-    # batch 0): fast-forward so a resumed run continues the exact stream
-    stream.skip(start_step)
-    b_specs = rules.batch_specs(jax.eval_shape(lambda: sample), mesh)
-    out_specs = (dg_specs,
-                 jax.tree.map(lambda _: P(),
-                              jax.eval_shape(step_fn, dg, sample)[1]))
+    t0 = time.time()
 
-    with use_mesh(mesh):
-        jstep = jax.jit(
-            step_fn,
-            in_shardings=as_shardings(mesh, (dg_specs, b_specs)),
-            out_shardings=as_shardings(mesh, out_specs),
-            donate_argnums=(0,))
-        def save_ckpt(step: int) -> None:
-            ckpt_io.save(f"{args.ckpt_dir}/step_{step:08d}", dg,
-                         {"arch": args.arch, "step": step,
-                          "algorithm": args.algorithm, "opt": args.opt,
-                          "batch": args.batch, "seq": args.seq})
-            print(f"checkpoint -> {args.ckpt_dir}/step_{step:08d}",
+    @session.on_interval
+    def _log(m):
+        i = m["interval"]
+        if i % args.log_every == 0 or i == args.steps - 1:
+            done = i - start_step + 1
+            print(f"step {i:4d} loss={m['loss']:.4f} "
+                  f"pg={m['pg']:.4f} "
+                  f"ent={m['entropy']:.4f} "
+                  f"({(time.time() - t0) / done:.3f}s/step)",
                   flush=True)
 
-        t0 = time.time()
-        for i in range(start_step, args.steps):
-            batch = stream.next_batch()
-            dg, stats = jstep(dg, batch)
-            if i % args.log_every == 0 or i == args.steps - 1:
-                done = i - start_step + 1
-                print(f"step {i:4d} loss={float(stats['loss']):.4f} "
-                      f"pg={float(stats['pg']):.4f} "
-                      f"ent={float(stats['entropy']):.4f} "
-                      f"({(time.time() - t0) / done:.3f}s/step)",
-                      flush=True)
-            if (args.ckpt_dir and args.ckpt_every
-                    and (i + 1) % args.ckpt_every == 0
-                    and i + 1 < args.steps):
-                save_ckpt(i + 1)
-        if args.ckpt_dir and args.steps > start_step:
-            save_ckpt(args.steps)
+    def save_ckpt(state: TrainState, step: int) -> None:
+        # the pre-api checkpoint format, unchanged: the DelayedGradState
+        # alone (launch-specific metadata carries the step), so old and
+        # new launchers resume each other's checkpoints
+        ckpt_io.save(f"{args.ckpt_dir}/step_{step:08d}", state.algo,
+                     {"arch": args.arch, "step": step,
+                      "algorithm": args.algorithm, "opt": args.opt,
+                      "batch": args.batch, "seq": args.seq})
+        print(f"checkpoint -> {args.ckpt_dir}/step_{step:08d}",
+              flush=True)
+
+    done = start_step
+    while done < args.steps:
+        # segment to the next global ckpt-every multiple (matching the
+        # pre-api launcher's checkpoint boundaries exactly)
+        if args.ckpt_dir and args.ckpt_every:
+            stop = min(((done // args.ckpt_every) + 1) * args.ckpt_every,
+                       args.steps)
+        else:
+            stop = args.steps
+        session.run_from(state, stop - done)
+        state = session.state()
+        done = stop
+        if args.ckpt_dir and args.ckpt_every and done < args.steps:
+            save_ckpt(state, done)
+    if args.ckpt_dir and args.steps > start_step:
+        save_ckpt(state, args.steps)
+
+
+def _vocab_of(args) -> int:
+    """The (possibly reduced) model config's vocab size — what the
+    token stream must emit."""
+    from repro.configs.base import get_config
+    cfg = get_config(args.arch)
+    return (cfg.reduced() if args.reduced else cfg).vocab_size
 
 
 if __name__ == "__main__":

@@ -1,0 +1,149 @@
+"""Policy registry — resolve a (init, apply) policy pair by name, sized
+to an environment, so experiment specs (repro.api.ExperimentSpec) can
+name their model instead of hand-wiring init/apply/wrapper plumbing.
+
+A ``Policy`` bundles:
+
+  * ``init(key) -> params``    — parameter construction (the key is the
+    spec's ``params_seed``; everything else — obs shape, action count —
+    was closed over from the env at ``get_policy`` time);
+  * ``apply(params, obs) -> (logits, value)`` — the function every
+    runtime's actor and learner call;
+  * ``config``                 — the backing model config when one
+    exists (``ModelConfig`` for the ``backbone`` entry, ``None`` for
+    the small policies); the ``stream`` runtime reads it.
+
+Built-ins:
+
+  mlp       obs-flattening 2-layer tanh MLP (the canonical copy of the
+            wrapper formerly duplicated across examples/benchmarks/
+            tests: obs of any rank is flattened to (B, -1) before the
+            MLP — the paper's "extracted map" vector policy)
+  cnn       the paper's conv trunk (configs.paper_cnn), kwargs override
+            CNNPolicyConfig fields (conv_sizes, conv_strides, hidden...)
+  token     embedding policy over an integer-token observation
+  backbone  any assigned LLM architecture (configs.base.get_config) as
+            the policy/value network; kwargs: arch, reduced, plus
+            ModelConfig field overrides (n_layers, d_model, ...)
+
+    from repro import models
+    pol = models.get_policy("mlp", env1)
+    params = pol.init(jax.random.key(0))
+    out = engine.make_runtime("mesh", env1, pol.apply, params, opt, cfg)
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+
+class Policy(NamedTuple):
+    name: str
+    init: Callable            # key -> params
+    apply: Optional[Callable]  # (params, obs) -> (logits (B,A), value (B,))
+    config: Any = None        # backing ModelConfig, when one exists
+
+
+_REGISTRY: Dict[str, Callable[..., Policy]] = {}
+
+
+def register_policy(name: str):
+    """Factory decorator over a ``(env, **kwargs) -> Policy`` callable."""
+    def deco(factory):
+        _REGISTRY[name] = factory
+        return factory
+    return deco
+
+
+def get_policy(name: str, env, **kwargs) -> Policy:
+    """Build a registered policy sized to ``env``:
+    ``get_policy("mlp", env1, hidden=128)``."""
+    _load_builtins()
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown policy {name!r}; "
+                       f"registered: {policy_names()}") from None
+    return factory(env, **kwargs)
+
+
+def policy_names():
+    _load_builtins()
+    return sorted(_REGISTRY)
+
+
+# ------------------------------------------------------------- built-ins
+_BUILTINS_LOADED = False
+
+
+def _load_builtins() -> None:
+    global _BUILTINS_LOADED
+    if _BUILTINS_LOADED:
+        return
+    _BUILTINS_LOADED = True
+
+    import numpy as np
+
+    @register_policy("mlp")
+    def _mlp(env, hidden: int = 128) -> Policy:
+        from repro.models.cnn_policy import (apply_mlp_policy,
+                                             init_mlp_policy)
+        obs_dim = int(np.prod(env.obs_shape))
+
+        def apply(params, obs):
+            # THE obs-flattening wrapper (single canonical copy): image
+            # or vector observations alike become (B, obs_dim)
+            return apply_mlp_policy(params, obs.reshape(obs.shape[0], -1))
+
+        return Policy(
+            "mlp",
+            lambda key: init_mlp_policy(key, obs_dim, env.n_actions,
+                                        hidden),
+            apply)
+
+    @register_policy("cnn")
+    def _cnn(env, **overrides) -> Policy:
+        import dataclasses
+
+        from repro.configs.paper_cnn import CNNPolicyConfig
+        from repro.models.cnn_policy import apply_cnn, init_cnn
+        # JSON round-trips deliver tuple fields as lists
+        overrides = {k: tuple(v) if isinstance(v, list) else v
+                     for k, v in overrides.items()}
+        ccfg = dataclasses.replace(
+            CNNPolicyConfig(obs_shape=env.obs_shape,
+                            n_actions=env.n_actions), **overrides)
+        return Policy(
+            "cnn",
+            lambda key: init_cnn(key, ccfg, env.n_actions, env.obs_shape),
+            lambda params, obs: apply_cnn(params, obs, ccfg),
+            config=ccfg)
+
+    @register_policy("token")
+    def _token(env, hidden: int = 128) -> Policy:
+        from repro.models.cnn_policy import (apply_token_policy,
+                                             init_token_policy)
+        return Policy(
+            "token",
+            lambda key: init_token_policy(key, env.n_actions, hidden),
+            apply_token_policy)
+
+    @register_policy("backbone")
+    def _backbone(env, arch: str = "starcoder2-3b", reduced: bool = False,
+                  **overrides) -> Policy:
+        import dataclasses
+
+        from repro.configs.base import get_config
+        from repro.models import backbone
+        cfg = get_config(arch)
+        if reduced:
+            cfg = cfg.reduced()
+        if overrides:
+            cfg = dataclasses.replace(cfg, **overrides)
+        # apply=None: the backbone is consumed by the LLM-scale learner
+        # (core/stream_runtime.py reads .config), not by the per-step
+        # actor interface of the small policies
+        return Policy(
+            "backbone",
+            lambda key: backbone.init_params(cfg, key),
+            None,
+            config=cfg)

@@ -1,0 +1,308 @@
+"""The declarative surface (repro.api): spec round-trip bit-exactness,
+build-time validation, the streaming observer hook, and the grep gate
+keeping examples/ on the api.
+
+The load-bearing claim: a spec that survives ``loads(dumps(spec))``
+builds and runs BIT-IDENTICALLY to the hand-wired construction it
+replaced — for every (host|mesh|sharded) x (a2c|ppo) cell — so moving a
+surface onto the api can never move a golden (tests/test_goldens.py
+holds the committed digests).
+"""
+import json
+import os
+import re
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import api, envs, models, optim
+from repro.core import engine
+from repro.core.engine import HTSConfig
+
+INTERVALS = 3
+RUNTIMES = ("host", "mesh", "sharded")
+ALGOS = ("a2c", "ppo")
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _bench_spec(runtime, algorithm="a2c"):
+    return api.ExperimentSpec(
+        env="catch", policy="mlp",
+        optimizer={"name": "rmsprop", "kwargs": {"lr": 7e-4, "eps": 1e-5}},
+        algorithm=algorithm, runtime=runtime,
+        hts={"alpha": 4, "n_envs": 4, "seed": 3}, intervals=INTERVALS)
+
+
+def _overrides(runtime):
+    if runtime == "sharded":
+        # 1-device mesh pin: bit-exactness must not depend on the
+        # machine's device count (CI runs a 2-forced-device leg)
+        from jax.sharding import Mesh
+        return {"mesh": Mesh(np.array(jax.devices()[:1]), ("data",))}
+    return {}
+
+
+def _bitequal(a, b):
+    return all(bool((np.asarray(x) == np.asarray(y)).all())
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ------------------------------------------------- round-trip bit-exact
+@pytest.mark.parametrize("algorithm", ALGOS)
+@pytest.mark.parametrize("runtime", RUNTIMES)
+def test_spec_roundtrip_matches_handwired(runtime, algorithm):
+    """build(loads(dumps(spec))).run() == the pre-api hand-wired
+    construction, bit for bit (params AND trajectory streams)."""
+    spec = api.loads(api.dumps(_bench_spec(runtime, algorithm)))
+    out = api.build(spec, **_overrides(runtime)).run()
+
+    # the hand-wired path this spec replaced, verbatim
+    from repro.envs import catch
+    from repro.models.cnn_policy import apply_mlp_policy, init_mlp_policy
+    from repro.optim import rmsprop
+    env1 = catch.make()
+    cfg = HTSConfig(alpha=4, n_envs=4, seed=3, algorithm=algorithm)
+    params = init_mlp_policy(jax.random.key(0),
+                             int(np.prod(env1.obs_shape)), env1.n_actions)
+    papply = lambda p, o: apply_mlp_policy(p, o.reshape(o.shape[0], -1))
+    ref = engine.make_runtime(runtime, env1, papply, params,
+                              rmsprop(7e-4, eps=1e-5), cfg,
+                              **_overrides(runtime)).run(INTERVALS)
+
+    assert _bitequal(out.params, ref.params), (runtime, algorithm)
+    np.testing.assert_array_equal(out.rewards, ref.rewards)
+    np.testing.assert_array_equal(out.dones, ref.dones)
+
+
+def test_dumps_is_canonical_and_stable():
+    spec = _bench_spec("mesh")
+    s = api.dumps(spec)
+    assert s == api.dumps(api.loads(s))
+    # every axis explicit in the canonical form
+    d = json.loads(s)
+    assert set(d) == {"env", "policy", "optimizer", "algorithm",
+                      "runtime", "hts", "params_seed", "intervals",
+                      "checkpoint"}
+
+
+def test_committed_spec_files_are_canonical():
+    """examples/specs/*.json parse, validate, and ARE their own
+    canonical serialization (api.save output) — no drift."""
+    spec_dir = os.path.join(ROOT, "examples", "specs")
+    files = sorted(os.listdir(spec_dir))
+    assert files, "no committed spec files"
+    for name in files:
+        path = os.path.join(spec_dir, name)
+        spec = api.load(path)
+        with open(path) as f:
+            assert f.read() == api.dumps(spec, indent=2) + "\n", (
+                f"{name} is not canonical; regenerate with "
+                f"api.save(api.load({name!r}), ...)")
+
+
+# ------------------------------------------------------------ validation
+def test_validation_rejects_bad_specs():
+    with pytest.raises(ValueError, match="staleness must be >= 1"):
+        api.ExperimentSpec(env="catch", hts={"staleness": 0})
+    with pytest.raises(ValueError, match="alpha must be >= 1"):
+        api.ExperimentSpec(env="catch", hts={"alpha": 0})
+    with pytest.raises(ValueError, match="n_envs must be >= 1"):
+        api.ExperimentSpec(env="catch", hts={"n_envs": 0})
+    with pytest.raises(ValueError, match="spec.algorithm"):
+        api.ExperimentSpec(env="catch", hts={"algorithm": "ppo"})
+    with pytest.raises(ValueError, match="unknown HTSConfig knob"):
+        api.ExperimentSpec(env="catch", hts={"aplha": 4})
+    with pytest.raises(ValueError, match="unknown spec field"):
+        api.from_dict({"environment": "catch"})
+    with pytest.raises(TypeError, match="not JSON-serializable"):
+        api.dumps(api.ExperimentSpec(
+            env={"name": "catch", "kwargs": {"fn": lambda: None}}))
+
+
+def test_build_rejects_unknown_registry_names():
+    for field, msg in [
+            (dict(env="nope"), "unknown env"),
+            (dict(policy="nope"), "unknown policy"),
+            (dict(optimizer="nope"), "unknown optimizer"),
+            (dict(runtime="nope"), "unknown runtime"),
+            (dict(algorithm="nope"), "unknown algorithm")]:
+        with pytest.raises(KeyError, match=msg):
+            api.build(api.ExperimentSpec(**{"env": "catch", **field}))
+    # the error must LIST what is registered
+    with pytest.raises(KeyError, match="registered:.*'mesh'"):
+        api.build(api.ExperimentSpec(env="catch", runtime="nope"))
+
+
+def test_build_rejects_mismatched_workload_pairs():
+    with pytest.raises(ValueError, match="consumes an Env workload"):
+        api.build(api.ExperimentSpec(
+            env={"name": "token_stream",
+                 "kwargs": {"vocab": 8, "batch": 2, "seq": 4}},
+            runtime="mesh"))
+    with pytest.raises(ValueError, match="TokenStream workload"):
+        api.build(api.ExperimentSpec(env="catch", runtime="stream"))
+    with pytest.raises(ValueError, match="could not be sized"):
+        api.build(api.ExperimentSpec(
+            env={"name": "token_stream",
+                 "kwargs": {"vocab": 8, "batch": 2, "seq": 4}},
+            policy="mlp", runtime="stream"))
+
+
+def test_registries_list_names():
+    assert "catch" in envs.env_names()
+    assert "token_stream" in envs.env_names()
+    assert {"mlp", "cnn", "token", "backbone"} <= set(models.policy_names())
+    assert {"adam", "rmsprop", "sgd"} <= set(optim.optimizer_names())
+    assert "stream" in api.runtime_names()
+    assert set(engine.runtime_names()) <= set(api.runtime_names())
+
+
+# -------------------------------------------------------------- observer
+def test_observer_streams_match_result(tmp_path):
+    """on_interval observers see one metrics dict per interval — same
+    sequence from the live host coordinator and the post-hoc fused
+    dispatch — and reporting stays reporting: results are bit-identical
+    with and without observers."""
+    outs, streams = {}, {}
+    for runtime in ("host", "mesh"):
+        session = api.build(_bench_spec(runtime))
+        base = session.run()                      # no observers
+        seen = []
+        session.on_interval(lambda m: seen.append(m))
+        out = session.run()
+        assert _bitequal(base.params, out.params)
+        assert [m["interval"] for m in seen] == list(range(INTERVALS))
+        for i, m in enumerate(seen):
+            np.testing.assert_array_equal(m["rewards"], out.rewards[i])
+            np.testing.assert_array_equal(m["dones"], out.dones[i])
+        outs[runtime], streams[runtime] = out, seen
+    assert _bitequal(outs["host"].params, outs["mesh"].params)
+
+    # run_from continues the global interval numbering
+    session = api.build(_bench_spec("mesh"))
+    session.run(2)
+    state = session.state()
+    seen = []
+    session.on_interval(lambda m: seen.append(m["interval"]))
+    session.run_from(state, 2)
+    assert seen == [2, 3]
+
+
+def test_fit_threads_observer_through_trainer(tmp_path):
+    spec = _bench_spec("mesh").replace(
+        checkpoint={"dir": str(tmp_path / "ck"), "every": 2},
+        intervals=4)
+    session = api.build(spec)
+    seen = []
+    session.on_interval(lambda m: seen.append(m["interval"]))
+    report = session.fit()
+    assert report.intervals == 4
+    assert seen == [0, 1, 2, 3]
+    # resumed fit continues the numbering where the checkpoint left off
+    session2 = api.build(spec)
+    seen2 = []
+    session2.on_interval(lambda m: seen2.append(m["interval"]))
+    report2 = session2.fit(6, resume=True)
+    assert report2.resumed_from == 4
+    assert seen2 == [4, 5]
+
+
+# ------------------------------------------------------- stream runtime
+def _stream_spec():
+    return api.ExperimentSpec(
+        env={"name": "token_stream",
+             "kwargs": {"vocab": 64, "batch": 2, "seq": 8}},
+        policy={"name": "backbone",
+                "kwargs": {"arch": "starcoder2-3b", "reduced": True,
+                           "vocab_size": 64, "n_layers": 2,
+                           "d_model": 64, "d_ff": 128}},
+        optimizer={"name": "adam", "kwargs": {"lr": 1e-3}},
+        algorithm="a2c", runtime="stream", intervals=4)
+
+
+def test_stream_runtime_contract(tmp_path):
+    """The LLM learner through the engine contract: spec JSON
+    round-trip, run(a+b) == run(a)+run_from(b) with a checkpoint
+    round-trip at the boundary, and per-interval loss metrics."""
+    from repro.checkpoint import io as ckpt_io
+    full = api.build(_stream_spec()).run()
+    assert set(full.metrics) == {"loss", "pg", "value", "entropy"}
+    assert full.metrics["loss"].shape == (4,)
+
+    session = api.build(api.loads(api.dumps(_stream_spec())))
+    seen = []
+    session.on_interval(lambda m: seen.append(m))
+    a = session.run(2)
+    state = session.state()
+    ckpt_io.save(str(tmp_path / "cap"), state)
+    restored = ckpt_io.restore(str(tmp_path / "cap"), session.state())
+    b = session.run_from(restored, 2)
+    assert _bitequal(full.params, b.params)
+    np.testing.assert_array_equal(
+        full.metrics["loss"],
+        np.concatenate([a.metrics["loss"], b.metrics["loss"]]))
+    # live observer: loss floats per interval, continuous numbering
+    assert [m["interval"] for m in seen] == [0, 1, 2, 3]
+    np.testing.assert_allclose([m["loss"] for m in seen],
+                               full.metrics["loss"], rtol=0, atol=0)
+
+
+def test_stream_rejects_vocab_mismatch():
+    spec = _stream_spec()
+    bad = spec.replace(env={"name": "token_stream",
+                            "kwargs": {"vocab": 32, "batch": 2,
+                                       "seq": 8}})
+    with pytest.raises(ValueError, match="vocab"):
+        api.build(bad)
+
+
+# ------------------------------------------------ fingerprint + bench
+def test_bench_fingerprint_is_spec_canonical():
+    from benchmarks.engine_sps import bench_spec, config_fingerprint
+    fp = config_fingerprint()
+    expect = api.workload_fingerprint(bench_spec())
+    expect.pop("runtime")
+    assert fp == expect
+    # the fingerprint tracks workload knobs field-for-field
+    assert config_fingerprint(staleness=2) != fp
+    assert api.diff_canonical(fp, config_fingerprint(staleness=2)) == \
+        ["hts.staleness: 1 != 2"]
+
+
+def test_check_sps_prints_field_level_diff():
+    from benchmarks.check_sps import check
+    from benchmarks.engine_sps import config_fingerprint
+    base = {"ts": "t0", "intervals": 12, "host": "h",
+            "config": config_fingerprint(staleness=2),
+            "sps": {"engine_sps_mesh": 100.0}}
+    cur = {"ts": "t1", "intervals": 12, "host": "h",
+           "config": config_fingerprint(),
+           "sps": {"engine_sps_mesh": 100.0}}
+    ok, msg = check([base, cur], "engine_sps_mesh", 0.3)
+    assert ok
+    assert "hts.staleness: 1 != 2" in msg, msg
+
+
+# ------------------------------------------------------------ grep gate
+def test_examples_import_no_runtime_factories():
+    """Every example goes through repro.api: no direct imports of the
+    engine registry or any runtime module (the wiring the api
+    replaced)."""
+    forbidden = re.compile(
+        r"repro\.core\.(engine|host_runtime|mesh_runtime|"
+        r"sharded_runtime|baselines|stream_runtime)\b"
+        r"|\bmake_runtime\b|\bget_runtime\b")
+    ex_dir = os.path.join(ROOT, "examples")
+    offenders = []
+    for name in sorted(os.listdir(ex_dir)):
+        if not name.endswith(".py"):
+            continue
+        with open(os.path.join(ex_dir, name)) as f:
+            for lineno, line in enumerate(f, 1):
+                if forbidden.search(line):
+                    offenders.append(f"{name}:{lineno}: {line.strip()}")
+    assert not offenders, (
+        "examples must construct through repro.api, not runtime "
+        "factories:\n" + "\n".join(offenders))

@@ -22,12 +22,12 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro import models
 from repro.checkpoint import io as ckpt_io
 from repro.core import engine
 from repro.core.engine import HTSConfig
 from repro.core.trainer import Trainer
 from repro.envs import catch
-from repro.models.cnn_policy import apply_mlp_policy, init_mlp_policy
 from repro.optim import rmsprop
 
 TOTAL = 4
@@ -37,14 +37,10 @@ SPLITS = [(1, 3), (2, 2)]
 def _setup(algorithm="a2c"):
     env1 = catch.make()
     cfg = HTSConfig(alpha=4, n_envs=4, seed=3, algorithm=algorithm)
-
-    def papply(p, obs):
-        return apply_mlp_policy(p, obs.reshape(obs.shape[0], -1))
-
-    params = init_mlp_policy(jax.random.key(0),
-                             int(np.prod(env1.obs_shape)), env1.n_actions)
+    policy = models.get_policy("mlp", env1)   # the obs-flattening MLP
+    params = policy.init(jax.random.key(0))
     opt = rmsprop(7e-4, eps=1e-5)
-    return env1, cfg, papply, params, opt
+    return env1, cfg, policy.apply, params, opt
 
 
 def _make(name, algorithm="a2c"):
@@ -224,17 +220,17 @@ def test_trainer_keeps_last_k_checkpoints(tmp_path):
 _MULTIDEV_SCRIPT = textwrap.dedent("""
     import numpy as np, jax, jax.numpy as jnp, tempfile
     assert len(jax.devices()) == 2, jax.devices()
+    from repro import models
     from repro.checkpoint import io as ckpt_io
     from repro.core import engine
     from repro.core.engine import HTSConfig
     from repro.envs import catch
-    from repro.models.cnn_policy import apply_mlp_policy, init_mlp_policy
     from repro.optim import rmsprop
     env1 = catch.make()
     cfg = HTSConfig(alpha=4, n_envs=4, seed=3)
-    papply = lambda p, o: apply_mlp_policy(p, o.reshape(o.shape[0], -1))
-    params = init_mlp_policy(jax.random.key(0),
-                             int(np.prod(env1.obs_shape)), env1.n_actions)
+    policy = models.get_policy("mlp", env1)
+    papply = policy.apply
+    params = policy.init(jax.random.key(0))
     opt = rmsprop(7e-4, eps=1e-5)
     mk = lambda: engine.make_runtime("sharded", env1, papply, params, opt,
                                      cfg)

@@ -16,24 +16,20 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro import models
 from repro.core import engine
 from repro.core.engine import HTSConfig, RunResult
 from repro.envs import catch
-from repro.models.cnn_policy import apply_mlp_policy, init_mlp_policy
 from repro.optim import rmsprop
 
 
 def _setup():
     env1 = catch.make()
     cfg = HTSConfig(alpha=5, n_envs=4, seed=3)
-
-    def papply(p, obs):
-        return apply_mlp_policy(p, obs.reshape(obs.shape[0], -1))
-
-    params = init_mlp_policy(jax.random.key(0),
-                             int(np.prod(env1.obs_shape)), env1.n_actions)
+    policy = models.get_policy("mlp", env1)   # the obs-flattening MLP
+    params = policy.init(jax.random.key(0))
     opt = rmsprop(7e-4, eps=1e-5)
-    return env1, cfg, papply, params, opt
+    return env1, cfg, policy.apply, params, opt
 
 
 def _maxdiff(a, b):
@@ -76,9 +72,12 @@ def test_registry_executes_every_runtime(name):
     assert out.rewards.shape == (2, cfg.alpha, cfg.n_envs)
     assert out.steps == 2 * cfg.alpha * cfg.n_envs
     assert out.sps > 0
-    # mapping-style access kept for legacy benchmark code
-    assert out["params"] is out.params
-    assert out["dg"] is out.state
+    # mapping-style access still resolves for out-of-tree callers, but
+    # is deprecated in favor of the attributes
+    with pytest.warns(DeprecationWarning, match="RunResult.params"):
+        assert out["params"] is out.params
+    with pytest.warns(DeprecationWarning, match="RunResult.state"):
+        assert out["dg"] is out.state
 
 
 def test_rerun_determinism_through_registry():
@@ -91,16 +90,16 @@ def test_rerun_determinism_through_registry():
 _MULTIDEV_SCRIPT = textwrap.dedent("""
     import numpy as np, jax, jax.numpy as jnp
     assert len(jax.devices()) == 2, jax.devices()
+    from repro import models
     from repro.core import engine
     from repro.core.engine import HTSConfig
     from repro.envs import catch
-    from repro.models.cnn_policy import apply_mlp_policy, init_mlp_policy
     from repro.optim import rmsprop
     env1 = catch.make()
     cfg = HTSConfig(alpha=5, n_envs=4, seed=3)
-    papply = lambda p, o: apply_mlp_policy(p, o.reshape(o.shape[0], -1))
-    params = init_mlp_policy(jax.random.key(0),
-                             int(np.prod(env1.obs_shape)), env1.n_actions)
+    policy = models.get_policy("mlp", env1)
+    papply = policy.apply
+    params = policy.init(jax.random.key(0))
     opt = rmsprop(7e-4, eps=1e-5)
     m = engine.make_runtime("mesh", env1, papply, params, opt, cfg).run(4)
     s = engine.make_runtime("sharded", env1, papply, params, opt, cfg).run(4)

@@ -28,10 +28,10 @@ import numpy as np
 import jax
 import pytest
 
+from repro import models
 from repro.core import engine
 from repro.core.engine import HTSConfig
 from repro.envs import catch
-from repro.models.cnn_policy import apply_mlp_policy, init_mlp_policy
 from repro.optim import rmsprop
 
 GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "goldens",
@@ -57,10 +57,10 @@ def _run(runtime: str, algorithm: str) -> dict:
         return _memo[(runtime, algorithm)]
     env1 = catch.make()
     cfg = HTSConfig(alpha=4, n_envs=4, seed=3, algorithm=algorithm)
-    params = init_mlp_policy(jax.random.key(0),
-                             int(np.prod(env1.obs_shape)), env1.n_actions)
+    policy = models.get_policy("mlp", env1)   # the obs-flattening MLP
+    params = policy.init(jax.random.key(0))
     opt = rmsprop(7e-4, eps=1e-5)
-    papply = lambda p, o: apply_mlp_policy(p, o.reshape(o.shape[0], -1))
+    papply = policy.apply
     kwargs = {}
     if runtime == "sharded":
         from jax.sharding import Mesh

@@ -26,23 +26,19 @@ import pytest
 from repro.core import engine
 from repro.core.engine import HTSConfig
 from repro.core.host_runtime import HostConfig
+from repro import models
 from repro.envs import catch
 from repro.envs.steptime import StepTimeModel
-from repro.models.cnn_policy import apply_mlp_policy, init_mlp_policy
 from repro.optim import rmsprop
 
 
 def _setup():
     env1 = catch.make()
     cfg = HTSConfig(alpha=5, n_envs=4, seed=3)
-
-    def papply(p, obs):
-        return apply_mlp_policy(p, obs.reshape(obs.shape[0], -1))
-
-    params = init_mlp_policy(jax.random.key(0),
-                             int(np.prod(env1.obs_shape)), env1.n_actions)
+    policy = models.get_policy("mlp", env1)   # the obs-flattening MLP
+    params = policy.init(jax.random.key(0))
     opt = rmsprop(7e-4, eps=1e-5)
-    return env1, cfg, papply, params, opt
+    return env1, cfg, policy.apply, params, opt
 
 
 def _maxdiff(a, b):

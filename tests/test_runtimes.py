@@ -10,24 +10,20 @@ from repro.core.baselines import (AsyncConfig, async_init_carry,
                                   sync_init_carry)
 from repro.core.host_runtime import HostConfig, HostHTSRL
 from repro.core.mesh_runtime import HTSConfig
+from repro import models
 from repro.envs import catch
 from repro.envs.interfaces import vectorize
 from repro.envs.steptime import StepTimeModel
-from repro.models.cnn_policy import apply_mlp_policy, init_mlp_policy
 from repro.optim import rmsprop
 
 
 def _setup():
     env1 = catch.make()
     cfg = HTSConfig(alpha=5, n_envs=4, seed=3)
-
-    def papply(p, obs):
-        return apply_mlp_policy(p, obs.reshape(obs.shape[0], -1))
-
-    params = init_mlp_policy(jax.random.key(0),
-                             int(np.prod(env1.obs_shape)), env1.n_actions)
+    policy = models.get_policy("mlp", env1)   # the obs-flattening MLP
+    params = policy.init(jax.random.key(0))
     opt = rmsprop(7e-4, eps=1e-5)
-    return env1, cfg, papply, params, opt
+    return env1, cfg, policy.apply, params, opt
 
 
 def _maxdiff(a, b):
@@ -43,7 +39,7 @@ def test_host_equals_mesh_bitexact():
                                   cfg, n_intervals=4)
     host = HostHTSRL(env1, papply, params, opt, cfg, HostConfig(n_actors=2))
     out = host.run(3)
-    assert _maxdiff(carry[0].params, out["dg"].params) == 0.0
+    assert _maxdiff(carry[0].params, out.state.params) == 0.0
 
 
 def test_actor_count_determinism():
@@ -54,9 +50,9 @@ def test_actor_count_determinism():
         host = HostHTSRL(env1, papply, params, opt, cfg,
                          HostConfig(n_actors=n_actors))
         outs.append(host.run(3))
-    assert _maxdiff(outs[0]["params"], outs[1]["params"]) == 0.0
-    assert _maxdiff(outs[0]["params"], outs[2]["params"]) == 0.0
-    np.testing.assert_array_equal(outs[0]["rewards"], outs[1]["rewards"])
+    assert _maxdiff(outs[0].params, outs[1].params) == 0.0
+    assert _maxdiff(outs[0].params, outs[2].params) == 0.0
+    np.testing.assert_array_equal(outs[0].rewards, outs[1].rewards)
 
 
 def test_rerun_determinism():
