@@ -2,18 +2,22 @@
 
 ``BENCH_sps.json`` is an append-only JSON-lines file: one record per
 ``benchmarks.run --runtime ... --append-sps`` invocation, each with an
-``sps`` mapping of ``engine_sps_<runtime> -> steps/second``. CI appends
-a fresh record on every push and then runs this checker, which compares
-the LAST record (the run that just happened) against the most recent
-PRIOR record measured with the same ``intervals`` setting, the same
-host fingerprint (``benchmarks.run.host_fingerprint``), AND the same
-workload config fingerprint (``benchmarks.engine_sps.
-config_fingerprint``: alpha, n_envs, env, algorithm, staleness, ...) —
-the committed baseline. Records from different hardware or different
-workloads are never compared: that would gate on machine/workload
-identity, not on code. Old records written before config fingerprinting
-are skipped as baselines — loudly, so the vacuous comparison is visible
-in CI logs.
+``sps`` mapping of ``engine_sps_<runtime>[_<backend>] -> steps/second``.
+CI appends a fresh record on every push and then runs this checker,
+which compares the LAST record (the run that just happened) against the
+MEDIAN of the last ``--baseline-window`` prior records measured with
+the same ``intervals`` setting, the same host fingerprint
+(``benchmarks.run.host_fingerprint``), AND the same workload config
+fingerprint (``benchmarks.engine_sps.config_fingerprint``: alpha,
+n_envs, env, algorithm, staleness, ...) — the committed baseline
+trajectory. The pass floor is variance-aware: it widens with the
+window's median absolute deviation (``--mads``), because single-record
+gating flaps on keys that are intrinsically noisy on shared hardware
+(the committed host entry has swung 1330 -> 454 sps with no code
+change). Records from different hardware or different workloads are
+never compared: that would gate on machine/workload identity, not on
+code. Old records written before config fingerprinting are skipped as
+baselines — loudly, so the vacuous comparison is visible in CI logs.
 
     python -m benchmarks.check_sps BENCH_sps.json \
         --key engine_sps_mesh --max-regression 0.30
@@ -66,8 +70,27 @@ def _config_diff(a, b) -> str:
     return "; ".join(lines) if lines else "(equal)"
 
 
-def check(records, key: str, max_regression: float):
-    """Returns (ok: bool, message: str). ok=True includes skips."""
+def _median(values):
+    vs = sorted(values)
+    n = len(vs)
+    mid = n // 2
+    return vs[mid] if n % 2 else 0.5 * (vs[mid - 1] + vs[mid])
+
+
+def check(records, key: str, max_regression: float,
+          window: int = 5, mads: float = 4.0):
+    """Returns (ok: bool, message: str). ok=True includes skips.
+
+    The baseline is the MEDIAN of the last ``window`` comparable prior
+    records, and the pass floor is widened by the window's observed
+    noise: ``floor = median - max(mads * MAD, max_regression * median)``
+    where MAD is the median absolute deviation of the window. A noisy
+    entry (the committed host numbers wobble 1330 -> 454 sps run to run
+    on shared CI hardware) therefore widens its own tolerance band
+    instead of making the single-latest-record gate flap; a genuinely
+    quiet key (MAD ~ 0) keeps the plain ``1 - max_regression`` ratio
+    floor, which is also the exact behavior when only one comparable
+    prior record exists."""
     if not records:
         return True, f"skip: no records (no baseline yet for {key})"
     current = records[-1]
@@ -77,8 +100,10 @@ def check(records, key: str, max_regression: float):
     if not _is_fresh(current, key):
         return True, (f"skip: last record's {key} was replayed from a "
                       f"sweep checkpoint, not measured")
-    baseline, unfingerprinted, near_miss = None, 0, None
+    baselines, unfingerprinted, near_miss = [], 0, None
     for rec in reversed(records[:-1]):
+        if len(baselines) >= max(1, window):
+            break             # newest-first: the trailing window is full
         if rec.get("sps", {}).get(key) is None:
             continue
         if not _is_fresh(rec, key):
@@ -102,9 +127,8 @@ def check(records, key: str, max_regression: float):
             # instead of an opaque "fingerprint differs"
             near_miss = near_miss or rec
             continue
-        baseline = rec
-        break
-    if baseline is None:
+        baselines.append(rec)
+    if not baselines:
         extra = (f" ({unfingerprinted} otherwise-comparable record(s) "
                  f"skipped: no config fingerprint, cannot verify the "
                  f"workload matches)" if unfingerprinted else "")
@@ -116,15 +140,18 @@ def check(records, key: str, max_regression: float):
                       f"intervals={current.get('intervals')} on host "
                       f"{current.get('host')!r} with matching config "
                       f"fingerprint — nothing to regress against{extra}")
-    base_sps = baseline["sps"][key]
+    values = [rec["sps"][key] for rec in baselines]
+    base_sps = _median(values)
     if base_sps <= 0:
         return True, f"skip: degenerate baseline {key}={base_sps}"
+    mad = _median([abs(v - base_sps) for v in values])
+    floor = base_sps - max(mads * mad, max_regression * base_sps)
     ratio = cur_sps / base_sps
     msg = (f"{key}: current={cur_sps:.1f} sps, baseline={base_sps:.1f} sps "
-           f"({baseline.get('ts', '?')}), ratio={ratio:.2f}")
-    if ratio < 1.0 - max_regression:
-        return False, (f"REGRESSION {msg} — below the "
-                       f"{1.0 - max_regression:.2f} floor")
+           f"(median of {len(values)}, newest {baselines[0].get('ts', '?')}, "
+           f"MAD={mad:.1f}), ratio={ratio:.2f}, floor={floor:.1f}")
+    if cur_sps < floor:
+        return False, f"REGRESSION {msg}"
     return True, f"OK {msg}"
 
 
@@ -134,13 +161,21 @@ def main() -> int:
     ap.add_argument("--key", default="engine_sps_mesh",
                     help="sps entry to gate on (default engine_sps_mesh)")
     ap.add_argument("--max-regression", type=float, default=0.30,
-                    help="fail when current < (1 - this) * baseline")
+                    help="minimum tolerance: fail only when current < "
+                         "baseline - max(mads*MAD, this*baseline)")
+    ap.add_argument("--baseline-window", type=int, default=5,
+                    help="number of comparable prior records whose "
+                         "median (and MAD) form the baseline")
+    ap.add_argument("--mads", type=float, default=4.0,
+                    help="noise tolerance in median-absolute-deviations "
+                         "of the baseline window")
     args = ap.parse_args()
     records = load_records(args.file)
     if records is None:
         print(f"# check_sps skip: {args.file} not found", file=sys.stderr)
         return 0
-    ok, msg = check(records, args.key, args.max_regression)
+    ok, msg = check(records, args.key, args.max_regression,
+                    window=args.baseline_window, mads=args.mads)
     print(f"# check_sps {msg}", file=sys.stderr)
     return 0 if ok else 1
 

@@ -7,11 +7,19 @@ ExperimentSpec (catch x mlp x rmsprop x a2c) — with only the spec's
 absorbs compilation. This is the generalization of Tab. A2 — adding a
 runtime to the registry automatically adds it here.
 
+The sweep has a second axis, ``env_backends``: "host" steps the vmapped
+scalar env (the bit-exactness oracle), "device" the natively-batched
+device-resident port (repro.envs.device). Device rows are keyed
+``engine_sps_<runtime>_device``; host rows keep their historical
+``engine_sps_<runtime>`` keys so the committed baseline trajectory in
+``BENCH_sps.json`` stays comparable.
+
 ``run(runtimes=..., intervals=...)`` is also the backend of
 ``benchmarks.run --runtime ...`` and the CI SPS smoke check.
 ``config_fingerprint`` — stamped into each ``BENCH_sps.json`` record —
 IS the spec's canonical JSON (repro.api.workload_fingerprint), minus
-the runtime axis (one record spans every runtime in the sweep):
+the runtime axis and the env_backend knob (one record spans every
+runtime x backend cell in the sweep; both are encoded in the row key):
 benchmarks/check_sps.py only compares SPS between records whose
 fingerprints match, and prints the field-level spec diff when they
 don't, so a sweep run with a different alpha/n_envs/env/staleness can
@@ -23,32 +31,51 @@ IV = 12
 
 
 def bench_spec(runtime: str = "mesh", alpha: int = 8, n_envs: int = 8,
-               staleness: int = 1, intervals: int = IV) -> api.ExperimentSpec:
-    """The default bench workload as a declarative spec."""
+               staleness: int = 1, intervals: int = IV,
+               env_backend: str = "host") -> api.ExperimentSpec:
+    """The default bench workload as a declarative spec. The hts dict
+    carries ``env_backend`` only when non-default, so host-backend
+    specs serialize byte-identically to every pre-backend-axis record
+    (the fingerprint match that keeps old baselines comparable)."""
+    hts = {"alpha": alpha, "n_envs": n_envs, "seed": 0,
+           "staleness": staleness}
+    if env_backend != "host":
+        hts["env_backend"] = env_backend
     return api.ExperimentSpec(
         env="catch",
         policy="mlp",
         optimizer={"name": "rmsprop", "kwargs": {"lr": 7e-4}},
         algorithm="a2c",
         runtime=runtime,
-        hts={"alpha": alpha, "n_envs": n_envs, "seed": 0,
-             "staleness": staleness},
+        hts=hts,
         intervals=intervals)
 
 
 def config_fingerprint(alpha=8, n_envs=8, staleness=1):
     """Everything about the benchmark workload that changes what an SPS
     number means — the bench spec's canonical serialization, minus the
-    runtime axis (the record's ``sps`` mapping is keyed per runtime).
-    Comparable across records only when equal."""
+    runtime axis (the record's ``sps`` mapping is keyed per
+    runtime x env_backend cell). Comparable across records only when
+    equal."""
     fp = api.workload_fingerprint(
         bench_spec(alpha=alpha, n_envs=n_envs, staleness=staleness))
     fp.pop("runtime")
+    # the backend axis also lives in the row key (``_device`` suffix),
+    # never in the fingerprint — a sweep that adds device rows must not
+    # orphan the committed host baselines
+    fp["hts"].pop("env_backend", None)
     return fp
 
 
+def sweep_key(runtime: str, env_backend: str = "host") -> str:
+    """The ``sps``-mapping key for one runtime x backend cell. Host rows
+    keep the historical un-suffixed keys."""
+    suffix = "" if env_backend == "host" else f"_{env_backend}"
+    return f"engine_sps_{runtime}{suffix}"
+
+
 def run(runtimes=None, intervals=IV, alpha=8, n_envs=8, staleness=1,
-        progress=None):
+        progress=None, env_backends=("host",)):
     """``progress`` (optional) is attached as a Session ``on_interval``
     observer during the WARMUP run only, never the timed run. It fires
     live per interval on coordinator runtimes (host); the fused
@@ -59,19 +86,23 @@ def run(runtimes=None, intervals=IV, alpha=8, n_envs=8, staleness=1,
 
     rows = []
     for name in (runtimes or engine.runtime_names()):
-        # staleness reaches every runtime unmodified: the baselines
-        # refuse K != 1 with a loud ValueError (sync is undelayed, async
-        # has AsyncConfig.staleness) rather than silently running a
-        # different workload than the record's config fingerprint claims
-        session = api.build(bench_spec(runtime=name, alpha=alpha,
-                                       n_envs=n_envs, staleness=staleness,
-                                       intervals=intervals))
-        if progress is not None:
-            observer = session.on_interval(
-                lambda m, _n=name: progress(_n, m))
-        session.run(intervals)         # warmup: compile + caches
-        if progress is not None:
-            session.remove_observer(observer)
-        out = session.run(intervals)
-        rows.append((f"engine_sps_{name}", out.sps, "sps"))
+        for backend in env_backends:
+            # staleness reaches every runtime unmodified: the baselines
+            # refuse K != 1 with a loud ValueError (sync is undelayed,
+            # async has AsyncConfig.staleness) rather than silently
+            # running a different workload than the record's config
+            # fingerprint claims
+            cell = name if backend == "host" else f"{name}_{backend}"
+            session = api.build(bench_spec(
+                runtime=name, alpha=alpha, n_envs=n_envs,
+                staleness=staleness, intervals=intervals,
+                env_backend=backend))
+            if progress is not None:
+                observer = session.on_interval(
+                    lambda m, _c=cell: progress(_c, m))
+            session.run(intervals)         # warmup: compile + caches
+            if progress is not None:
+                session.remove_observer(observer)
+            out = session.run(intervals)
+            rows.append((sweep_key(name, backend), out.sps, "sps"))
     return rows

@@ -1,4 +1,5 @@
-"""Per-phase breakdown of the host runtime's hot path.
+"""Per-phase breakdown of the host runtime's hot path — and the device
+path it is racing against.
 
 Where does an interval's wall time actually go? The host runtime
 accumulates per-phase timers when ``HostConfig(profile=True)``:
@@ -18,17 +19,84 @@ time (n_envs executors wait concurrently); they rank where the next
 optimization should go. ``learner_drain`` near zero means the learner
 fully hides behind the rollout — the paper's overlap claim.
 
+The device-backend rows put those host phase costs in perspective:
+
+    hot_path_device_fused_sps/wall   the mesh runtime with
+                     env_backend="device" — actor+env+learner in ONE
+                     XLA program, zero per-step host dispatch. Its wall
+                     time is what the host path's env_step_wait +
+                     actor_wait + dispatch overhead is competing with.
+    hot_path_device_env_scan         an alpha-step scan of JUST the
+                     batched device env (random actions) — the env
+                     share of the fused program.
+    hot_path_device_actor_scan       an alpha-step scan of JUST the
+                     policy forward + sample — the actor share.
+
     PYTHONPATH=src python -m benchmarks.run --only profile
 """
+import time
+
 import jax
+import jax.numpy as jnp
 
 from repro import models
 from repro.core import engine
 from repro.core.host_runtime import HostConfig
 from repro.envs import catch
+from repro.envs.device import batched_env
 from repro.optim import rmsprop
 
 IV = 12
+
+
+def _timed(fn, *args):
+    """Wall-time one jitted program: compile outside the clock, then
+    block on the result."""
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    out = fn(*args)
+    jax.block_until_ready(out)
+    return time.perf_counter() - t0
+
+
+def _device_rows(env1, policy, params, cfg, intervals):
+    """The fused device path plus its two attributable halves."""
+    venv = batched_env(env1, cfg.n_envs, "device")
+    opt = rmsprop(7e-4)
+    rt = engine.make_runtime("mesh", env1, policy.apply, params, opt,
+                             cfg._replace(env_backend="device"))
+    rt.run(intervals)              # warmup: compile + caches
+    out = rt.run(intervals)
+    rows = [("hot_path_device_fused_sps", out.sps, "sps"),
+            ("hot_path_device_fused_wall", out.wall_time, "s")]
+
+    steps = intervals * cfg.alpha
+    keys = jax.random.split(jax.random.key(0), cfg.n_envs)
+    state, obs = venv.reset(keys)
+    acts = jnp.zeros((cfg.n_envs,), jnp.int32)
+
+    @jax.jit
+    def env_scan(state):
+        def body(s, k):
+            ns, o, r, d = venv.step(s, acts, jax.random.split(k, cfg.n_envs))
+            return ns, r
+        return jax.lax.scan(body, state,
+                            jax.random.split(jax.random.key(1), steps))
+
+    @jax.jit
+    def actor_scan(obs):
+        def body(o, k):
+            logits, value = policy.apply(params, o)
+            a = jax.random.categorical(k, logits)
+            return o, a
+        return jax.lax.scan(body, obs,
+                            jax.random.split(jax.random.key(2), steps))
+
+    rows.append(("hot_path_device_env_scan", _timed(env_scan, state), "s"))
+    rows.append(("hot_path_device_actor_scan", _timed(actor_scan, obs),
+                 "s"))
+    return rows
 
 
 def run(intervals=IV, alpha=8, n_envs=8):
@@ -45,4 +113,5 @@ def run(intervals=IV, alpha=8, n_envs=8):
             ("hot_path_wall", out.wall_time, "s")]
     for key in sorted(rt.profile):
         rows.append((f"hot_path_{key}", rt.profile[key], "s"))
+    rows.extend(_device_rows(env1, policy, params, cfg, intervals))
     return rows

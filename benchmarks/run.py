@@ -9,10 +9,12 @@
 
 Prints ``name,value,unit`` CSV rows per benchmark. ``--runtime`` runs the
 registry SPS sweep (benchmarks/engine_sps.py) for the named engine
-runtimes instead of the paper tables. With ``--ckpt-dir`` the sweep
-records each completed runtime in ``<dir>/sweep_progress.json`` after it
-finishes; ``--resume`` replays recorded rows instead of re-timing them,
-so a preempted multi-hour sweep restarts where it died.
+runtimes instead of the paper tables; ``--env-backend host,device`` adds
+the device-resident env axis (rows keyed ``engine_sps_<rt>_device``).
+With ``--ckpt-dir`` the sweep records each completed runtime x backend
+cell in ``<dir>/sweep_progress.json`` after it finishes; ``--resume``
+replays recorded rows instead of re-timing them, so a preempted
+multi-hour sweep restarts where it died.
 """
 import argparse
 import json
@@ -96,26 +98,33 @@ def _run_runtime_sweep(args) -> None:
     done = _load_progress(args)
     restored = []
     print("name,value,unit")
-    for rt_name in names:          # per-runtime isolation, like the tables
-        if rt_name in done:        # resumed: replay the recorded rows
-            sub = [tuple(row) for row in done[rt_name]]
-            restored.append(rt_name)
-            print(f"# runtime {rt_name} restored from checkpoint",
+    backends = args.env_backend.split(",")
+    # one sweep cell per runtime x env_backend, isolated like the tables;
+    # cells are named like their sps keys ("mesh", "mesh_device") so
+    # checkpoints and check_sps's restored-row staleness test agree
+    cells = [(rt, be) for rt in names for be in backends]
+    for rt_name, backend in cells:
+        cell = rt_name if backend == "host" else f"{rt_name}_{backend}"
+        if cell in done:           # resumed: replay the recorded rows
+            sub = [tuple(row) for row in done[cell]]
+            restored.append(cell)
+            print(f"# runtime {cell} restored from checkpoint",
                   file=sys.stderr, flush=True)
         else:
             try:
                 sub = engine_sps.run(runtimes=[rt_name],
                                      intervals=args.intervals,
                                      staleness=args.staleness,
-                                     progress=_sweep_progress)
+                                     progress=_sweep_progress,
+                                     env_backends=(backend,))
             except Exception:
                 failed += 1
-                print(f"# runtime {rt_name} FAILED:\n"
+                print(f"# runtime {cell} FAILED:\n"
                       f"{traceback.format_exc()}",
                       file=sys.stderr, flush=True)
                 continue
             if args.ckpt_dir:
-                done[rt_name] = sub
+                done[cell] = sub
                 _save_progress(args, done)
         rows.extend(sub)
         for name, value, unit in sub:
@@ -160,6 +169,13 @@ def main() -> None:
                          "(host/mesh/sharded); the sync/async baselines "
                          "refuse staleness != 1 — drop them from "
                          "--runtime when sweeping K")
+    ap.add_argument("--env-backend", default="host",
+                    help="comma-separated env backends for the --runtime "
+                         "sweep (host,device): 'host' rows keep their "
+                         "historical engine_sps_<rt> keys, 'device' rows "
+                         "are keyed engine_sps_<rt>_device. Only envs "
+                         "with device ports (catch, gridmaze) support "
+                         "'device'")
     ap.add_argument("--append-sps", default=None, metavar="FILE",
                     help="with --runtime: append the sweep as a JSON line "
                          "to FILE (e.g. BENCH_sps.json)")
@@ -179,6 +195,8 @@ def main() -> None:
         ap.error("--resume requires --ckpt-dir")
     if args.ckpt_dir and not args.runtime:
         ap.error("--ckpt-dir applies to the --runtime sweep")
+    if args.env_backend != "host" and not args.runtime:
+        ap.error("--env-backend applies to the --runtime sweep")
 
     if args.runtime:
         _run_runtime_sweep(args)

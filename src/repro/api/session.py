@@ -127,6 +127,16 @@ def build(spec: ExperimentSpec, **runtime_overrides) -> "Session":
                 f"(env 'token_stream'), got env {spec.env.name!r} -> "
                 f"{type(env).__name__}")
     elif not isinstance(env, Env):
+        from repro.envs.device import DeviceEnv
+        if isinstance(env, DeviceEnv):
+            # "catch_device" etc. are selection OUTPUTS, not workloads:
+            # the backend axis lives in the config so every runtime
+            # (and the bit-exactness contract) sees one env identity
+            raise ValueError(
+                f"env {spec.env.name!r} is a device-resident port, not "
+                f"a workload; name the host env "
+                f"(env={env.host_name!r}) and select the port with "
+                f"hts={{'env_backend': 'device'}}")
         raise ValueError(
             f"runtime {rt_name!r} consumes an Env workload, got env "
             f"{spec.env.name!r} -> {type(env).__name__} (the "

@@ -153,6 +153,25 @@ class ExperimentSpec:
         if cfg.staleness < 1:
             raise ValueError(
                 f"staleness must be >= 1, got {cfg.staleness}")
+        if cfg.env_backend not in ("host", "device"):
+            raise ValueError(
+                f"unknown env_backend {cfg.env_backend!r}; choose 'host' "
+                f"(vmapped scalar envs) or 'device' (device-resident "
+                f"batched port)")
+        if cfg.env_backend == "device":
+            # spec-time, not trace-time: an env without a device port
+            # (football, token — their step logic is host-side) must
+            # fail here with the supported pairs spelled out, not deep
+            # inside runtime construction or jit tracing
+            from repro.envs.device import (device_port_names,
+                                           has_device_port)
+            if not has_device_port(self.env.name):
+                raise ValueError(
+                    f"env {self.env.name!r} has no device-resident port, "
+                    f"so hts['env_backend']='device' is unsupported for "
+                    f"it; envs with device ports: "
+                    f"{sorted(device_port_names())}. Use the default "
+                    f"env_backend='host' for {self.env.name!r}.")
         if self.intervals < 0:
             raise ValueError(
                 f"intervals must be >= 0, got {self.intervals}")

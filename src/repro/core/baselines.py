@@ -27,7 +27,8 @@ from repro.core.engine import (HTSConfig, ScanRuntimeBase, TrainState,
                                register_runtime)
 from repro.core.mesh_runtime import _interval_loss
 from repro.core.rollout import RolloutConfig, rollout_interval
-from repro.envs.interfaces import Env, vectorize
+from repro.envs.device import batched_env
+from repro.envs.interfaces import Env
 from repro.optim import Optimizer, apply_updates
 
 
@@ -136,7 +137,7 @@ class _BaselineRuntime(ScanRuntimeBase):
                 f"{type(self).__name__} does not implement "
                 f"HTSConfig.staleness={cfg.staleness}; sync is undelayed "
                 f"and async takes AsyncConfig(staleness=...)")
-        self.venv = vectorize(env, cfg.n_envs)
+        self.venv = batched_env(env, cfg.n_envs, cfg.env_backend)
 
     def _result_state(self, carry):
         return carry[0], carry

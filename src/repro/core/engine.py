@@ -67,6 +67,14 @@ class HTSConfig(NamedTuple):
     # AsyncConfig.staleness; both reject staleness != 1 rather than
     # silently ignore it.
     staleness: int = 1
+    # which batched env implementation steps the n_envs replicas:
+    # "host" vmaps the scalar env (today's semantics — the bit-exactness
+    # oracle), "device" selects the env's natively-batched device-
+    # resident port (repro.envs.device), stepped inside the fused scan
+    # with no per-step host dispatch. Trajectories are bit-identical
+    # across backends (DESIGN.md §2.2); envs without a port reject
+    # "device" loudly at construction time.
+    env_backend: str = "host"
 
 
 class TrainState(NamedTuple):

@@ -123,6 +123,14 @@ class HostHTSRL:
         if cfg.staleness < 1:
             raise ValueError(f"staleness must be >= 1, got {cfg.staleness}")
         self.env = env
+        # the batched env the stepper dispatches: vmapped scalar env
+        # ("host", today's semantics) or the natively-batched device
+        # port ("device" — same thread/dispatch cadence, scatter-free
+        # batched programs; the fused runtimes move this whole loop
+        # on-device). Bit-identical either way (DESIGN.md §2.2);
+        # resolved HERE so bad backends/envs fail at construction.
+        from repro.envs.device import batched_env
+        self.venv = batched_env(env, cfg.n_envs, cfg.env_backend)
         self.cfg = cfg
         self.host = host if host is not None else HostConfig(**host_kwargs)
         self.opt = opt
@@ -147,7 +155,8 @@ class HostHTSRL:
         cfg, env, policy_apply = self.cfg, self.env, self.policy_apply
         master = jax.random.key(cfg.seed)
 
-        self._env_reset_v = jax.jit(jax.vmap(env.reset))
+        venv = self.venv            # resolved at construction (__init__)
+        self._env_reset_v = jax.jit(venv.reset)
 
         # all (env, step) action/transition keys for interval j in ONE
         # device call — the executor hot loop never touches the PRNG
@@ -184,7 +193,7 @@ class HostHTSRL:
         def step_batch(env_states, actions, ids, ts, table):
             keys = jax.vmap(jax.random.wrap_key_data)(table[ts, ids])
             sel = jax.tree.map(lambda x: x[ids], env_states)
-            ns, nobs, r, d = jax.vmap(env.step)(sel, actions, keys)
+            ns, nobs, r, d = venv.step(sel, actions, keys)
             env_states = jax.tree.map(
                 lambda full, rows: full.at[ids].set(rows), env_states, ns)
             return env_states, nobs, r, d

@@ -38,7 +38,8 @@ from repro.core import delayed_grad
 from repro.core.engine import (HTSConfig, RunResult,  # noqa: F401 (re-export)
                                ScanRuntimeBase, register_runtime)
 from repro.core.rollout import RolloutConfig, rollout_interval
-from repro.envs.interfaces import Env, vectorize
+from repro.envs.device import batched_env
+from repro.envs.interfaces import Env
 from repro.optim import Optimizer
 
 
@@ -212,7 +213,10 @@ class MeshRuntime(ScanRuntimeBase):
         super().__init__(env, policy_apply, params, opt, cfg)
         if cfg.staleness < 1:
             raise ValueError(f"staleness must be >= 1, got {cfg.staleness}")
-        self.venv = vectorize(env, cfg.n_envs)
+        # env_backend resolves HERE (construction), not at trace time:
+        # "host" vmaps the scalar env, "device" steps the natively-
+        # batched port inside the same scan body
+        self.venv = batched_env(env, cfg.n_envs, cfg.env_backend)
 
     def _build(self) -> None:
         self._step = make_hts_step(self.policy_apply, self.venv, self.opt,

@@ -28,7 +28,8 @@ from jax.sharding import PartitionSpec as P
 from repro.core import mesh_runtime
 from repro.core.engine import (HTSConfig, ScanRuntimeBase,
                                register_runtime)
-from repro.envs.interfaces import Env, vectorize
+from repro.envs.device import batched_env
+from repro.envs.interfaces import Env
 from repro.launch.mesh import make_host_mesh
 from repro.optim import Optimizer
 
@@ -52,8 +53,11 @@ class ShardedHTSRL(ScanRuntimeBase):
                 f"'{axis}' mesh axis")
         self.n_shards = n_shards
         self.lcfg = cfg._replace(n_envs=cfg.n_envs // n_shards)
-        self.venv_local = vectorize(env, self.lcfg.n_envs)
-        self.venv_global = vectorize(env, cfg.n_envs)
+        # a DeviceEnv steps any leading batch width, so the same port
+        # serves both the per-shard body and the global init
+        self.venv_local = batched_env(env, self.lcfg.n_envs,
+                                      cfg.env_backend)
+        self.venv_global = batched_env(env, cfg.n_envs, cfg.env_backend)
 
     def _build(self) -> None:
         self._step = mesh_runtime.make_hts_step(

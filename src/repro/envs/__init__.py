@@ -32,6 +32,12 @@ _LAZY: Dict[str, tuple] = {
     "football": ("repro.envs.football", "make"),
     "token": ("repro.envs.token_env", "make"),
     "token_stream": ("repro.data.pipeline", "TokenStream"),
+    # device-resident batched ports (repro.envs.device): registered
+    # alongside their host oracles. Specs normally reach them through
+    # ``hts.env_backend="device"`` with the HOST name; the ``_device``
+    # entries exist for direct construction and tests.
+    "catch_device": ("repro.envs.device.catch", "make"),
+    "gridmaze_device": ("repro.envs.device.gridmaze", "make"),
 }
 
 
@@ -64,3 +70,17 @@ def get_env(name: str, **kwargs):
 
 def env_names():
     return sorted(set(_REGISTRY) | set(_LAZY))
+
+
+def has_device_port(name: str) -> bool:
+    """Does host env ``name`` have a device-resident port
+    (``HTSConfig.env_backend="device"``)? See repro.envs.device."""
+    from repro.envs import device as device_envs
+    return device_envs.has_device_port(name)
+
+
+def get_device_env(name: str, **kwargs):
+    """Construct the device-resident port of host env ``name``; loud
+    ValueError listing the supported pairs when there is none."""
+    from repro.envs import device as device_envs
+    return device_envs.get_device_env(name, **kwargs)

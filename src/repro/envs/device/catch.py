@@ -1,0 +1,66 @@
+"""Device-resident catch: the batched port of ``repro.envs.catch``.
+
+State layout: ``{"ball_r", "ball_c", "paddle"}``, each an ``(n,)`` int32
+array — exactly the stacked pytree ``vectorize(catch.make(), n)``
+produces, so capsules (TrainState.env_state) cross backends unchanged.
+
+The board observation is built scatter-free: one-hot row/column masks
+from broadcast comparisons, combined with an elementwise ``maximum``
+(the host env's two ``.at[].set(1.0)`` writes can land on the same cell
+when the ball reaches the paddle row; max reproduces the set-twice
+value exactly). The one stochastic draw — the reset column — goes
+through ``jax.vmap`` of the very ``randint`` the host env performs per
+key, which is what pins bit-exactness of the PRNG stream.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.catch import COLS, ROWS
+from repro.envs.device import DeviceEnv, device_autoreset
+
+_rand_col = jax.vmap(lambda k: jax.random.randint(k, (), 0, COLS))
+
+
+def _obs(state):
+    # (n, ROWS) x (n, COLS) one-hot masks -> (n, ROWS, COLS) boards via
+    # broadcast products; exact 0.0/1.0 floats, no scatter
+    ball_row = (state["ball_r"][:, None]
+                == jnp.arange(ROWS, dtype=jnp.int32)).astype(jnp.float32)
+    ball_col = (state["ball_c"][:, None]
+                == jnp.arange(COLS, dtype=jnp.int32)).astype(jnp.float32)
+    ball = ball_row[:, :, None] * ball_col[:, None, :]
+    paddle_col = (state["paddle"][:, None]
+                  == jnp.arange(COLS, dtype=jnp.int32)).astype(jnp.float32)
+    bottom_row = (jnp.arange(ROWS, dtype=jnp.int32)
+                  == ROWS - 1).astype(jnp.float32)
+    paddle = bottom_row[None, :, None] * paddle_col[:, None, :]
+    return jnp.maximum(ball, paddle)[..., None]
+
+
+def _reset(keys):
+    n = keys.shape[0]
+    state = {
+        "ball_r": jnp.zeros((n,), jnp.int32),
+        "ball_c": _rand_col(keys),
+        "paddle": jnp.full((n,), COLS // 2, jnp.int32),
+    }
+    return state, _obs(state)
+
+
+def _step(state, actions, keys):
+    del keys                                # transitions are deterministic
+    move = actions - 1                      # {0,1,2} -> {-1,0,1}
+    paddle = jnp.clip(state["paddle"] + move, 0, COLS - 1)
+    ball_r = state["ball_r"] + 1
+    ns = {"ball_r": ball_r, "ball_c": state["ball_c"], "paddle": paddle}
+    done = (ball_r >= ROWS - 1)
+    caught = (paddle == state["ball_c"])
+    reward = jnp.where(done, jnp.where(caught, 1.0, -1.0), 0.0)
+    return ns, _obs(ns), reward, done.astype(jnp.float32)
+
+
+def make() -> DeviceEnv:
+    return device_autoreset("catch@device", _reset, _step, (ROWS, COLS, 1),
+                            3, host_name="catch")

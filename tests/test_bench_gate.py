@@ -69,6 +69,75 @@ def test_matching_config_found_behind_mismatches():
     assert ok and "baseline=100.0" in msg
 
 
+def test_noisy_window_widens_its_own_tolerance():
+    """The committed host entry swings 1330 -> 454 sps run to run; with
+    the single-latest-record gate, a normal-for-this-key 600 sps run
+    after a lucky 1330 would fail. The MAD-scaled floor of the window
+    absorbs exactly the noise the window itself exhibits."""
+    window = [1330.0, 454.0, 1200.0, 500.0, 1100.0]
+    records = [_rec(v) for v in window] + [_rec(600.0)]
+    ok, msg = check_sps.check(records, KEY, 0.30)
+    assert ok, msg
+    assert "median of 5" in msg
+
+
+def test_quiet_window_keeps_ratio_floor():
+    """A stable key (MAD ~ 0) gets no extra slack: the floor stays the
+    plain (1 - max_regression) ratio."""
+    window = [100.0, 101.0, 99.0, 100.0, 100.0]
+    ok, msg = check_sps.check([_rec(v) for v in window] + [_rec(95.0)],
+                              KEY, 0.30)
+    assert ok, msg
+    ok, msg = check_sps.check([_rec(v) for v in window] + [_rec(60.0)],
+                              KEY, 0.30)
+    assert not ok and "REGRESSION" in msg
+
+
+def test_baseline_is_window_median_not_latest():
+    """One outlier run must not become the whole baseline: the median of
+    the window gates, not the most recent record."""
+    records = [_rec(100.0), _rec(101.0), _rec(20.0), _rec(99.0)]
+    ok, msg = check_sps.check(records, KEY, 0.30, window=3)
+    assert ok, msg
+    assert "baseline=100.0" in msg
+
+
+def test_window_limits_lookback():
+    """Only the newest ``window`` comparable records form the baseline:
+    ancient faster runs age out instead of gating forever."""
+    records = [_rec(1000.0)] + [_rec(100.0)] * 5 + [_rec(95.0)]
+    ok, msg = check_sps.check(records, KEY, 0.30, window=5)
+    assert ok, msg
+    assert "baseline=100.0" in msg
+
+
+def test_single_record_window_degenerates_to_ratio_gate():
+    """window=1 (or only one comparable record) is the old behavior
+    exactly: current vs latest at the ratio floor."""
+    ok, _ = check_sps.check([_rec(100.0), _rec(71.0)], KEY, 0.30,
+                            window=1)
+    assert ok
+    ok, msg = check_sps.check([_rec(100.0), _rec(69.0)], KEY, 0.30,
+                              window=1)
+    assert not ok and "REGRESSION" in msg
+
+
+def test_device_rows_gate_independently():
+    """Host and device rows are separate sps keys in one record; gating
+    the device key never reads host numbers."""
+    dkey = "engine_sps_mesh_device"
+    recs = []
+    for host_v, dev_v in [(100.0, 900.0), (100.0, 880.0)]:
+        r = _rec(host_v)
+        r["sps"][dkey] = dev_v
+        recs.append(r)
+    ok, msg = check_sps.check(recs, dkey, 0.30)
+    assert ok and "baseline=900.0" in msg
+    recs[-1]["sps"][dkey] = 100.0      # device regressed to host speed
+    ok, msg = check_sps.check(recs, dkey, 0.30)
+    assert not ok and "REGRESSION" in msg
+
+
 def test_live_bench_file_parses_and_gate_runs():
     """The committed BENCH_sps.json stays loadable end-to-end."""
     path = os.path.join(os.path.dirname(__file__), "..", "BENCH_sps.json")

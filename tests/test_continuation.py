@@ -89,6 +89,22 @@ def test_partition_with_checkpoint_roundtrip(name, split, tmp_path):
     np.testing.assert_array_equal(straight.rewards, rewards)
 
 
+@pytest.mark.parametrize("split", SPLITS, ids=lambda s: f"{s[0]}+{s[1]}")
+@pytest.mark.parametrize("K", [1, 2], ids=lambda k: f"K{k}")
+def test_device_backend_partition_with_roundtrip(K, split, tmp_path):
+    """The contract holds with env stepping on the device backend too:
+    the capsule carries the same stacked state pytree, so staleness-K
+    ring drain + checkpoint round-trips are backend-independent."""
+    env1, cfg, papply, params, opt = _setup()
+    cfg = cfg._replace(staleness=K, env_backend="device")
+    mk = lambda: engine.make_runtime("mesh", env1, papply, params, opt,
+                                     cfg)
+    straight = mk().run(TOTAL)
+    out, rewards = _run_split(mk(), split, tmp_path)
+    assert _maxdiff(straight.params, out.params) == 0.0
+    np.testing.assert_array_equal(straight.rewards, rewards)
+
+
 @pytest.mark.parametrize("algorithm", ["ppo", "vtrace"])
 @pytest.mark.parametrize("name", ["host", "mesh"])
 def test_partition_across_algorithms(name, algorithm, tmp_path):
