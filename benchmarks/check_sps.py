@@ -4,8 +4,10 @@
 ``benchmarks.run --runtime ... --append-sps`` invocation, each with an
 ``sps`` mapping of ``engine_sps_<runtime>[_<backend>] -> steps/second``.
 CI appends a fresh record on every push and then runs this checker,
-which compares the LAST record (the run that just happened) against the
-MEDIAN of the last ``--baseline-window`` prior records measured with
+which compares the NEWEST record carrying ``--key`` (the run that just
+happened; several benches append to one file, so the last line may
+belong to a different bench) against the MEDIAN of the last
+``--baseline-window`` prior records measured with
 the same ``intervals`` setting, the same host fingerprint
 (``benchmarks.run.host_fingerprint``), AND the same workload config
 fingerprint (``benchmarks.engine_sps.config_fingerprint``: alpha,
@@ -25,7 +27,10 @@ baselines — loudly, so the vacuous comparison is visible in CI logs.
 Exit codes: 0 = pass or graceful skip (no baseline / no comparable
 record / missing key), 1 = regression beyond the threshold. Skips are
 loud (printed to stderr) so a silently-vacuous gate is visible in CI
-logs.
+logs — and a no-baseline skip names the AXIS each candidate was
+rejected on (host fingerprint, intervals, config fingerprint), with
+the current and candidate values, so "the runner's core count changed"
+reads as exactly that instead of a generic "no comparable record".
 """
 from __future__ import annotations
 
@@ -93,15 +98,23 @@ def check(records, key: str, max_regression: float,
     prior record exists."""
     if not records:
         return True, f"skip: no records (no baseline yet for {key})"
-    current = records[-1]
-    cur_sps = current.get("sps", {}).get(key)
-    if cur_sps is None:
-        return True, f"skip: last record has no {key} measurement"
+    # the gated measurement is the NEWEST record carrying this key:
+    # BENCH_sps.json interleaves records from several benches (engine
+    # sweep, staleness sweep, serve bench), so records[-1] may belong to
+    # a different bench entirely — anchoring on it would silently skip
+    # every key whose bench did not happen to append last
+    cur_idx = next((i for i in range(len(records) - 1, -1, -1)
+                    if records[i].get("sps", {}).get(key) is not None),
+                   None)
+    if cur_idx is None:
+        return True, f"skip: no record has a {key} measurement"
+    current = records[cur_idx]
+    cur_sps = current["sps"][key]
     if not _is_fresh(current, key):
-        return True, (f"skip: last record's {key} was replayed from a "
-                      f"sweep checkpoint, not measured")
-    baselines, unfingerprinted, near_miss = [], 0, None
-    for rec in reversed(records[:-1]):
+        return True, (f"skip: newest record with {key} was replayed "
+                      f"from a sweep checkpoint, not measured")
+    baselines, rejected, near_miss = [], {}, None
+    for rec in reversed(records[:cur_idx]):
         if len(baselines) >= max(1, window):
             break             # newest-first: the trailing window is full
         if rec.get("sps", {}).get(key) is None:
@@ -109,32 +122,51 @@ def check(records, key: str, max_regression: float,
         if not _is_fresh(rec, key):
             continue          # replayed measurement — not a baseline
         if rec.get("intervals") != current.get("intervals"):
-            continue          # SPS only comparable at equal sweep shape
+            # SPS only comparable at equal sweep shape. Every rejection
+            # below records WHICH axis mismatched (with both values) —
+            # a gate that silently stops gating because e.g. the runner
+            # changed core count must say so, not print a generic
+            # "no baseline" (the 1cpu-vs-2cpu host drift did exactly
+            # that before this bookkeeping existed)
+            rejected.setdefault("intervals", []).append(
+                f"{current.get('intervals')!r} != {rec.get('intervals')!r}")
+            continue
         if rec.get("host") != current.get("host"):
-            continue          # ... and on equal hardware (a CI runner vs
-            #                   a dev-machine baseline measures hardware,
-            #                   not code)
+            # equal hardware only: a CI runner regressing against a
+            # dev-machine baseline measures hardware, not code
+            rejected.setdefault("host fingerprint", []).append(
+                f"{current.get('host')!r} != {rec.get('host')!r}")
+            continue
         if "config" not in rec:
             # pre-fingerprint record: it may have been measured with ANY
             # HTSConfig (alpha/n_envs/env/staleness), so treating it as
             # the baseline would gate on workload identity, not code.
             # Skip it — loudly, below — rather than guess.
-            unfingerprinted += 1
+            rejected.setdefault("no config fingerprint", []).append("")
             continue
         if rec.get("config") != current.get("config"):
             # different workload — SPS not comparable; keep the nearest
             # one so the skip message can show WHICH fields differ
             # instead of an opaque "fingerprint differs"
+            rejected.setdefault("config fingerprint", []).append("")
             near_miss = near_miss or rec
             continue
         baselines.append(rec)
     if not baselines:
-        extra = (f" ({unfingerprinted} otherwise-comparable record(s) "
-                 f"skipped: no config fingerprint, cannot verify the "
-                 f"workload matches)" if unfingerprinted else "")
+        axes = []
+        for axis, vals in rejected.items():
+            sample = next((v for v in vals if v), None)
+            axes.append(f"{len(vals)} on {axis}"
+                        + (f" (current vs candidate: {sample})"
+                           if sample else ""))
+        extra = ("; rejected candidate baseline(s): " + "; ".join(axes)
+                 if axes else "")
+        if "no config fingerprint" in rejected:
+            extra += (" — unfingerprinted records cannot verify the "
+                      "workload matches")
         if near_miss is not None:
-            extra += (f"; nearest candidate ({near_miss.get('ts', '?')}) "
-                      f"differs in: "
+            extra += (f"; nearest config candidate "
+                      f"({near_miss.get('ts', '?')}) differs in: "
                       f"{_config_diff(current.get('config'), near_miss.get('config'))}")
         return True, (f"skip: no prior record with {key} at "
                       f"intervals={current.get('intervals')} on host "

@@ -85,7 +85,10 @@ def run(runtimes=None, intervals=IV, alpha=8, n_envs=8, staleness=1,
     from repro.core import engine
 
     rows = []
-    for name in (runtimes or engine.runtime_names()):
+    # training runtimes only: the serving entry ("serve") shares the
+    # registry but has no interval semantics — its throughput is
+    # measured by benchmarks/serve_bench.py in req/s, not sps
+    for name in (runtimes or engine.training_runtime_names()):
         for backend in env_backends:
             # staleness reaches every runtime unmodified: the baselines
             # refuse K != 1 with a loud ValueError (sync is undelayed,

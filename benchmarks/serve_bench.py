@@ -1,0 +1,112 @@
+"""Serving throughput/latency bench: open-loop Poisson load against a
+PolicyServer (repro.serve.loadgen), recorded like every other bench.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench \
+        --requests 400 --rate 2000 --append-sps BENCH_sps.json
+
+The workload is the serving mirror of the default engine bench
+(catch x mlp) behind a ``runtime="serve"`` session. ``--append-sps``
+records ``serve_qps`` / ``serve_p50_ms`` / ``serve_p99_ms`` /
+``serve_mean_batch`` into BENCH_sps.json with the host fingerprint and
+a serve-specific config fingerprint — the workload fingerprint PLUS the
+serve block and the offered load (max_batch and the request rate both
+change what a QPS number means) — so benchmarks/check_sps.py gates
+``serve_qps`` exactly like the training sps keys: against the median of
+comparable prior records, on the same host, same config.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from repro import api
+from repro.serve import loadgen
+
+
+def serve_spec(max_batch: int = 32, max_queue: int = 1024,
+               timeout_ms: float = 20.0) -> api.ExperimentSpec:
+    """The default serving bench workload: the engine bench's
+    catch x mlp policy behind a ``runtime="serve"`` session."""
+    return api.ExperimentSpec(
+        env="catch",
+        policy="mlp",
+        optimizer={"name": "rmsprop", "kwargs": {"lr": 7e-4}},
+        algorithm="a2c",
+        runtime="serve",
+        hts={"alpha": 8, "n_envs": 8, "seed": 0},
+        serve={"max_batch": max_batch, "max_queue": max_queue,
+               "timeout_ms": timeout_ms})
+
+
+def config_fingerprint(spec: api.ExperimentSpec, requests: int,
+                       rate: float) -> dict:
+    """Everything that changes what a serve_* number means: the policy
+    workload, the serve block (dispatch width bounds occupancy), and
+    the offered load."""
+    fp = api.workload_fingerprint(spec)
+    fp["serve"] = spec.serve.canonical()
+    fp["load"] = {"requests": int(requests), "rate": float(rate)}
+    return fp
+
+
+def run(requests: int = 400, rate: float = 2000.0, seed: int = 0,
+        spec: api.ExperimentSpec | None = None,
+        checkpoint: str | None = None):
+    """Bench-CSV wrapper over repro.serve.loadgen.run: returns
+    ``(rows, spec)``, rows as ``(name, value, unit)``."""
+    spec = spec if spec is not None else serve_spec()
+    metrics = loadgen.run(spec, requests=requests, rate=rate, seed=seed,
+                          checkpoint=checkpoint)
+    units = {"serve_qps": "req/s", "serve_p50_ms": "ms",
+             "serve_p99_ms": "ms", "serve_mean_batch": "rows"}
+    return [(name, value, units[name])
+            for name, value in metrics.items()], spec
+
+
+def main() -> None:
+    from benchmarks.run import host_fingerprint
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=400)
+    ap.add_argument("--rate", type=float, default=2000.0,
+                    help="offered load, req/s (open-loop Poisson)")
+    ap.add_argument("--max-batch", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--spec", default=None, metavar="FILE",
+                    help="serve an ExperimentSpec JSON instead of the "
+                         "default catch x mlp workload")
+    ap.add_argument("--checkpoint", default=None, metavar="PATH",
+                    help="TrainState capsule base path (step_NNNNNNNN, "
+                         "no suffix); default: the spec's checkpoint "
+                         "dir's latest, else initial params")
+    ap.add_argument("--append-sps", default=None, metavar="FILE",
+                    help="append the result as a JSON line (e.g. "
+                         "BENCH_sps.json)")
+    args = ap.parse_args()
+    spec = (api.load(args.spec) if args.spec
+            else serve_spec(max_batch=args.max_batch))
+    t0 = time.time()
+    rows, spec = run(requests=args.requests, rate=args.rate,
+                     seed=args.seed, spec=spec,
+                     checkpoint=args.checkpoint)
+    print("name,value,unit")
+    for name, value, unit in rows:
+        print(f"{name},{value:.6g},{unit}", flush=True)
+    if args.append_sps:
+        record = {
+            "ts": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+            "bench": "serve",
+            "host": host_fingerprint(),
+            "config": config_fingerprint(spec, args.requests, args.rate),
+            "wall_s": round(time.time() - t0, 2),
+            "sps": {name: round(value, 2) for name, value, _ in rows},
+        }
+        with open(args.append_sps, "a") as f:
+            f.write(json.dumps(record) + "\n")
+        print(f"# appended to {args.append_sps}", file=sys.stderr,
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -14,6 +14,9 @@ one verb:
     api.save(spec, "spec.json")             # canonical JSON
     session = api.build(api.load("spec.json"))   # bit-identical rebuild
 
+    server = session.serve()                # policy-as-a-service
+    server.act(obs, seed=7)                 # (repro.serve, DESIGN.md §10)
+
 Every surface in the repo — examples/, benchmarks/, the unified CLI
 (``python -m repro.launch.run --spec spec.json``), the LLM launcher
 (repro.launch.train) and the checkpointing trainer — consumes this one
@@ -25,3 +28,4 @@ from repro.api.session import Session, build, runtime_names  # noqa: F401
 from repro.api.spec import (  # noqa: F401
     CheckpointSpec, ComponentSpec, ExperimentSpec, diff_canonical,
     dumps, from_dict, load, loads, save, workload_fingerprint)
+from repro.serve.config import ServeConfig  # noqa: F401

@@ -31,6 +31,7 @@ from __future__ import annotations
 
 from typing import Any, Callable, Dict, List, Optional
 
+import numpy as np
 import jax
 
 from repro import algorithms, envs, models, optim
@@ -184,6 +185,10 @@ def build(spec: ExperimentSpec, **runtime_overrides) -> "Session":
             raise ValueError(
                 f"policy {spec.policy.name!r} has no per-step apply "
                 f"function; it pairs only with the 'stream' runtime")
+        if rt_name in engine.SERVING_RUNTIMES:
+            # the serving entry is the one factory that consumes the
+            # spec's serve block (dispatch width / admission bound)
+            rkw.setdefault("serve", spec.serve)
         runtime = engine.make_runtime(rt_name, env, policy.apply, params,
                                       opt, cfg, **rkw)
     return Session(spec, runtime, env, policy, params, opt, cfg)
@@ -216,7 +221,10 @@ class Session:
 
     def _emit(self, interval: int, metrics: dict) -> None:
         payload = {"interval": int(interval), **metrics}
-        for fn in self._observers:
+        # iterate a snapshot: an observer that removes itself mid-
+        # dispatch (the one-shot-observer pattern) must not shift its
+        # successor out of this interval's iteration
+        for fn in list(self._observers):
             fn(payload)
 
     def _dispatch_from_result(self, out: RunResult, start: int) -> None:
@@ -268,6 +276,38 @@ class Session:
                                        else None))
         n = self.spec.intervals if n_intervals is None else n_intervals
         return trainer.fit(n, resume=resume)
+
+    # ------------------------------------------------------------ serve
+    def serve(self, checkpoint: Optional[str] = None, start: bool = True):
+        """Policy-as-a-service (repro.serve, DESIGN.md §10): a started
+        ``PolicyServer`` answering action requests for this session's
+        policy through a continuous-batching dispatch loop configured by
+        ``spec.serve``.
+
+        Parameters come from a ``TrainState`` checkpoint capsule:
+        ``checkpoint`` names one explicitly (the ``step_NNNNNNNN`` base
+        path, no suffix); otherwise the newest complete capsule under
+        ``spec.checkpoint.dir`` is used; with neither, the session's
+        initial parameters are served (smoke tests, untrained-baseline
+        comparisons). Works under any runtime — the capsule's leading
+        leaves ARE the policy params for every runtime and staleness
+        (checkpoint.io.restore_prefix) — but ``runtime="serve"`` builds
+        a session that can ONLY serve, for deployments that should
+        never accidentally train."""
+        from repro.checkpoint import io as ckpt_io
+        from repro.serve import PolicyServer
+        if checkpoint is None and self.spec.checkpoint.dir:
+            checkpoint = ckpt_io.latest(self.spec.checkpoint.dir)
+        params = self.params
+        if checkpoint is not None:
+            params = ckpt_io.restore_prefix(checkpoint, self.params)
+        if hasattr(self.runtime, "server"):      # the serve runtime
+            return self.runtime.server(params=params, start=start)
+        _, obs0 = self.env.reset(jax.random.key(0))
+        server = PolicyServer(self.policy.apply, params,
+                              obs_like=np.asarray(obs0),
+                              serve=self.spec.serve, seed=self.cfg.seed)
+        return server.start() if start else server
 
     # ------------------------------------------------------------ misc
     def describe(self) -> str:

@@ -33,6 +33,7 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, Optional, Union
 
 from repro.core.engine import HTSConfig
+from repro.serve.config import ServeConfig
 
 # HTSConfig knobs a spec may set. ``algorithm`` is excluded: it is a
 # first-class spec axis (``ExperimentSpec.algorithm``), and allowing it
@@ -123,6 +124,11 @@ class ExperimentSpec:
     params_seed: int = 0         # PRNG key for policy.init
     intervals: int = 100         # default run length (Session.run())
     checkpoint: CheckpointSpec = field(default_factory=CheckpointSpec)
+    # serving policy for Session.serve() (repro.serve): dispatch width,
+    # admission bound, dispatcher wait. Validated eagerly by ServeConfig
+    # itself; popped from workload_fingerprint (it changes serving
+    # latency, never what a training number means).
+    serve: ServeConfig = field(default_factory=ServeConfig)
 
     def __post_init__(self):
         object.__setattr__(self, "env", ComponentSpec.of(self.env, "env"))
@@ -135,6 +141,7 @@ class ExperimentSpec:
         object.__setattr__(self, "hts", dict(self.hts))
         object.__setattr__(self, "checkpoint",
                            CheckpointSpec.of(self.checkpoint))
+        object.__setattr__(self, "serve", ServeConfig.of(self.serve))
         self._validate()
 
     def _validate(self) -> None:
@@ -198,6 +205,7 @@ class ExperimentSpec:
             "params_seed": int(self.params_seed),
             "intervals": int(self.intervals),
             "checkpoint": self.checkpoint.canonical(),
+            "serve": self.serve.canonical(),
         }
 
     def replace(self, **changes) -> "ExperimentSpec":
@@ -247,6 +255,11 @@ def workload_fingerprint(spec: ExperimentSpec) -> dict:
     fp = spec.canonical()
     fp.pop("intervals")
     fp.pop("checkpoint")
+    # the serve block shapes request latency, not the training workload;
+    # keeping it out preserves comparability with every committed
+    # pre-serve record (benchmarks/serve_bench.py re-adds it to ITS
+    # records, where max_batch does change what a QPS number means)
+    fp.pop("serve")
     return fp
 
 

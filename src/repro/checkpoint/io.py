@@ -141,8 +141,50 @@ def restore(path: str, like: Any) -> Any:
 
 
 def latest(dirpath: str) -> str | None:
+    """Newest COMPLETE checkpoint in ``dirpath`` (newest ``step_*.json``
+    whose ``.npz`` half exists). A manifest without its array file is a
+    torn capsule — a kill between the two halves of a save/prune, or a
+    copy that dropped the npz — and selecting it would make resume
+    crash on np.load instead of falling back to the previous complete
+    checkpoint. Torn manifests are skipped, newest first."""
     d = Path(dirpath)
     if not d.exists():
         return None
-    cands = sorted(d.glob("step_*.json"))
-    return str(cands[-1].with_suffix("")) if cands else None
+    for p in sorted(d.glob("step_*.json"), reverse=True):
+        if p.with_suffix(".npz").exists():
+            return str(p.with_suffix(""))
+    return None
+
+
+def restore_prefix(path: str, like: Any) -> Any:
+    """Restore the FIRST ``len(leaves(like))`` leaves of a checkpoint
+    into the structure of ``like`` — the params-only read serving uses
+    (repro.serve) on a full ``TrainState`` capsule.
+
+    This leans on a structural invariant of the capsule formats, pinned
+    by tests/test_serve.py: params are the first field of every
+    update-rule state (``DelayedGradState.params`` for the HTS family,
+    element 0 of the baselines' tuples) and ``algo`` is the first field
+    of ``TrainState``, so in flatten order the policy parameters are
+    exactly the leading leaves — for every runtime and every staleness
+    (the K-ring lives in ``params_prev``, after them). Shapes and
+    dtypes are validated leaf-by-leaf against the template, so a capsule
+    whose layout does NOT start with ``like`` fails loudly here."""
+    path = Path(path)
+    data = np.load(path.with_suffix(".npz"))
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    if len(data.files) < len(leaves):
+        raise ValueError(
+            f"checkpoint {path.name} holds {len(data.files)} arrays but "
+            f"the prefix template needs {len(leaves)} leaves")
+    out = []
+    for i, ref in enumerate(leaves):
+        arr = data[f"leaf_{i}"]
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(
+                f"prefix leaf {i}: checkpoint shape {arr.shape} != "
+                f"template {tuple(ref.shape)} — the capsule's leading "
+                f"leaves are not this policy's parameters (different "
+                f"model config?)")
+        out.append(jnp.asarray(arr).astype(ref.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -33,3 +33,12 @@ def obs_keys(master, env_ids, step):
 def sample_action(key, logits):
     """Categorical sample — the only stochastic op in the rollout path."""
     return jax.random.categorical(key, logits.astype(jnp.float32), axis=-1)
+
+
+def request_key(master, request_seed):
+    """Key for one serving request (repro.serve) — the inference mirror
+    of ``obs_key``: a pure function of (server_seed, request_seed), so
+    which dispatch batch a request lands in, what it shares that batch
+    with, and in what order the admission queue released it cannot
+    affect the sampled action. ``request_seed`` may be traced."""
+    return jax.random.fold_in(master, request_seed)

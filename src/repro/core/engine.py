@@ -29,6 +29,9 @@ This module pins down the scheduling side:
                 over the mesh 'data' axis, delayed grads all-reduced)
       sync      conventional alternating rollout/update baseline
       async     stale-policy baseline (behavior lags k updates)
+      serve     policy-as-a-service inference (repro.serve): same
+                construction contract, but answers action requests —
+                run/run_from raise; drive it via Session.serve()
 
 All runtime factories share one signature:
 
@@ -332,7 +335,14 @@ _LAZY: Dict[str, str] = {
     "sharded": "repro.core.sharded_runtime",
     "sync": "repro.core.baselines",
     "async": "repro.core.baselines",
+    "serve": "repro.serve.runtime",
 }
+
+# registry entries that share the construction contract but answer
+# requests instead of running training intervals (their run/state/
+# run_from raise) — training-only surfaces (the SPS sweep, the
+# equivalence/continuation matrices) iterate training_runtime_names()
+SERVING_RUNTIMES = frozenset({"serve"})
 
 
 def register_runtime(name: str):
@@ -356,6 +366,12 @@ def get_runtime(name: str) -> Callable[..., Runtime]:
 
 def runtime_names():
     return sorted(set(_REGISTRY) | set(_LAZY))
+
+
+def training_runtime_names():
+    """Registry names whose run/run_from execute training intervals —
+    everything but the serving entries (repro.serve.runtime)."""
+    return [n for n in runtime_names() if n not in SERVING_RUNTIMES]
 
 
 def make_runtime(name: str, env, policy_apply, params, opt, cfg: HTSConfig,

@@ -1,12 +1,25 @@
-"""Serving launcher: batched prefill + decode for any assigned arch.
+"""Serving launcher — two modes, one command.
+
+**Policy-as-a-service** (``--spec``): serve an RL policy from an
+ExperimentSpec through the continuous-batching PolicyServer
+(repro.serve, DESIGN.md §10), loading the newest TrainState checkpoint
+capsule when the spec (or ``--checkpoint``) names one, then drive the
+open-loop Poisson load generator against it and report p50/p99 + QPS:
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        --spec examples/specs/quickstart.json \
+        --checkpoint ckpts/step_00000040 --requests 500 --rate 2000
+
+**LLM decode** (``--arch``, the historical mode): batched prefill +
+per-token serve_step for any assigned arch:
 
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-7b --reduced \
         --batch 4 --prompt-len 16 --gen 16
 
-This is the actor-side hot path of HTS-RL at scale: prefill builds the
-caches, then one serve_step per generated token (greedy or sampled with
-executor-style per-(request, step) keys — the same determinism contract
-as the RL actors).
+Both are the actor-side hot path of HTS-RL at scale, with the same
+determinism contract as the RL actors: executor-style keys that are
+pure functions of the request identity, so batch composition can never
+change an answer.
 """
 from __future__ import annotations
 
@@ -21,8 +34,42 @@ from repro.core import determinism, learner
 from repro.models import backbone
 
 
+def serve_policy(args) -> None:
+    """--spec mode: build the session, serve it, drive the load gen."""
+    from repro import api
+    from repro.serve import loadgen
+
+    spec = api.load(args.spec)
+    if args.max_batch is not None:
+        spec = spec.replace(serve={"max_batch": args.max_batch,
+                                   "max_queue": spec.serve.max_queue,
+                                   "timeout_ms": spec.serve.timeout_ms})
+    print(f"# serving {spec.env.name} x {spec.policy.name} "
+          f"(max_batch={spec.serve.max_batch}, "
+          f"checkpoint={args.checkpoint or spec.checkpoint.dir or 'none'})",
+          flush=True)
+    metrics = loadgen.run(spec, requests=args.requests, rate=args.rate,
+                          seed=args.seed, checkpoint=args.checkpoint)
+    for name, value in metrics.items():
+        print(f"{name}={value:.6g}", flush=True)
+
+
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--spec", default=None, metavar="FILE",
+                    help="serve an RL policy from this ExperimentSpec "
+                         "JSON (policy-as-a-service mode)")
+    ap.add_argument("--checkpoint", default=None, metavar="PATH",
+                    help="with --spec: TrainState capsule base path "
+                         "(default: latest under the spec's checkpoint "
+                         "dir, else initial params)")
+    ap.add_argument("--requests", type=int, default=500,
+                    help="with --spec: load-generator request count")
+    ap.add_argument("--rate", type=float, default=2000.0,
+                    help="with --spec: offered load, req/s")
+    ap.add_argument("--max-batch", type=int, default=None,
+                    help="with --spec: override the spec's "
+                         "serve.max_batch")
     ap.add_argument("--arch", default="starcoder2-3b")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
@@ -31,6 +78,10 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    if args.spec:
+        serve_policy(args)
+        return
 
     cfg = get_config(args.arch)
     if args.reduced:

@@ -1,0 +1,23 @@
+"""Policy-as-a-service (DESIGN.md §10): serve trained policies through
+the same batched-dispatch discipline that makes training fast.
+
+  * ``ServeConfig``   — the spec block (max_batch / max_queue /
+    timeout_ms), validated eagerly (repro.api.ExperimentSpec.serve);
+  * ``PolicyServer``  — admission queue + persistent dispatcher thread
+    gathering ready requests into one padded fixed-shape donated
+    ``actor_forward`` dispatch, deterministic per-request seeding;
+  * ``ServeRuntime``  — the ``runtime="serve"`` engine registry entry
+    (imported lazily by the engine; constructing it through
+    ``repro.api.build`` is the normal path: ``Session.serve()``).
+
+Quickstart:
+
+    spec = api.ExperimentSpec(runtime="serve", env="catch",
+                              checkpoint={"dir": "ckpts"},
+                              serve={"max_batch": 64})
+    server = api.build(spec).serve()        # loads ckpts' latest capsule
+    result = server.act(obs, seed=7)        # -> ActionResult
+"""
+from repro.serve.config import ServeConfig                      # noqa: F401
+from repro.serve.server import (ActionResult, PolicyServer,     # noqa: F401
+                                ServerClosed)

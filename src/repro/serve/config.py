@@ -1,0 +1,62 @@
+"""ServeConfig: the serving-policy block of an ExperimentSpec.
+
+Validated eagerly at construction (like every other spec axis —
+repro.api.spec): a bad ``max_batch`` fails when the spec is built, with
+the field named, never as a shape error inside the dispatcher thread.
+
+  * ``max_batch``  — the fixed dispatch width: every admitted batch is
+    padded to exactly this many rows, so the serving loop compiles ONE
+    program shape (the batched-stepper discipline of DESIGN.md §2.1,
+    turned toward inference).
+  * ``max_queue``  — admission-queue bound. A full queue rejects
+    (``PolicyServer.submit(block=False)``) or backpressures
+    (``block=True``) instead of growing without bound.
+  * ``timeout_ms`` — how long the dispatcher waits for the FIRST
+    request of a batch before re-checking for shutdown. It is NOT a
+    batch-fill delay: once one request is admitted, whatever else is
+    already queued (up to ``max_batch``) rides the same dispatch and
+    the batch leaves immediately — continuous batching, no artificial
+    latency in exchange for occupancy.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    max_batch: int = 32
+    max_queue: int = 1024
+    timeout_ms: float = 20.0
+
+    def __post_init__(self):
+        if self.max_batch < 1:
+            raise ValueError(
+                f"serve.max_batch must be >= 1, got {self.max_batch}")
+        if self.max_queue < 1:
+            raise ValueError(
+                f"serve.max_queue must be >= 1, got {self.max_queue}")
+        if self.timeout_ms <= 0:
+            raise ValueError(
+                f"serve.timeout_ms must be > 0, got {self.timeout_ms}")
+
+    def canonical(self) -> dict:
+        return {"max_batch": int(self.max_batch),
+                "max_queue": int(self.max_queue),
+                "timeout_ms": float(self.timeout_ms)}
+
+    @staticmethod
+    def of(value) -> "ServeConfig":
+        if isinstance(value, ServeConfig):
+            return value
+        if value is None:
+            return ServeConfig()
+        if isinstance(value, dict):
+            unknown = set(value) - {"max_batch", "max_queue", "timeout_ms"}
+            if unknown:
+                raise ValueError(
+                    f"unknown serve field(s) {sorted(unknown)}; known: "
+                    f"['max_batch', 'max_queue', 'timeout_ms']")
+            return ServeConfig(**value)
+        raise TypeError(f"serve must be a dict or ServeConfig, got "
+                        f"{type(value).__name__}")

@@ -1,0 +1,79 @@
+"""Open-loop Poisson load generator for a PolicyServer session.
+
+Open-loop means arrivals follow their own clock regardless of
+completions — the arrival process does not slow down when the server
+falls behind, so queueing delay shows up IN the latency numbers instead
+of silently throttling the load (closed-loop generators hide exactly
+the overload behavior a p99 is supposed to expose). Latency for request
+i runs from its SCHEDULED arrival to the resolution of its future:
+admission wait + queue + dispatch + scatter.
+
+Deterministic by construction: arrival gaps come from a seeded
+generator, observations from the env's reset distribution under seeded
+keys, and request seeds are the request index — replaying the generator
+replays the exact action stream (the serving determinism contract,
+DESIGN.md §10).
+
+``repro.launch.serve --spec`` and ``benchmarks/serve_bench.py`` are
+both thin wrappers over ``run``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import numpy as np
+import jax
+
+
+def run(spec, requests: int = 400, rate: float = 2000.0, seed: int = 0,
+        checkpoint: Optional[str] = None, warmup: int = 64) -> dict:
+    """Build ``spec``'s session, serve it (loading ``checkpoint`` or the
+    spec's newest capsule), drive ``requests`` Poisson arrivals at
+    ``rate`` req/s, and return::
+
+        {"serve_qps": ..., "serve_p50_ms": ..., "serve_p99_ms": ...,
+         "serve_mean_batch": ...}
+    """
+    from repro import api
+    session = api.build(spec)
+    server = session.serve(checkpoint=checkpoint)
+    try:
+        # distinct observations from the env's reset distribution,
+        # pre-generated so generation cost never pollutes latency
+        n_obs = min(max(requests, 1), 512)
+        _, obs = jax.vmap(session.env.reset)(
+            jax.random.split(jax.random.key(seed), n_obs))
+        obs = np.asarray(obs)
+        for i in range(min(warmup, requests)):      # steady-state warmup
+            server.act(obs[i % n_obs], seed=1_000_000 + i)
+
+        rng = np.random.RandomState(seed)
+        arrive = np.cumsum(rng.exponential(1.0 / rate, size=requests))
+        done_at = np.zeros(requests)
+        futures = []
+        t0 = time.perf_counter()
+        for i in range(requests):
+            delay = (t0 + arrive[i]) - time.perf_counter()
+            if delay > 0:
+                time.sleep(delay)
+            fut = server.submit(obs[i % n_obs], seed=i)
+
+            def _done(_fut, i=i):
+                done_at[i] = time.perf_counter()
+            fut.add_done_callback(_done)
+            futures.append(fut)
+        for fut in futures:
+            fut.result(timeout=120)
+        stats = server.stats()
+    finally:
+        server.stop()
+    latency_ms = (done_at - (t0 + arrive)) * 1e3
+    wall = max(float(done_at.max()) - t0, 1e-9)
+    p50, p99 = np.percentile(latency_ms, [50, 99])
+    return {
+        "serve_qps": requests / wall,
+        "serve_p50_ms": float(p50),
+        "serve_p99_ms": float(p99),
+        "serve_mean_batch": stats["mean_batch"],
+    }

@@ -1,0 +1,76 @@
+"""The ``runtime="serve"`` engine entry.
+
+A serving runtime shares the engine's construction contract — the
+``factory(env, policy_apply, params, opt, cfg, **kwargs)`` signature,
+registry resolution, spec-driven builds through ``repro.api`` — but NOT
+its execution contract: it answers action requests, it does not run
+training intervals. ``run``/``state``/``run_from`` therefore raise a
+TypeError pointing at ``Session.serve()`` instead of pretending an
+inference loop has interval semantics (``engine.training_runtime_names``
+is the enumeration every training-only surface — the SPS sweep, the
+equivalence/continuation matrices — iterates instead).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+from repro.core.engine import HTSConfig, register_runtime
+from repro.envs.interfaces import Env
+from repro.serve.config import ServeConfig
+from repro.serve.server import PolicyServer
+
+
+@register_runtime("serve")
+class ServeRuntime:
+    name = "serve"
+
+    def __init__(self, env: Env, policy_apply: Callable, params, opt,
+                 cfg: HTSConfig, serve: Optional[ServeConfig] = None):
+        self.env = env
+        self.policy_apply = policy_apply
+        self.params = params
+        self.opt = opt                # unused: serving never updates
+        self.cfg = cfg
+        self.serve_config = serve if serve is not None else ServeConfig()
+
+    def init(self) -> None:
+        pass
+
+    # ------------------------------------------------ serving surface
+    def server(self, params=None, start: bool = True) -> PolicyServer:
+        """Build (and by default start) a PolicyServer over ``params``
+        (default: the construction-time parameters — typically restored
+        from a checkpoint capsule by Session.serve)."""
+        import jax
+        import numpy as np
+        # obs template from the env's reset distribution: serving pads
+        # with zero rows of exactly this shape/dtype
+        _, obs0 = self.env.reset(jax.random.key(0))
+        srv = PolicyServer(
+            self.policy_apply,
+            self.params if params is None else params,
+            obs_like=np.asarray(obs0),
+            serve=self.serve_config, seed=self.cfg.seed)
+        return srv.start() if start else srv
+
+    # ----------------------------------- training contract: refuse loud
+    def _no_training(self, what: str):
+        raise TypeError(
+            f"the 'serve' runtime answers action requests, not training "
+            f"intervals — {what} is not available; use Session.serve() "
+            f"(or a training runtime: "
+            f"{_training_names()})")
+
+    def run(self, n_intervals: int):
+        self._no_training("run")
+
+    def state(self):
+        self._no_training("state")
+
+    def run_from(self, state, n_intervals: int, finalize: bool = True):
+        self._no_training("run_from")
+
+
+def _training_names():
+    from repro.core import engine
+    return engine.training_runtime_names()

@@ -1,0 +1,285 @@
+"""PolicyServer: continuous-batching policy inference.
+
+The serving mirror of the training hot path (DESIGN.md §2.1): where the
+host runtime's stepper gathers ready (env, step, action) requests into
+one padded fixed-shape dispatch, the serving loop gathers ready *action
+requests* into one padded fixed-shape donated ``actor_forward``
+dispatch:
+
+  submit() --> admission queue --> dispatcher thread
+                                     gather <= max_batch ready requests
+                                     pad to exactly max_batch rows
+                                     ONE jitted actor_forward (donated)
+                                     scatter actions to futures
+
+Determinism contract (the executor discipline of core/determinism.py,
+turned toward inference): the sampling key for a request is a pure
+function of ``(server seed, request seed)`` — ``request_key`` — and the
+dispatched program is row-independent (``actor_forward`` is a vmapped
+per-row computation), so the SAME request yields the SAME action
+bit-exactly regardless of batch composition, padding, queue order, or
+arrival timing (tests/test_serve.py). Padding rows are zero
+observations whose sampled actions are simply discarded; they cannot
+leak into real rows for the same reason batch composition cannot.
+
+The dispatch is fixed-shape: every batch is padded to ``max_batch``
+rows, so the serving loop compiles exactly one program, and the obs and
+seed slabs are donated (they are rebuilt per dispatch; the params are
+never donated — every dispatch reads them).
+
+Failure discipline mirrors the host runtime's pools: a dispatcher death
+fails every pending and future request with the original traceback
+instead of hanging clients on futures that will never resolve.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import traceback
+from concurrent.futures import Future
+from dataclasses import dataclass
+from typing import Callable, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import determinism
+from repro.core.rollout import actor_forward
+from repro.serve.config import ServeConfig
+
+_SHUTDOWN = object()
+
+
+class ServerClosed(RuntimeError):
+    """Raised by submit/act on a stopped or dead server."""
+
+
+@dataclass(frozen=True)
+class ActionResult:
+    """One answered request."""
+    action: int
+    logprob: float          # behavior logprob of the sampled action
+    batch_size: int         # occupancy of the dispatch that served it
+
+
+@dataclass
+class _Request:
+    obs: np.ndarray
+    seed: int
+    future: Future
+
+
+class PolicyServer:
+    """Serve ``policy_apply(params, obs) -> (logits, value)`` through a
+    continuous-batching loop.
+
+    * ``obs_like``  — a single-observation template (shape + dtype);
+      submitted observations must match it.
+    * ``seed``      — the server-level seed (HTSConfig.seed of the spec
+      that built it): ``request_key(master_key(seed), request_seed)``
+      is the complete source of sampling randomness.
+
+    Use as a context manager, or ``start()``/``stop()`` explicitly.
+    ``start=False`` construction (and ``stop(drain=False)``) leaves the
+    admission queue accumulating without a dispatcher — how the tests
+    force specific batch compositions.
+    """
+
+    def __init__(self, policy_apply: Callable, params, obs_like,
+                 serve: Optional[ServeConfig] = None, seed: int = 0):
+        self.serve = serve if serve is not None else ServeConfig()
+        self.policy_apply = policy_apply
+        self.params = params
+        obs_like = np.asarray(obs_like)
+        self._obs_shape = tuple(obs_like.shape)
+        self._obs_dtype = obs_like.dtype
+        self._master = determinism.master_key(seed)
+        self._queue: "queue.Queue" = queue.Queue(self.serve.max_queue)
+        self._thread: Optional[threading.Thread] = None
+        self._stopping = threading.Event()
+        self._failure: Optional[BaseException] = None
+        self._failure_tb: Optional[str] = None
+        self._lock = threading.Lock()
+        # reporting-only counters (under _lock)
+        self.n_requests = 0
+        self.n_dispatches = 0
+        self.n_rows = 0           # sum of dispatch occupancies
+        self.n_rejected = 0
+        self._program = self._build()
+
+    # ------------------------------------------------------------ build
+    def _build(self) -> Callable:
+        papply, master = self.policy_apply, self._master
+        B = self.serve.max_batch
+
+        def prog(params, obs, seeds):
+            keys = jax.vmap(
+                lambda s: determinism.request_key(master, s))(seeds)
+            return actor_forward(papply, params, obs, keys)
+
+        # the seed slab is donated (it is rebuilt per dispatch and its
+        # buffer is reusable for the action row); the obs slab is not —
+        # policies reshape it before producing any like-shaped output,
+        # so XLA would ignore the donation and warn on every dispatch
+        jprog = jax.jit(prog, donate_argnums=(2,))
+        # warm the one compiled shape up front so the first request does
+        # not pay compilation inside its latency
+        obs0 = jnp.zeros((B,) + self._obs_shape, self._obs_dtype)
+        seeds0 = jnp.zeros((B,), jnp.int32)
+        jax.block_until_ready(jprog(self.params, obs0, seeds0))
+        return jprog
+
+    # -------------------------------------------------------- lifecycle
+    def start(self) -> "PolicyServer":
+        if self._thread is not None:
+            raise ServerClosed("server already started")
+        self._thread = threading.Thread(target=self._loop,
+                                        name="serve-dispatcher",
+                                        daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        """Drain: requests admitted before stop() are still answered."""
+        if self._thread is None:
+            return
+        self._stopping.set()
+        try:
+            self._queue.put_nowait(_SHUTDOWN)
+        except queue.Full:
+            pass      # the loop notices _stopping at its next timeout tick
+        self._thread.join()
+        self._thread = None
+        # fail anything that raced its way in behind the sentinel
+        self._fail_pending(ServerClosed("server stopped"))
+
+    def __enter__(self) -> "PolicyServer":
+        return self.start() if self._thread is None else self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    @property
+    def dead(self) -> bool:
+        return self._failure is not None
+
+    # -------------------------------------------------------- admission
+    def submit(self, obs, seed: int = 0, block: bool = True) -> Future:
+        """Admit one request; the Future resolves to an ActionResult.
+        ``block=False`` raises ``queue.Full`` instead of backpressuring
+        when the admission queue is at ``max_queue``."""
+        if self._failure is not None:
+            raise ServerClosed(
+                f"serve dispatcher died: {self._failure!r}") \
+                from self._failure
+        if self._stopping.is_set():
+            # note an UNSTARTED server does accept submits — the queue
+            # just accumulates until start() (how tests stage specific
+            # batch compositions); only a stopping server admits nothing
+            raise ServerClosed("server is stopping")
+        obs = np.asarray(obs, self._obs_dtype)
+        if tuple(obs.shape) != self._obs_shape:
+            raise ValueError(
+                f"request obs shape {tuple(obs.shape)} != served env's "
+                f"obs shape {self._obs_shape}")
+        req = _Request(obs=obs, seed=int(seed), future=Future())
+        try:
+            self._queue.put(req, block=block)
+        except queue.Full:
+            with self._lock:
+                self.n_rejected += 1
+            raise
+        with self._lock:
+            self.n_requests += 1
+        return req.future
+
+    def act(self, obs, seed: int = 0,
+            timeout: Optional[float] = None) -> ActionResult:
+        """Synchronous submit + wait."""
+        return self.submit(obs, seed=seed).result(timeout=timeout)
+
+    # ------------------------------------------------------- dispatcher
+    def _gather(self) -> Optional[list]:
+        """Block up to timeout_ms for the first ready request, then
+        drain whatever else is already queued, up to max_batch — no
+        waiting for the batch to fill."""
+        try:
+            first = self._queue.get(timeout=self.serve.timeout_ms / 1e3)
+        except queue.Empty:
+            return None
+        if first is _SHUTDOWN:
+            return []
+        batch = [first]
+        while len(batch) < self.serve.max_batch:
+            try:
+                req = self._queue.get_nowait()
+            except queue.Empty:
+                break
+            if req is _SHUTDOWN:
+                self._stopping.set()
+                break
+            batch.append(req)
+        return batch
+
+    def _dispatch(self, batch: list) -> None:
+        B = self.serve.max_batch
+        obs = np.zeros((B,) + self._obs_shape, self._obs_dtype)
+        seeds = np.zeros((B,), np.int32)
+        for i, req in enumerate(batch):
+            obs[i] = req.obs
+            seeds[i] = req.seed
+        actions, logprobs = self._program(
+            self.params, jnp.asarray(obs), jnp.asarray(seeds))
+        actions = np.asarray(actions)
+        logprobs = np.asarray(logprobs)
+        with self._lock:
+            self.n_dispatches += 1
+            self.n_rows += len(batch)
+        for i, req in enumerate(batch):
+            req.future.set_result(ActionResult(
+                action=int(actions[i]), logprob=float(logprobs[i]),
+                batch_size=len(batch)))
+
+    def _loop(self) -> None:
+        batch = None
+        try:
+            while True:
+                batch = self._gather()
+                if batch is None:          # timeout tick
+                    if self._stopping.is_set():
+                        return
+                    continue
+                if batch:
+                    self._dispatch(batch)
+                if self._stopping.is_set() and self._queue.empty():
+                    return
+        except BaseException as e:          # noqa: BLE001 — fail loudly
+            self._failure = e
+            self._failure_tb = traceback.format_exc()
+            # the in-flight batch is already off the queue: its futures
+            # must be failed here or clients hang on them forever
+            for req in batch or ():
+                if not req.future.done():
+                    req.future.set_exception(e)
+            self._fail_pending(e)
+
+    def _fail_pending(self, exc: BaseException) -> None:
+        while True:
+            try:
+                req = self._queue.get_nowait()
+            except queue.Empty:
+                return
+            if req is not _SHUTDOWN and not req.future.done():
+                req.future.set_exception(exc)
+
+    # ------------------------------------------------------------ stats
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "n_requests": self.n_requests,
+                "n_dispatches": self.n_dispatches,
+                "n_rejected": self.n_rejected,
+                "mean_batch": (self.n_rows / self.n_dispatches
+                               if self.n_dispatches else 0.0),
+            }

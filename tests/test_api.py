@@ -84,7 +84,7 @@ def test_dumps_is_canonical_and_stable():
     d = json.loads(s)
     assert set(d) == {"env", "policy", "optimizer", "algorithm",
                       "runtime", "hts", "params_seed", "intervals",
-                      "checkpoint"}
+                      "checkpoint", "serve"}
 
 
 def test_committed_spec_files_are_canonical():
@@ -207,6 +207,26 @@ def test_fit_threads_observer_through_trainer(tmp_path):
     report2 = session2.fit(6, resume=True)
     assert report2.resumed_from == 4
     assert seen2 == [4, 5]
+
+
+def test_observer_self_removal_does_not_skip_successor():
+    """The one-shot-observer pattern: an observer that calls
+    remove_observer(itself) mid-dispatch must not shift its successor
+    out of THIS interval's iteration (dispatch iterates a snapshot)."""
+    session = api.build(_bench_spec("host"))
+    fired = []
+
+    def one_shot(m):
+        fired.append(("one_shot", m["interval"]))
+        session.remove_observer(one_shot)
+
+    session.on_interval(one_shot)
+    session.on_interval(lambda m: fired.append(("tail", m["interval"])))
+    session.run()
+    # one_shot fires exactly once; tail sees EVERY interval including
+    # interval 0, the dispatch one_shot removed itself during
+    assert fired.count(("one_shot", 0)) == 1
+    assert [i for tag, i in fired if tag == "tail"] == list(range(INTERVALS))
 
 
 # ------------------------------------------------------- stream runtime

@@ -138,6 +138,47 @@ def test_device_rows_gate_independently():
     assert not ok and "REGRESSION" in msg
 
 
+def test_host_mismatch_skip_names_the_axis():
+    """The 1cpu-vs-2cpu drift bug: when every candidate baseline is
+    rejected because the runner's host fingerprint changed, the skip
+    message must NAME that axis with both values — not print a generic
+    "no comparable record" while the gate silently stops gating."""
+    records = [_rec(100.0, host="linux-x86_64-2cpu")] * 3 + \
+              [_rec(95.0, host="linux-x86_64-1cpu")]
+    ok, msg = check_sps.check(records, KEY, 0.30)
+    assert ok and msg.startswith("skip")
+    assert "host fingerprint" in msg
+    assert "'linux-x86_64-1cpu' != 'linux-x86_64-2cpu'" in msg
+
+
+def test_intervals_mismatch_skip_names_the_axis():
+    records = [_rec(100.0, intervals=48), _rec(95.0, intervals=12)]
+    ok, msg = check_sps.check(records, KEY, 0.30)
+    assert ok and msg.startswith("skip")
+    assert "intervals" in msg and "12 != 48" in msg
+
+
+def test_gate_anchors_on_newest_record_with_key():
+    """BENCH_sps.json interleaves benches (engine sweep, serve bench):
+    the gated measurement is the newest record CARRYING the key, not
+    records[-1] — a serve record appended after the sweep must not turn
+    the engine gate into a silent skip."""
+    serve_rec = {"intervals": None, "host": "h1", "bench": "serve",
+                 "config": {"load": {"rate": 2000.0}},
+                 "sps": {"serve_qps": 2500.0}}
+    records = [_rec(100.0), _rec(60.0), serve_rec]
+    ok, msg = check_sps.check(records, KEY, 0.30)
+    assert not ok and "REGRESSION" in msg          # 60 still gated
+    ok, msg = check_sps.check([_rec(100.0), _rec(95.0), serve_rec],
+                              KEY, 0.30)
+    assert ok and "baseline=100.0" in msg
+    # and the serve key gates against serve records only
+    ok, msg = check_sps.check(records + [dict(serve_rec,
+                                              sps={"serve_qps": 2400.0})],
+                              "serve_qps", 0.30)
+    assert ok and "baseline=2500.0" in msg
+
+
 def test_live_bench_file_parses_and_gate_runs():
     """The committed BENCH_sps.json stays loadable end-to-end."""
     path = os.path.join(os.path.dirname(__file__), "..", "BENCH_sps.json")

@@ -79,10 +79,10 @@ def _run_split(rt, split, tmp_path, template_rt=None):
 
 
 @pytest.mark.parametrize("split", SPLITS, ids=lambda s: f"{s[0]}+{s[1]}")
-@pytest.mark.parametrize("name", engine.runtime_names())
+@pytest.mark.parametrize("name", engine.training_runtime_names())
 def test_partition_with_checkpoint_roundtrip(name, split, tmp_path):
-    """For every registered runtime: run(4) ≡ run_from segments with a
-    save/restore round-trip at each boundary, bit-exactly."""
+    """For every registered training runtime: run(4) ≡ run_from segments
+    with a save/restore round-trip at each boundary, bit-exactly."""
     straight = _make(name).run(TOTAL)
     out, rewards = _run_split(_make(name), split, tmp_path)
     assert _maxdiff(straight.params, out.params) == 0.0
@@ -186,6 +186,21 @@ def test_trainer_kill_and_resume(name, tmp_path):
     one_shot = evaluate.episode_returns_from_stream(
         straight.rewards.reshape(-1, 4), straight.dones.reshape(-1, 4))
     np.testing.assert_array_equal(one_shot, report.episode_returns)
+
+
+def test_trainer_resume_recovers_from_torn_checkpoint(tmp_path):
+    """A kill between a capsule's two file writes leaves a manifest
+    without its npz. Resume must fall back to the previous COMPLETE
+    checkpoint and still reach the exact straight-run parameters —
+    not crash loading the torn one."""
+    straight = _make("mesh").run(5)
+    ckpt_dir = str(tmp_path / "ck")
+    Trainer(_make("mesh"), checkpoint_dir=ckpt_dir, ckpt_every=1).fit(3)
+    os.remove(os.path.join(ckpt_dir, "step_00000003.npz"))   # tear newest
+    report = Trainer(_make("mesh"), checkpoint_dir=ckpt_dir,
+                     ckpt_every=1).fit(5, resume=True)
+    assert report.resumed_from == 2
+    assert _maxdiff(straight.params, report.params) == 0.0
 
 
 def test_run_from_without_finalize_stays_midstream(tmp_path):

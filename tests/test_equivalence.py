@@ -60,10 +60,12 @@ def test_host_mesh_sharded_bitexact():
                                       outs[name].dones, err_msg=name)
 
 
-@pytest.mark.parametrize("name", engine.runtime_names())
+@pytest.mark.parametrize("name", engine.training_runtime_names())
 def test_registry_executes_every_runtime(name):
-    """Every registered runtime constructs from the same factory signature
-    and satisfies the Runtime protocol + RunResult contract."""
+    """Every registered training runtime constructs from the same factory
+    signature and satisfies the Runtime protocol + RunResult contract.
+    (The "serve" entry shares the factory contract but answers requests
+    instead of running intervals — covered by tests/test_serve.py.)"""
     env1, cfg, papply, params, opt = _setup()
     rt = engine.make_runtime(name, env1, papply, params, opt, cfg)
     assert isinstance(rt, engine.Runtime)

@@ -23,6 +23,44 @@ def test_checkpoint_roundtrip(tmp_path):
     assert ckpt.latest(str(tmp_path)) == path
 
 
+def test_latest_skips_torn_capsule(tmp_path):
+    """A manifest whose .npz half is missing (kill between the two file
+    writes, or a partial copy) must not be selected by latest() —
+    resume falls back to the previous COMPLETE checkpoint."""
+    import os
+    tree = {"w": jnp.arange(4.0)}
+    ckpt.save(str(tmp_path / "step_00000001"), tree, {})
+    ckpt.save(str(tmp_path / "step_00000002"), tree, {})
+    os.remove(tmp_path / "step_00000002.npz")      # tear the newest
+    assert ckpt.latest(str(tmp_path)) == str(tmp_path / "step_00000001")
+
+
+def test_latest_returns_none_when_only_torn(tmp_path):
+    import os
+    ckpt.save(str(tmp_path / "step_00000001"), {"w": jnp.ones(2)}, {})
+    os.remove(tmp_path / "step_00000001.npz")
+    assert ckpt.latest(str(tmp_path)) is None
+
+
+def test_restore_prefix_reads_leading_leaves(tmp_path):
+    """restore_prefix pulls the FIRST len(like) leaves of a larger
+    capsule — the params-only read serving relies on — and fails loudly
+    when the leading leaves do not match the template's shapes."""
+    params = {"w": jnp.arange(6.0).reshape(2, 3), "b": jnp.ones(3)}
+    dg = delayed_grad.init(params, adam(1e-3))
+    path = str(tmp_path / "step_00000001")
+    ckpt.save(path, dg, {})
+    got = ckpt.restore_prefix(path, jax.eval_shape(lambda: params))
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    with pytest.raises(ValueError, match="leading leaves"):
+        ckpt.restore_prefix(path, {"w": jnp.zeros((5, 5))})
+    with pytest.raises(ValueError, match="prefix template needs"):
+        ckpt.restore_prefix(path, dict(dg_extra=jnp.zeros(1),
+                                       **{f"x{i}": jnp.zeros(1)
+                                          for i in range(40)}))
+
+
 def test_checkpoint_shape_mismatch_raises(tmp_path):
     path = str(tmp_path / "step_00000001")
     ckpt.save(path, {"w": jnp.ones((2, 2))})

@@ -1,0 +1,314 @@
+"""Policy-as-a-service (repro.serve): the serving determinism contract.
+
+The load-bearing claim mirrors the training executor discipline: a
+request's sampling key is a pure function of (server seed, request
+seed), and the dispatched program is row-independent, so the SAME
+request yields the SAME action BIT-EXACTLY regardless of batch
+composition, queue order, padding, or arrival timing. Plus the service
+plumbing around it: the engine registry entry that refuses training,
+Session.serve() loading checkpoint capsules from any runtime's format,
+admission backpressure, and the fail-loud dispatcher discipline.
+"""
+import queue
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import api, models
+from repro.core import engine
+from repro.core.engine import HTSConfig
+from repro.core.rollout import actor_forward
+from repro.core import determinism
+from repro.envs import catch
+from repro.optim import rmsprop
+from repro.serve import ActionResult, PolicyServer, ServeConfig, ServerClosed
+
+
+def _setup(seed=3):
+    env1 = catch.make()
+    cfg = HTSConfig(alpha=5, n_envs=4, seed=seed)
+    policy = models.get_policy("mlp", env1)
+    params = policy.init(jax.random.key(0))
+    opt = rmsprop(7e-4, eps=1e-5)
+    return env1, cfg, policy.apply, params, opt
+
+
+def _server(max_batch=8, max_queue=64, timeout_ms=50.0, seed=3):
+    env1, cfg, papply, params, opt = _setup(seed)
+    _, obs0 = env1.reset(jax.random.key(0))
+    srv = PolicyServer(papply, params, obs_like=np.asarray(obs0),
+                       serve=ServeConfig(max_batch=max_batch,
+                                         max_queue=max_queue,
+                                         timeout_ms=timeout_ms),
+                       seed=seed)
+    return srv, env1, papply, params
+
+
+def _obs(env1, n, seed=0):
+    _, obs = jax.vmap(env1.reset)(
+        jax.random.split(jax.random.key(seed), n))
+    return np.asarray(obs)
+
+
+# -------------------------------------------------------- registry entry
+def test_serve_is_registered_but_not_a_training_runtime():
+    assert "serve" in engine.runtime_names()
+    assert "serve" not in engine.training_runtime_names()
+    assert set(engine.training_runtime_names()) < set(engine.runtime_names())
+
+
+def test_serve_runtime_refuses_training_loudly():
+    """run/state/run_from raise a TypeError that names the serving
+    surface instead of pretending inference has interval semantics."""
+    env1, cfg, papply, params, opt = _setup()
+    rt = engine.make_runtime("serve", env1, papply, params, opt, cfg)
+    for call in (lambda: rt.run(2), rt.state,
+                 lambda: rt.run_from(None, 1)):
+        with pytest.raises(TypeError, match="Session.serve"):
+            call()
+
+
+# ----------------------------------------------------------- determinism
+def test_same_request_same_action_across_batch_compositions():
+    """The contract: identical (obs, seed) requests get bit-identical
+    answers whether dispatched alone or packed with 6 other requests.
+    Batch compositions are staged by submitting to an UNSTARTED server
+    (the queue accumulates until start())."""
+    srv, env1, _, _ = _server(max_batch=8)
+    obs = _obs(env1, 8)
+    probe = (obs[0], 7)
+
+    alone = srv.submit(*probe)
+    srv.start()
+    r_alone = alone.result(timeout=30)
+    srv.stop()
+    assert r_alone.batch_size == 1
+
+    srv2, env1, _, _ = _server(max_batch=8)
+    packed = srv2.submit(*probe)
+    others = [srv2.submit(obs[i], seed=100 + i) for i in range(1, 7)]
+    srv2.start()
+    r_packed = packed.result(timeout=30)
+    for f in others:
+        f.result(timeout=30)
+    srv2.stop()
+    assert r_packed.batch_size == 7
+    assert r_packed.action == r_alone.action
+    assert r_packed.logprob == r_alone.logprob
+
+
+def test_same_request_same_action_across_queue_orders():
+    """Position in the dispatch slab is irrelevant: the same request
+    first vs last in the queue answers identically."""
+    srv, env1, _, _ = _server(max_batch=8)
+    obs = _obs(env1, 4)
+    reqs = [(obs[i], 11 * i) for i in range(4)]
+
+    def roundtrip(order):
+        srv, _, _, _ = _server(max_batch=8)
+        futs = [srv.submit(*reqs[i]) for i in order]
+        srv.start()
+        out = {i: futs[k].result(timeout=30) for k, i in enumerate(order)}
+        srv.stop()
+        return out
+
+    fwd = roundtrip([0, 1, 2, 3])
+    rev = roundtrip([3, 2, 1, 0])
+    for i in range(4):
+        assert fwd[i].action == rev[i].action, i
+        assert fwd[i].logprob == rev[i].logprob, i
+
+
+def test_padding_rows_cannot_leak():
+    """max_batch wildly larger than the occupancy (29 zero padding rows)
+    answers bit-identically to a snug dispatch."""
+    obs = None
+    results = {}
+    for B in (4, 32):
+        srv, env1, _, _ = _server(max_batch=B)
+        if obs is None:
+            obs = _obs(env1, 3)
+        futs = [srv.submit(obs[i], seed=5 + i) for i in range(3)]
+        srv.start()
+        results[B] = [f.result(timeout=30) for f in futs]
+        srv.stop()
+    for a, b in zip(results[4], results[32]):
+        assert a.action == b.action
+        assert a.logprob == b.logprob
+
+
+def test_server_matches_direct_actor_forward():
+    """The served answer IS the training hot path's answer: one
+    actor_forward row under request_key, computed by hand."""
+    srv, env1, papply, params = _server(max_batch=4, seed=3)
+    obs = _obs(env1, 2)
+    srv.start()
+    got = [srv.act(obs[i], seed=40 + i) for i in range(2)]
+    srv.stop()
+
+    master = determinism.master_key(3)
+    keys = jax.vmap(lambda s: determinism.request_key(master, s))(
+        jnp.arange(40, 42))
+    acts, logps = actor_forward(papply, params, jnp.asarray(obs), keys)
+    for i in range(2):
+        assert got[i].action == int(acts[i])
+        assert got[i].logprob == float(logps[i])
+
+
+# --------------------------------------------------------------- config
+def test_serve_config_validates_eagerly():
+    with pytest.raises(ValueError, match="max_batch"):
+        ServeConfig(max_batch=0)
+    with pytest.raises(ValueError, match="max_queue"):
+        ServeConfig(max_queue=0)
+    with pytest.raises(ValueError, match="timeout_ms"):
+        ServeConfig(timeout_ms=0.0)
+    with pytest.raises(ValueError):
+        ServeConfig.of({"max_batch": 8, "burst": 2})   # unknown field
+
+
+def test_spec_serve_block_validates_at_construction():
+    """ServeConfig errors surface when the ExperimentSpec is built, not
+    when a server finally starts."""
+    with pytest.raises(ValueError, match="max_batch"):
+        api.ExperimentSpec(
+            env="catch", policy="mlp",
+            optimizer={"name": "rmsprop", "kwargs": {"lr": 7e-4}},
+            algorithm="a2c", runtime="serve",
+            hts={"alpha": 4, "n_envs": 4, "seed": 0},
+            serve={"max_batch": 0})
+
+
+# ------------------------------------------------------------ admission
+def test_overload_rejects_with_block_false():
+    """At max_queue, block=False raises queue.Full and the rejection is
+    counted; admitted requests still answer after start()."""
+    srv, env1, _, _ = _server(max_batch=4, max_queue=2)
+    obs = _obs(env1, 1)[0]
+    f1 = srv.submit(obs, seed=0, block=False)
+    f2 = srv.submit(obs, seed=1, block=False)
+    with pytest.raises(queue.Full):
+        srv.submit(obs, seed=2, block=False)
+    srv.start()
+    assert isinstance(f1.result(timeout=30), ActionResult)
+    assert isinstance(f2.result(timeout=30), ActionResult)
+    srv.stop()
+    stats = srv.stats()
+    assert stats["n_rejected"] == 1 and stats["n_requests"] == 2
+
+
+def test_obs_shape_mismatch_raises():
+    srv, env1, _, _ = _server()
+    with pytest.raises(ValueError, match="obs shape"):
+        srv.submit(np.zeros((3, 3), np.float32))
+
+
+def test_stopped_server_refuses_new_requests():
+    srv, env1, _, _ = _server()
+    obs = _obs(env1, 1)[0]
+    srv.start()
+    assert srv.act(obs).batch_size >= 1
+    srv.stop()
+    with pytest.raises(ServerClosed):
+        srv.submit(obs)
+
+
+# ------------------------------------------------------- fail-loud loop
+def test_dispatcher_death_fails_pending_and_future_requests():
+    """A dispatcher crash must fail every pending future with the
+    original error and poison subsequent submits — never hang clients
+    on futures that cannot resolve."""
+    srv, env1, _, _ = _server(max_batch=4)
+    obs = _obs(env1, 1)[0]
+
+    def boom(params, obs, seeds):
+        raise RuntimeError("kaboom in dispatch")
+
+    srv._program = boom
+    fut = srv.submit(obs, seed=0)
+    srv.start()
+    with pytest.raises(RuntimeError, match="kaboom"):
+        fut.result(timeout=30)
+    srv._thread.join(timeout=30)
+    assert srv.dead
+    with pytest.raises(ServerClosed, match="died"):
+        srv.submit(obs, seed=1)
+
+
+# -------------------------------------------------------- session.serve
+def _serve_spec(ckpt_dir=None, runtime="serve", **serve_kw):
+    kw = {}
+    if ckpt_dir is not None:
+        kw["checkpoint"] = {"dir": ckpt_dir, "every": 1}
+    return api.ExperimentSpec(
+        env="catch", policy="mlp",
+        optimizer={"name": "rmsprop", "kwargs": {"lr": 7e-4, "eps": 1e-5}},
+        algorithm="a2c", runtime=runtime,
+        hts={"alpha": 4, "n_envs": 4, "seed": 3},
+        serve=dict({"max_batch": 8, "timeout_ms": 50.0}, **serve_kw),
+        **kw)
+
+
+def test_session_serve_loads_trained_capsule(tmp_path):
+    """Train under a training runtime, then serve the SAME checkpoint
+    dir under runtime='serve': the served params are the trained
+    params (capsule leading leaves), not the init params."""
+    ckpt_dir = str(tmp_path / "ck")
+    train = api.build(_serve_spec(ckpt_dir, runtime="mesh").replace(
+        intervals=2))
+    train.fit()
+    trained = train.state().algo.params
+
+    session = api.build(_serve_spec(ckpt_dir))
+    srv = session.serve(start=False)
+    for got, want in zip(jax.tree.leaves(srv.params),
+                         jax.tree.leaves(trained)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # and the served action comes from the trained params
+    srv.start()
+    out = srv.act(_obs(session.env, 1)[0], seed=1)
+    srv.stop()
+    assert isinstance(out, ActionResult)
+
+
+def test_spec_serve_block_reaches_the_server():
+    """build() threads spec.serve into the serve runtime: the spec's
+    dispatch bounds govern the server, not ServeConfig defaults."""
+    session = api.build(_serve_spec(max_queue=17))
+    srv = session.serve(start=False)
+    assert srv.serve.max_batch == 8          # _serve_spec's block
+    assert srv.serve.max_queue == 17
+    assert srv.serve.timeout_ms == 50.0
+
+
+def test_session_serve_without_checkpoint_serves_init_params(tmp_path):
+    session = api.build(_serve_spec())
+    srv = session.serve(start=False)
+    for got, want in zip(jax.tree.leaves(srv.params),
+                         jax.tree.leaves(session.params)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_session_serve_works_under_training_runtimes():
+    """Serving is not gated on runtime='serve' — any session can answer
+    requests (the capsule invariant makes params loadable everywhere)."""
+    session = api.build(_serve_spec(runtime="mesh"))
+    srv = session.serve()
+    try:
+        r = srv.act(_obs(session.env, 1)[0], seed=9)
+        assert isinstance(r, ActionResult)
+    finally:
+        srv.stop()
+
+
+# --------------------------------------------------------------- loadgen
+def test_loadgen_smoke_returns_finite_metrics():
+    from repro.serve import loadgen
+    metrics = loadgen.run(_serve_spec(), requests=40, rate=4000.0,
+                          seed=0, warmup=8)
+    assert set(metrics) == {"serve_qps", "serve_p50_ms", "serve_p99_ms",
+                            "serve_mean_batch"}
+    for k, v in metrics.items():
+        assert np.isfinite(v) and v > 0, (k, v)
