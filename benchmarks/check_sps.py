@@ -42,15 +42,21 @@ import sys
 def load_records(path: str):
     try:
         with open(path) as f:
-            lines = [ln.strip() for ln in f if ln.strip()]
+            lines = [(i, ln.strip()) for i, ln in enumerate(f, 1)
+                     if ln.strip()]
     except OSError:
         return None
     records = []
-    for ln in lines:
+    for lineno, ln in lines:
         try:
             records.append(json.loads(ln))
-        except ValueError:
-            continue          # tolerate a truncated/hand-edited line
+        except ValueError as e:
+            # tolerate a truncated/hand-edited line, but LOUDLY: a
+            # silently-dropped record shrinks the baseline window (or
+            # hides the record being gated) with no visible trace
+            print(f"# check_sps skip: {path}:{lineno} is not valid JSON "
+                  f"({e}) — line ignored", file=sys.stderr)
+            continue
     return records
 
 

@@ -1,0 +1,182 @@
+"""Recovery bench: restore latency under a pinned FaultPlan storm, and
+serving throughput while the dispatcher is being killed and restarted.
+
+    PYTHONPATH=src python -m benchmarks.recovery_bench \
+        --intervals 8 --fault-seed 7 --append-sps BENCH_sps.json
+
+Two legs, one record:
+
+* **training** — a host-runtime catch x mlp fit under a
+  ``FaultPlan.generate(fault_seed, ...)`` storm (worker/env/learner
+  faults) with supervision on. Records how many restarts the storm
+  cost, the restore latency per recovery (the supervisor's
+  capsule-restore time, NOT the backoff sleep — backoff is policy,
+  restore is the quantity this layer must keep bounded), and whether
+  the recovered run's final params + episode-return stream are
+  BIT-EXACT to a fault-free twin of the same spec (``recovery_bitexact``
+  is 1.0 or 0.0 — the recovery contract, measured, not assumed).
+* **serving** — the serve_bench workload with dispatcher kills at
+  consecutive dispatch indices and in-place restart enabled
+  (``serve.max_restarts``): offered load answered while the dispatcher
+  dies mid-storm, with loadgen retry absorbing the shed requests.
+
+``--append-sps`` writes the usual BENCH_sps.json line (bench
+"recovery", host + config fingerprints), so benchmarks/check_sps.py
+can gate ``recovery_restore_ms_max`` — "restores stay bounded" — the
+same way it gates throughput keys.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro import api
+from repro.faults import FaultPlan
+from repro.serve import loadgen
+
+
+def train_spec(ckpt_dir: str, intervals: int,
+               faults=None) -> api.ExperimentSpec:
+    """The engine bench workload (catch x mlp) on the host runtime —
+    the one training runtime with live worker-pool fault sites."""
+    return api.ExperimentSpec(
+        env="catch",
+        policy="mlp",
+        optimizer={"name": "rmsprop", "kwargs": {"lr": 7e-4}},
+        algorithm="a2c",
+        runtime="host",
+        hts={"alpha": 4, "n_envs": 4, "seed": 0},
+        intervals=intervals,
+        checkpoint={"dir": ckpt_dir, "every": 2},
+        faults=faults if faults is not None else {})
+
+
+def serve_spec(faults=None, max_restarts: int = 4) -> api.ExperimentSpec:
+    return api.ExperimentSpec(
+        env="catch",
+        policy="mlp",
+        optimizer={"name": "rmsprop", "kwargs": {"lr": 7e-4}},
+        algorithm="a2c",
+        runtime="serve",
+        hts={"alpha": 8, "n_envs": 8, "seed": 0},
+        serve={"max_batch": 32, "max_queue": 1024, "timeout_ms": 20.0,
+               "max_restarts": max_restarts, "restart_backoff_ms": 1.0},
+        faults=faults if faults is not None else {})
+
+
+def run_training(intervals: int, fault_seed: int):
+    """Faulted supervised fit vs fault-free twin; returns the metric
+    rows for the training leg plus the plan that was replayed."""
+    plan = FaultPlan.generate(fault_seed, intervals, n_events=3)
+    base = tempfile.mkdtemp(prefix="recovery_bench_")
+    try:
+        chaos = api.build(train_spec(f"{base}/chaos", intervals,
+                                     faults=plan)).fit()
+        clean = api.build(train_spec(f"{base}/clean", intervals)).fit()
+    finally:
+        shutil.rmtree(base, ignore_errors=True)
+    bitexact = float(
+        all(np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(jax.tree.leaves(chaos.params),
+                            jax.tree.leaves(clean.params)))
+        and np.array_equal(chaos.episode_returns, clean.episode_returns))
+    restore_ms = [1e3 * r["restore_s"] for r in chaos.recoveries]
+    rows = [
+        ("recovery_restarts", float(chaos.restarts), "count"),
+        ("recovery_restore_ms_mean",
+         float(np.mean(restore_ms)) if restore_ms else 0.0, "ms"),
+        ("recovery_restore_ms_max",
+         float(np.max(restore_ms)) if restore_ms else 0.0, "ms"),
+        ("recovery_bitexact", bitexact, "bool"),
+    ]
+    return rows, plan
+
+
+def run_serving(requests: int, rate: float, kills: int,
+                warmup: int = 64):
+    """Loadgen against a server whose dispatcher dies at ``kills``
+    consecutive dispatch indices (each restart's next dispatch dies
+    again — a persistent-fault storm, absorbed in place). The kills are
+    scheduled just past the warmup dispatches (warmup acts are
+    sequential, one dispatch each) so the MEASURED phase is the one
+    degraded."""
+    first = min(warmup, requests) + 1
+    plan = FaultPlan(events=tuple(("dispatcher", d)
+                                  for d in range(first, first + kills)))
+    metrics = loadgen.run(serve_spec(faults=plan, max_restarts=kills + 1),
+                          requests=requests, rate=rate, seed=0,
+                          warmup=warmup, retry=3, retry_backoff_ms=2.0)
+    return [
+        ("degraded_serve_qps", metrics["serve_qps"], "req/s"),
+        ("degraded_serve_p99_ms", metrics["serve_p99_ms"], "ms"),
+        ("degraded_serve_shed", float(metrics["serve_shed"]), "count"),
+        ("degraded_serve_restarts",
+         float(metrics["serve_restarts"]), "count"),
+    ]
+
+
+def config_fingerprint(intervals: int, fault_seed: int, requests: int,
+                       rate: float, kills: int) -> dict:
+    """Everything that changes what a recovery number means: the
+    training workload, the pinned storm, and the serving load."""
+    fp = api.workload_fingerprint(train_spec("<tmp>", intervals))
+    fp["faults"] = FaultPlan.generate(fault_seed, intervals,
+                                      n_events=3).canonical()
+    fp["load"] = {"intervals": int(intervals), "requests": int(requests),
+                  "rate": float(rate), "kills": int(kills)}
+    return fp
+
+
+def main() -> None:
+    from benchmarks.run import host_fingerprint
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--intervals", type=int, default=8)
+    ap.add_argument("--fault-seed", type=int, default=7,
+                    help="FaultPlan.generate seed — pin it and the "
+                         "identical storm replays every run")
+    ap.add_argument("--requests", type=int, default=200)
+    ap.add_argument("--rate", type=float, default=2000.0)
+    ap.add_argument("--kills", type=int, default=2,
+                    help="consecutive dispatcher kills during serving")
+    ap.add_argument("--append-sps", default=None, metavar="FILE",
+                    help="append the result as a JSON line (e.g. "
+                         "BENCH_sps.json)")
+    args = ap.parse_args()
+    t0 = time.time()
+    rows, plan = run_training(args.intervals, args.fault_seed)
+    rows += run_serving(args.requests, args.rate, args.kills)
+    print("name,value,unit")
+    for name, value, unit in rows:
+        print(f"{name},{value:.6g},{unit}", flush=True)
+    by_name = {name: value for name, value, _ in rows}
+    if by_name["recovery_bitexact"] != 1.0:
+        print("# recovery_bench: RECOVERED RUN DIVERGED from the "
+              "fault-free twin — the bit-exact recovery contract is "
+              "broken", file=sys.stderr)
+        sys.exit(1)
+    if args.append_sps:
+        record = {
+            "ts": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+            "bench": "recovery",
+            "host": host_fingerprint(),
+            "config": config_fingerprint(args.intervals, args.fault_seed,
+                                         args.requests, args.rate,
+                                         args.kills),
+            "wall_s": round(time.time() - t0, 2),
+            "sps": {name: round(value, 2) for name, value, _ in rows},
+        }
+        with open(args.append_sps, "a") as f:
+            f.write(json.dumps(record) + "\n")
+        print(f"# appended to {args.append_sps}", file=sys.stderr,
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

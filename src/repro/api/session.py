@@ -166,6 +166,19 @@ def build(spec: ExperimentSpec, **runtime_overrides) -> "Session":
     rkw = _decode_runtime_kwargs(rt_name, spec.runtime.kwargs)
     rkw.update(runtime_overrides)
 
+    # ONE injector spans every surface of the session — host runtime
+    # pools, Trainer checkpoint writes, the serve dispatcher — so a
+    # single FaultPlan schedules chaos across training AND serving
+    # (DESIGN.md §11). Trivial plan (no events, no supervision): no
+    # injector, zero overhead anywhere.
+    injector = None
+    if spec.faults.events or spec.faults.max_restarts:
+        from repro.faults import FaultInjector
+        injector = FaultInjector(spec.faults)
+    if injector is not None and rt_name == "host":
+        # the one training runtime with live fault sites (worker pools)
+        rkw.setdefault("faults", injector)
+
     if rt_name == _STREAM_RUNTIME:
         from repro.core.stream_runtime import StreamRuntime
         if policy.config is None:
@@ -189,9 +202,12 @@ def build(spec: ExperimentSpec, **runtime_overrides) -> "Session":
             # the serving entry is the one factory that consumes the
             # spec's serve block (dispatch width / admission bound)
             rkw.setdefault("serve", spec.serve)
+            if injector is not None:
+                rkw.setdefault("faults", injector)
         runtime = engine.make_runtime(rt_name, env, policy.apply, params,
                                       opt, cfg, **rkw)
-    return Session(spec, runtime, env, policy, params, opt, cfg)
+    return Session(spec, runtime, env, policy, params, opt, cfg,
+                   faults=injector)
 
 
 class Session:
@@ -199,7 +215,7 @@ class Session:
     the engine-contract driving surface (plus observers and ``fit``)."""
 
     def __init__(self, spec: ExperimentSpec, runtime, env, policy,
-                 params, opt, cfg: HTSConfig):
+                 params, opt, cfg: HTSConfig, faults=None):
         self.spec = spec
         self.runtime = runtime
         self.env = env
@@ -207,6 +223,7 @@ class Session:
         self.params = params      # initial parameters (policy.init)
         self.opt = opt
         self.cfg = cfg
+        self.faults = faults      # the session-wide FaultInjector (or None)
         self._observers: List[Callable[[dict], None]] = []
 
     # ------------------------------------------------------- observers
@@ -273,7 +290,8 @@ class Session:
                           ckpt_every=ck.every, keep=ck.keep,
                           on_segment=on_segment,
                           on_interval=(self._emit if self._observers
-                                       else None))
+                                       else None),
+                          faults=self.faults)
         n = self.spec.intervals if n_intervals is None else n_intervals
         return trainer.fit(n, resume=resume)
 
@@ -306,7 +324,8 @@ class Session:
         _, obs0 = self.env.reset(jax.random.key(0))
         server = PolicyServer(self.policy.apply, params,
                               obs_like=np.asarray(obs0),
-                              serve=self.spec.serve, seed=self.cfg.seed)
+                              serve=self.spec.serve, seed=self.cfg.seed,
+                              faults=self.faults)
         return server.start() if start else server
 
     # ------------------------------------------------------------ misc

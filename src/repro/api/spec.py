@@ -33,6 +33,7 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, Optional, Union
 
 from repro.core.engine import HTSConfig
+from repro.faults import FaultPlan
 from repro.serve.config import ServeConfig
 
 # HTSConfig knobs a spec may set. ``algorithm`` is excluded: it is a
@@ -129,6 +130,13 @@ class ExperimentSpec:
     # itself; popped from workload_fingerprint (it changes serving
     # latency, never what a training number means).
     serve: ServeConfig = field(default_factory=ServeConfig)
+    # chaos schedule + recovery policy (repro.faults, DESIGN.md §11):
+    # one seeded FaultPlan spans training (host pool sites, trainer
+    # checkpoint site) and serving (dispatcher site) — Session.build
+    # arms ONE shared FaultInjector from it. Popped from
+    # workload_fingerprint: by the recovery guarantee, faults change
+    # wall time, never what a result means.
+    faults: FaultPlan = field(default_factory=FaultPlan)
 
     def __post_init__(self):
         object.__setattr__(self, "env", ComponentSpec.of(self.env, "env"))
@@ -142,6 +150,7 @@ class ExperimentSpec:
         object.__setattr__(self, "checkpoint",
                            CheckpointSpec.of(self.checkpoint))
         object.__setattr__(self, "serve", ServeConfig.of(self.serve))
+        object.__setattr__(self, "faults", FaultPlan.of(self.faults))
         self._validate()
 
     def _validate(self) -> None:
@@ -206,6 +215,7 @@ class ExperimentSpec:
             "intervals": int(self.intervals),
             "checkpoint": self.checkpoint.canonical(),
             "serve": self.serve.canonical(),
+            "faults": self.faults.canonical(),
         }
 
     def replace(self, **changes) -> "ExperimentSpec":
@@ -260,6 +270,11 @@ def workload_fingerprint(spec: ExperimentSpec) -> dict:
     # pre-serve record (benchmarks/serve_bench.py re-adds it to ITS
     # records, where max_batch does change what a QPS number means)
     fp.pop("serve")
+    # faults likewise: the recovery guarantee (DESIGN.md §11) is exactly
+    # that a faulted run's results MEAN the same as the fault-free
+    # run's — only wall time differs, and the bench harness records
+    # that separately (benchmarks/recovery_bench.py)
+    fp.pop("faults")
     return fp
 
 

@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import json
 import os
+import zlib
 from pathlib import Path
 from typing import Any
 
@@ -28,6 +29,17 @@ import jax
 import jax.numpy as jnp
 
 FORMAT_VERSION = 1
+
+
+class CheckpointCorrupt(RuntimeError):
+    """The checkpoint's BYTES cannot be trusted: the npz half is
+    unreadable (truncated write, disk corruption, a copy that dropped
+    bytes) or a leaf's content fails its manifest checksum. Distinct
+    from ValueError (structural mismatch against the restore template —
+    wrong config, wrong model), because the two demand different
+    responses: corruption is survivable by falling back to an older
+    complete checkpoint (core/trainer.Trainer does exactly that), a
+    structural mismatch is a caller error no amount of retrying fixes."""
 
 
 def _to_numpy(leaf) -> np.ndarray:
@@ -45,13 +57,18 @@ def save(path: str, tree: Any, metadata: dict | None = None) -> None:
     # numpy's savez has no bf16 cast path: store bf16 leaves as f32
     # (lossless upcast) and restore back to the reference dtype.
     arrays = {}
-    dtypes, shapes = [], []
+    dtypes, shapes, crcs = [], [], []
     for i, a in enumerate(leaves):
         arr = _to_numpy(a)
         dtypes.append(str(arr.dtype))
         shapes.append(list(arr.shape))
         if arr.dtype.name == "bfloat16":
             arr = arr.astype(np.float32)
+        # per-leaf checksum of the STORED bytes (post-upcast), so a
+        # flipped bit or truncated page inside the zip is detected at
+        # restore as CheckpointCorrupt naming the leaf, not as silently
+        # wrong parameters
+        crcs.append(zlib.crc32(np.ascontiguousarray(arr).tobytes()))
         arrays[f"leaf_{i}"] = arr
     manifest = {
         "version": FORMAT_VERSION,
@@ -59,6 +76,7 @@ def save(path: str, tree: Any, metadata: dict | None = None) -> None:
         "treedef": str(treedef),
         "dtypes": dtypes,
         "shapes": shapes,
+        "crc32": crcs,
         "metadata": metadata or {},
     }
     # both files go through write-tmp + atomic rename, npz before
@@ -73,6 +91,46 @@ def save(path: str, tree: Any, metadata: dict | None = None) -> None:
     json_tmp = path.with_suffix(".json.tmp")
     json_tmp.write_text(json.dumps(manifest, indent=1))
     os.replace(json_tmp, path.with_suffix(".json"))
+
+
+def _open_npz(path: Path):
+    """np.load with byte-level failures surfaced as CheckpointCorrupt
+    (a truncated/corrupt zip raises half a dozen different exception
+    types depending on WHERE the damage sits; callers need one)."""
+    try:
+        return np.load(path.with_suffix(".npz"))
+    except FileNotFoundError:
+        raise CheckpointCorrupt(
+            f"checkpoint {path.name} is torn: manifest present but "
+            f"{path.with_suffix('.npz').name} is missing") from None
+    except Exception as e:      # zipfile.BadZipFile, OSError, EOFError...
+        raise CheckpointCorrupt(
+            f"checkpoint {path.with_suffix('.npz').name} is unreadable "
+            f"(truncated or corrupt): {e!r}") from e
+
+
+def _read_leaf(data, path: Path, i: int, crcs) -> np.ndarray:
+    """Extract leaf i, decompressing its bytes now (np.load is lazy —
+    corruption inside the zip only surfaces on member access) and
+    verifying its manifest checksum when one was recorded."""
+    try:
+        arr = data[f"leaf_{i}"]
+    except KeyError:
+        raise CheckpointCorrupt(
+            f"checkpoint {path.name} has no leaf_{i} array — the npz "
+            f"member list is damaged or the file was truncated") from None
+    except Exception as e:      # zlib.error mid-member, struct errors...
+        raise CheckpointCorrupt(
+            f"checkpoint {path.name} leaf_{i} is unreadable (corrupt "
+            f"bytes inside the archive): {e!r}") from e
+    if crcs is not None and i < len(crcs):
+        got = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+        if got != crcs[i]:
+            raise CheckpointCorrupt(
+                f"checkpoint {path.name} leaf_{i} fails its checksum "
+                f"(manifest crc32={crcs[i]}, stored bytes={got}) — the "
+                f"array content was corrupted after the write")
+    return arr
 
 
 def load_manifest(path: str) -> dict | None:
@@ -92,7 +150,7 @@ def restore(path: str, like: Any) -> Any:
     and dtypes are all validated against both the template and the
     manifest before a single leaf is unflattened."""
     path = Path(path)
-    data = np.load(path.with_suffix(".npz"))
+    data = _open_npz(path)
     leaves, treedef = jax.tree_util.tree_flatten(like)
     manifest = load_manifest(path)
     if manifest is not None:
@@ -111,9 +169,10 @@ def restore(path: str, like: Any) -> Any:
         raise ValueError(
             f"checkpoint {path.name} holds {len(data.files)} arrays but "
             f"the restore template has {len(leaves)} leaves")
+    crcs = (manifest or {}).get("crc32")
     out = []
     for i, ref in enumerate(leaves):
-        arr = data[f"leaf_{i}"]
+        arr = _read_leaf(data, path, i, crcs)
         if tuple(arr.shape) != tuple(ref.shape):
             # a staleness-K capsule differs from a staleness-K' one only
             # in ring depth: same pytree, leading axes off by the ring
@@ -140,20 +199,28 @@ def restore(path: str, like: Any) -> Any:
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
-def latest(dirpath: str) -> str | None:
-    """Newest COMPLETE checkpoint in ``dirpath`` (newest ``step_*.json``
-    whose ``.npz`` half exists). A manifest without its array file is a
-    torn capsule — a kill between the two halves of a save/prune, or a
-    copy that dropped the npz — and selecting it would make resume
-    crash on np.load instead of falling back to the previous complete
-    checkpoint. Torn manifests are skipped, newest first."""
+def complete_checkpoints(dirpath: str) -> list[str]:
+    """All COMPLETE checkpoints in ``dirpath`` (``step_*.json`` whose
+    ``.npz`` half exists), newest first. A manifest without its array
+    file is a torn capsule — a kill between the two halves of a
+    save/prune, or a copy that dropped the npz — and selecting it would
+    make resume crash instead of falling back to the previous complete
+    checkpoint. "Complete" here means both files exist; content
+    corruption (failed checksum, damaged zip) surfaces at ``restore`` as
+    CheckpointCorrupt, and supervisors walk this list newest-first to
+    fall back past it (core/trainer.Trainer)."""
     d = Path(dirpath)
     if not d.exists():
-        return None
-    for p in sorted(d.glob("step_*.json"), reverse=True):
-        if p.with_suffix(".npz").exists():
-            return str(p.with_suffix(""))
-    return None
+        return []
+    return [str(p.with_suffix(""))
+            for p in sorted(d.glob("step_*.json"), reverse=True)
+            if p.with_suffix(".npz").exists()]
+
+
+def latest(dirpath: str) -> str | None:
+    """Newest complete checkpoint in ``dirpath``, or None."""
+    found = complete_checkpoints(dirpath)
+    return found[0] if found else None
 
 
 def restore_prefix(path: str, like: Any) -> Any:
@@ -169,22 +236,45 @@ def restore_prefix(path: str, like: Any) -> Any:
     exactly the leading leaves — for every runtime and every staleness
     (the K-ring lives in ``params_prev``, after them). Shapes and
     dtypes are validated leaf-by-leaf against the template, so a capsule
-    whose layout does NOT start with ``like`` fails loudly here."""
+    whose layout does NOT start with ``like`` fails loudly here.
+
+    Error taxonomy (pinned by tests/test_checkpoint.py): a missing or
+    unreadable npz / failed leaf checksum raises ``CheckpointCorrupt``;
+    a missing manifest, a manifest without ``n_leaves``, too few leaves
+    for the template, or a shape/dtype mismatch raises ``ValueError``
+    naming what disagreed."""
     path = Path(path)
-    data = np.load(path.with_suffix(".npz"))
-    leaves, treedef = jax.tree_util.tree_flatten(like)
-    if len(data.files) < len(leaves):
+    manifest = load_manifest(path)
+    if manifest is None:
         raise ValueError(
-            f"checkpoint {path.name} holds {len(data.files)} arrays but "
-            f"the prefix template needs {len(leaves)} leaves")
+            f"checkpoint {path.name} has no manifest "
+            f"({path.with_suffix('.json').name} is missing) — cannot "
+            f"validate a prefix restore against an unmanifested capsule")
+    n = manifest.get("n_leaves")
+    if n is None:
+        raise ValueError(
+            f"checkpoint {path.name} manifest is missing the "
+            f"'n_leaves' field (present: {sorted(manifest)})")
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    if n < len(leaves):
+        raise ValueError(
+            f"checkpoint {path.name} holds {n} arrays but the prefix "
+            f"template needs {len(leaves)} leaves")
+    data = _open_npz(path)
+    crcs = manifest.get("crc32")
+    dtypes = manifest.get("dtypes", [None] * n)
     out = []
     for i, ref in enumerate(leaves):
-        arr = data[f"leaf_{i}"]
+        arr = _read_leaf(data, path, i, crcs)
         if tuple(arr.shape) != tuple(ref.shape):
             raise ValueError(
                 f"prefix leaf {i}: checkpoint shape {arr.shape} != "
                 f"template {tuple(ref.shape)} — the capsule's leading "
                 f"leaves are not this policy's parameters (different "
                 f"model config?)")
+        if dtypes[i] is not None and dtypes[i] != str(ref.dtype):
+            raise ValueError(
+                f"prefix leaf {i}: checkpoint dtype {dtypes[i]} != "
+                f"template dtype {ref.dtype}")
         out.append(jnp.asarray(arr).astype(ref.dtype))
     return jax.tree_util.tree_unflatten(treedef, out)

@@ -88,6 +88,7 @@ from repro.core.mesh_runtime import (make_grad_fn, make_learner_update,
 from repro.core.rollout import actor_forward
 from repro.envs.interfaces import Env
 from repro.envs.steptime import StepTimeModel
+from repro.faults import FaultInjector, FaultPlan
 from repro.optim import Optimizer
 
 _SHUTDOWN = object()          # queue sentinel for pool teardown
@@ -112,7 +113,9 @@ class HostHTSRL:
 
     def __init__(self, env: Env, policy_apply: Callable, params,
                  opt: Optimizer, cfg: HTSConfig,
-                 host: Optional[HostConfig] = None, **host_kwargs):
+                 host: Optional[HostConfig] = None,
+                 faults: "Optional[FaultInjector | FaultPlan]" = None,
+                 **host_kwargs):
         if host is not None and host_kwargs:
             # both forms at once used to silently discard the kwargs —
             # e.g. HostHTSRL(..., host=HostConfig(), n_actors=8) ran
@@ -136,6 +139,16 @@ class HostHTSRL:
         self.opt = opt
         self.policy_apply = policy_apply
         self.params0 = params
+        # deterministic chaos (DESIGN.md §11): worker loops and the
+        # coordinator poll this injector at their logical (site,
+        # interval) points. An injected exc rides the SAME paths a real
+        # failure does — _guard capture for workers, coordinator raise
+        # for the learner — so the chaos tests exercise the production
+        # failure machinery, not a parallel one. None (default): zero
+        # hot-path cost beyond one attribute check per dispatch.
+        if faults is not None and not isinstance(faults, FaultInjector):
+            faults = FaultInjector(FaultPlan.of(faults))
+        self._faults = faults
         self._built = False
         self.dg = None    # built lazily: run() always starts via init()
         self.profile: Dict[str, float] = {}
@@ -491,6 +504,8 @@ class HostHTSRL:
             batch = self._drain_batch(q, q.get())
             if batch is None:
                 return
+            if self._faults is not None:
+                self._faults.fire("actor", self._cur_j)
             k = len(batch)
             ids, ts = self._pad(n, [b[0] for b in batch],
                                 [b[1] for b in batch])
@@ -523,10 +538,17 @@ class HostHTSRL:
             batch = self._drain_batch(q, q.get())
             if batch is None:
                 return
+            if self._faults is not None:
+                self._faults.fire("stepper", self._cur_j)
             k = len(batch)
             ids, ts, acts = self._pad(n, [b[0] for b in batch],
                                       [b[1] for b in batch],
                                       [b[2] for b in batch])
+            if self._faults is not None:
+                # distinct from "stepper" death: this models the ENV
+                # raising mid-step (the exception surfaces from the env
+                # dispatch point, inside the stepper thread)
+                self._faults.fire("env_step", self._cur_j)
             t0 = time.perf_counter() if prof else 0.0
             self.env_states, nobs, r, d = self._step_batch(
                 self.env_states, acts, ids, ts, self._step_table)
@@ -574,6 +596,8 @@ class HostHTSRL:
             if self._pool_stop:
                 return
             j = self._cur_j
+            if self._faults is not None:
+                self._faults.fire("executor", j)
             slab, boot = self._cur_slab, self._cur_boot
             obs = self.obs_np[env_id]
             for t in range(cfg.alpha):
@@ -672,6 +696,17 @@ class HostHTSRL:
                 # of rollout wall time before its apply blocks on it.
                 traj_j = self._slabs.as_traj(j)
                 grads = self._grad_fn(self._behavior, traj_j)
+                if self._faults is not None:
+                    # "learner" site, at interval j's gradient dispatch:
+                    # exc -> the learner dies here (coordinator raise);
+                    # nan -> the dispatched update is all-NaN, poisoning
+                    # params at the apply K intervals later — detected
+                    # by the supervisor's finite check BEFORE any save
+                    # (core/trainer.LearnerDiverged)
+                    ev = self._faults.fire("learner", j)
+                    if ev is not None:          # kind == "nan"
+                        grads = jax.tree.map(
+                            lambda g: jnp.full_like(g, jnp.nan), grads)
                 ready = None
                 if self._sim_learner_on:
                     ready = threading.Event()

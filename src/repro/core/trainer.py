@@ -31,17 +31,30 @@ from __future__ import annotations
 
 import glob
 import os
+import sys
 import time
-from dataclasses import dataclass
-from typing import Any, Callable, Optional
+from dataclasses import dataclass, field
+from typing import Any, Callable, List, Optional
 
 import numpy as np
+import jax
+import jax.numpy as jnp
 
 from repro.checkpoint import io as ckpt_io
 from repro.core import evaluate
 from repro.core.engine import Runtime, TrainState
+from repro.faults import FaultInjector, FaultPlan
 
 CKPT_FORMAT = "hts-trainstate-v1"
+
+
+class LearnerDiverged(RuntimeError):
+    """The segment produced non-finite parameters (a NaN'd/inf'd learner
+    step). Raised BEFORE the capsule is checkpointed, so the divergence
+    never becomes durable — the supervisor restores the last finite
+    capsule and replays. Only checked when a fault plan is configured;
+    without one, non-finite params flow through unchanged (pre-existing
+    behavior)."""
 
 
 @dataclass
@@ -57,6 +70,9 @@ class TrainReport:
     rewards: np.ndarray          # (intervals_this_fit, alpha, n_envs)
     dones: np.ndarray
     episode_returns: np.ndarray  # completion-order, incl. resumed history
+    restarts: int = 0            # supervisor recoveries this fit
+    recoveries: List[dict] = field(default_factory=list)
+    # each: {"failure", "restored_to", "backoff_s", "restore_s"}
 
     def final_metric(self, n_episodes: int = 100) -> float:
         eps = self.episode_returns
@@ -80,19 +96,43 @@ class Trainer:
       called once per completed interval (global index, so a resumed fit
       continues the numbering), after each segment returns — the
       streaming hook repro.api.Session threads through here.
+    * ``faults``       — a ``FaultPlan`` or (shared) ``FaultInjector``.
+      Arms two things: the ``checkpoint``-site truncation injection in
+      ``_save``, and — when the plan's ``max_restarts > 0`` — the
+      supervising loop (DESIGN.md §11): a failed segment (pool-guard
+      RuntimeError, env exception, ``LearnerDiverged``) is absorbed by
+      restoring the newest COMPLETE, uncorrupt checkpoint and replaying
+      from it, with exponential backoff, up to ``max_restarts``
+      CONSECUTIVE failures. Because ``run_from`` is bit-exact and
+      injected events fire at most once, the recovered run's final
+      params and episode-return stream equal the fault-free run's
+      exactly (tests/test_faults.py). With ``faults=None`` (default)
+      nothing changes: failures propagate as before this layer existed.
+      Note one replay consequence: falling back PAST a corrupted newest
+      checkpoint re-runs already-reported intervals, so ``on_interval``
+      may see an index twice (identical metrics both times, by
+      determinism); ``on_segment`` fires only after a durable save and
+      is never replayed for an interval count it already saw, except in
+      that same corrupt-fallback case.
     """
 
     def __init__(self, runtime: Runtime, checkpoint_dir: Optional[str] = None,
                  ckpt_every: int = 0,
                  on_segment: Optional[Callable[[int, Any], None]] = None,
                  keep: int = 3,
-                 on_interval: Optional[Callable[[int, dict], None]] = None):
+                 on_interval: Optional[Callable[[int, dict], None]] = None,
+                 faults: Optional[FaultPlan | FaultInjector] = None):
         self.runtime = runtime
         self.checkpoint_dir = checkpoint_dir
         self.ckpt_every = ckpt_every
         self.on_segment = on_segment
         self.keep = keep
         self.on_interval = on_interval
+        if faults is None or isinstance(faults, FaultInjector):
+            self.faults = faults
+        else:
+            self.faults = FaultInjector(FaultPlan.of(faults))
+        self._plan = self.faults.plan if self.faults is not None else None
 
     # ----------------------------------------------------------- ckpt io
     def _ckpt_path(self, intervals: int) -> str:
@@ -117,6 +157,18 @@ class Trainer:
             "intervals": intervals,
             "metrics": stream.state_dict(),
         })
+        if self.faults is not None:
+            # checkpoint-site chaos: the atomic write (checkpoint/io)
+            # makes a torn file impossible to PRODUCE, so the injectable
+            # failure is post-write corruption — truncate the just-
+            # written npz in place. Detected at restore as
+            # CheckpointCorrupt; the supervisor falls back past it.
+            ev = self.faults.poll("checkpoint", intervals)
+            if ev is not None and ev.kind == "truncate":
+                npz = self._ckpt_path(intervals) + ".npz"
+                with open(npz, "r+b") as f:
+                    size = f.seek(0, os.SEEK_END)
+                    f.truncate(max(size // 2, 1))
         self._prune(intervals)
 
     def _prune(self, newest: int) -> None:
@@ -159,6 +211,39 @@ class Trainer:
         state = ckpt_io.restore(path, self.runtime.state())
         return state, int(meta["intervals"]), meta.get("metrics")
 
+    # --------------------------------------------------------- recovery
+    @staticmethod
+    def _check_finite(params) -> None:
+        for i, leaf in enumerate(jax.tree_util.tree_leaves(params)):
+            a = np.asarray(jax.device_get(leaf))
+            if np.issubdtype(a.dtype, np.floating) and \
+                    not np.isfinite(a.astype(np.float32)).all():
+                raise LearnerDiverged(
+                    f"segment produced non-finite parameters (leaf {i})")
+
+    def _recover(self, template, start0: int, entry_metrics):
+        """Newest complete + UNCORRUPT checkpoint, walking past damaged
+        ones loudly; ultimate fallback is the fit-entry capsule (replay
+        everything this fit already ran). ``template`` is a host-side
+        (numpy) snapshot of the entry capsule — deliberately NOT
+        ``runtime.state()``: after a mid-interval failure the runtime's
+        donated device buffers are not trustworthy."""
+        if self.checkpoint_dir:
+            for path in ckpt_io.complete_checkpoints(self.checkpoint_dir):
+                meta = ckpt_io.load_metadata(path)
+                if meta.get("format") != CKPT_FORMAT:
+                    continue
+                try:
+                    state = ckpt_io.restore(path, template)
+                except ckpt_io.CheckpointCorrupt as e:
+                    print(f"[trainer] skipping corrupt checkpoint "
+                          f"{os.path.basename(path)}: {e}",
+                          file=sys.stderr)
+                    continue
+                return state, int(meta["intervals"]), meta.get("metrics")
+        return (jax.tree_util.tree_map(jnp.asarray, template), start0,
+                entry_metrics)
+
     # --------------------------------------------------------------- fit
     def fit(self, n_intervals: int, resume: bool = False) -> TrainReport:
         """Train until ``n_intervals`` TOTAL intervals have run (a resumed
@@ -180,27 +265,74 @@ class Trainer:
             stream.load_state_dict(metric_state)
         if state is None:
             state = self.runtime.state()   # fresh initial capsule
+        plan = self._plan
+        supervised = plan is not None and plan.max_restarts > 0
+        if supervised:
+            # host-side snapshot of the entry capsule: the restore
+            # template and the ultimate fallback point. numpy copies —
+            # immune to buffer donation by subsequent run_from calls.
+            entry = jax.tree_util.tree_map(
+                lambda a: np.asarray(jax.device_get(a)), state)
+            entry_metrics = stream.state_dict()
         done = start
         out = None
-        rewards_log, dones_log = [], []
-        steps = 0
+        # committed segments as (done_after, rewards, dones, steps):
+        # recovery to an older checkpoint truncates this list so the
+        # reported reward/done arrays match the single surviving
+        # timeline, bit-exactly — replayed segments replace, not append
+        segs: list = []
+        steps_executed = 0
+        consec = 0
+        restarts = 0
+        recoveries: list = []
         t0 = time.perf_counter()
         while done < n_intervals:
             chunk = min(self.ckpt_every or (n_intervals - done),
                         n_intervals - done)
-            # only the final segment pays the reporting-only trailing
-            # learner pass; intermediate segments just stream metrics
-            out = self.runtime.run_from(
-                state, chunk, finalize=(done + chunk >= n_intervals))
+            try:
+                # only the final segment pays the reporting-only trailing
+                # learner pass; intermediate segments just stream metrics
+                out = self.runtime.run_from(
+                    state, chunk, finalize=(done + chunk >= n_intervals))
+                if plan is not None:
+                    # BEFORE the capsule is saved: a diverged step must
+                    # never become durable
+                    self._check_finite(out.params)
+            except Exception as e:
+                if not supervised or consec >= plan.max_restarts:
+                    raise
+                consec += 1
+                restarts += 1
+                delay = min(plan.backoff * (2 ** (consec - 1)),
+                            plan.backoff_cap)
+                print(f"[trainer] segment at interval {done} failed "
+                      f"({type(e).__name__}: {e}); restart "
+                      f"{consec}/{plan.max_restarts} after "
+                      f"{delay:.3f}s backoff", file=sys.stderr)
+                time.sleep(delay)
+                r0 = time.perf_counter()
+                state, done, mstate = self._recover(
+                    entry, start, entry_metrics)
+                stream = evaluate.ReturnStream(cfg.n_envs)
+                if mstate is not None:
+                    stream.load_state_dict(mstate)
+                segs = [s for s in segs if s[0] <= done]
+                recoveries.append({
+                    "failure": f"{type(e).__name__}: {e}",
+                    "restored_to": done,
+                    "backoff_s": delay,
+                    "restore_s": time.perf_counter() - r0,
+                })
+                continue
+            consec = 0
             if self.on_interval is not None:
                 for i, metrics in out.interval_metrics():
                     self.on_interval(done + i, metrics)
             done += chunk
             state = self.runtime.state()
             stream.extend(out.rewards, out.dones)
-            rewards_log.append(out.rewards)
-            dones_log.append(out.dones)
-            steps += out.steps
+            segs.append((done, out.rewards, out.dones, out.steps))
+            steps_executed += out.steps
             if self.checkpoint_dir:
                 self._save(state, done, stream)
             if self.on_segment is not None:
@@ -211,10 +343,13 @@ class Trainer:
             out = self.runtime.run_from(state, 0)
         wall = time.perf_counter() - t0
         empty = np.zeros((0, cfg.alpha, cfg.n_envs), np.float32)
+        rewards_log = [s[1] for s in segs]
+        dones_log = [s[2] for s in segs]
         return TrainReport(
             params=out.params, state=state, intervals=done,
-            resumed_from=start, steps=steps, wall_time=wall,
-            sps=steps / max(wall, 1e-9),
+            resumed_from=start, steps=steps_executed, wall_time=wall,
+            sps=steps_executed / max(wall, 1e-9),
             rewards=np.concatenate(rewards_log) if rewards_log else empty,
             dones=np.concatenate(dones_log) if dones_log else empty,
-            episode_returns=stream.returns)
+            episode_returns=stream.returns,
+            restarts=restarts, recoveries=recoveries)

@@ -1,0 +1,10 @@
+"""Deterministic fault injection + self-healing supervision (DESIGN.md
+§11): ``FaultPlan`` declares a seeded chaos schedule, ``FaultInjector``
+fires it at logical ``(site, interval)`` points across training and
+serving, and the supervisor (core/trainer.Trainer) recovers bit-exactly
+from whatever it breaks."""
+from repro.faults.plan import (SITES, FaultEvent, FaultInjector,
+                               FaultPlan, InjectedFault)
+
+__all__ = ["SITES", "FaultEvent", "FaultInjector", "FaultPlan",
+           "InjectedFault"]

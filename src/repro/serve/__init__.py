@@ -19,5 +19,6 @@ Quickstart:
     result = server.act(obs, seed=7)        # -> ActionResult
 """
 from repro.serve.config import ServeConfig                      # noqa: F401
-from repro.serve.server import (ActionResult, PolicyServer,     # noqa: F401
-                                ServerClosed)
+from repro.serve.server import (ActionResult, DeadlineExceeded,  # noqa: F401
+                                DispatcherError, Overloaded,
+                                PolicyServer, ServerClosed)

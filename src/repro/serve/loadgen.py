@@ -14,6 +14,15 @@ keys, and request seeds are the request index — replaying the generator
 replays the exact action stream (the serving determinism contract,
 DESIGN.md §10).
 
+Degradation-aware (DESIGN.md §11): with ``retry > 0`` submissions go
+through ``submit(block=False)`` and an ``Overloaded`` shed is retried
+up to ``retry`` times with seeded-jitter exponential backoff (jitter
+decorrelates retry storms; the seed keeps the replay deterministic).
+Requests the server sheds with a typed error (``Overloaded`` after
+retries, ``DeadlineExceeded``, ``DispatcherError``) are COUNTED, not
+crashed on — the paper-style numbers are computed over the answered
+requests and the shed counts ride along in the result dict.
+
 ``repro.launch.serve --spec`` and ``benchmarks/serve_bench.py`` are
 both thin wrappers over ``run``.
 """
@@ -27,17 +36,36 @@ import jax
 
 
 def run(spec, requests: int = 400, rate: float = 2000.0, seed: int = 0,
-        checkpoint: Optional[str] = None, warmup: int = 64) -> dict:
+        checkpoint: Optional[str] = None, warmup: int = 64,
+        retry: int = 0, retry_backoff_ms: float = 2.0) -> dict:
     """Build ``spec``'s session, serve it (loading ``checkpoint`` or the
     spec's newest capsule), drive ``requests`` Poisson arrivals at
     ``rate`` req/s, and return::
 
         {"serve_qps": ..., "serve_p50_ms": ..., "serve_p99_ms": ...,
-         "serve_mean_batch": ...}
+         "serve_mean_batch": ..., "serve_shed": ..., "serve_restarts": ...}
     """
     from repro import api
+    from repro.serve.server import (DeadlineExceeded, DispatcherError,
+                                    Overloaded, ServerClosed)
     session = api.build(spec)
     server = session.serve(checkpoint=checkpoint)
+    rng = np.random.RandomState(seed)
+
+    def _submit(ob, request_seed):
+        if not retry:
+            return server.submit(ob, seed=request_seed)
+        for attempt in range(retry + 1):
+            try:
+                return server.submit(ob, seed=request_seed, block=False)
+            except Overloaded:
+                if attempt == retry:
+                    raise
+                # exponential backoff with seeded jitter in [0.5, 1.5):
+                # decorrelates a retry storm without losing replayability
+                delay_ms = retry_backoff_ms * (2 ** attempt)
+                time.sleep(delay_ms * (0.5 + rng.uniform()) / 1e3)
+
     try:
         # distinct observations from the env's reset distribution,
         # pre-generated so generation cost never pollutes latency
@@ -46,34 +74,57 @@ def run(spec, requests: int = 400, rate: float = 2000.0, seed: int = 0,
             jax.random.split(jax.random.key(seed), n_obs))
         obs = np.asarray(obs)
         for i in range(min(warmup, requests)):      # steady-state warmup
-            server.act(obs[i % n_obs], seed=1_000_000 + i)
+            try:
+                server.act(obs[i % n_obs], seed=1_000_000 + i)
+            except (Overloaded, DeadlineExceeded, DispatcherError):
+                # a chaos plan may kill the dispatcher mid-warmup; the
+                # typed error IS the degradation contract working, and
+                # warmup requests are not measured — keep priming
+                pass
 
-        rng = np.random.RandomState(seed)
         arrive = np.cumsum(rng.exponential(1.0 / rate, size=requests))
         done_at = np.zeros(requests)
-        futures = []
+        futures: list = [None] * requests
+        shed = 0
         t0 = time.perf_counter()
         for i in range(requests):
             delay = (t0 + arrive[i]) - time.perf_counter()
             if delay > 0:
                 time.sleep(delay)
-            fut = server.submit(obs[i % n_obs], seed=i)
+            try:
+                fut = _submit(obs[i % n_obs], i)
+            except Overloaded:
+                shed += 1       # retries exhausted: this request is shed
+                continue
 
             def _done(_fut, i=i):
                 done_at[i] = time.perf_counter()
             fut.add_done_callback(_done)
-            futures.append(fut)
-        for fut in futures:
-            fut.result(timeout=120)
+            futures[i] = fut
+        answered = np.zeros(requests, bool)
+        for i, fut in enumerate(futures):
+            if fut is None:
+                continue
+            try:
+                fut.result(timeout=120)
+                answered[i] = True
+            except (Overloaded, DeadlineExceeded, DispatcherError,
+                    ServerClosed):
+                shed += 1       # typed shed — counted, never hung
         stats = server.stats()
     finally:
         server.stop()
     latency_ms = (done_at - (t0 + arrive)) * 1e3
-    wall = max(float(done_at.max()) - t0, 1e-9)
-    p50, p99 = np.percentile(latency_ms, [50, 99])
+    ans_lat = latency_ms[answered]
+    n_ans = int(answered.sum())
+    wall = max(float(done_at[answered].max() if n_ans else 0.0) - t0, 1e-9)
+    p50, p99 = (np.percentile(ans_lat, [50, 99]) if n_ans
+                else (float("nan"), float("nan")))
     return {
-        "serve_qps": requests / wall,
+        "serve_qps": n_ans / wall,
         "serve_p50_ms": float(p50),
         "serve_p99_ms": float(p99),
         "serve_mean_batch": stats["mean_batch"],
+        "serve_shed": shed,
+        "serve_restarts": stats["n_restarts"],
     }

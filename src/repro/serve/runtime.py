@@ -25,13 +25,15 @@ class ServeRuntime:
     name = "serve"
 
     def __init__(self, env: Env, policy_apply: Callable, params, opt,
-                 cfg: HTSConfig, serve: Optional[ServeConfig] = None):
+                 cfg: HTSConfig, serve: Optional[ServeConfig] = None,
+                 faults=None):
         self.env = env
         self.policy_apply = policy_apply
         self.params = params
         self.opt = opt                # unused: serving never updates
         self.cfg = cfg
         self.serve_config = serve if serve is not None else ServeConfig()
+        self.faults = faults          # shared FaultInjector (or None)
 
     def init(self) -> None:
         pass
@@ -50,7 +52,8 @@ class ServeRuntime:
             self.policy_apply,
             self.params if params is None else params,
             obs_like=np.asarray(obs0),
-            serve=self.serve_config, seed=self.cfg.seed)
+            serve=self.serve_config, seed=self.cfg.seed,
+            faults=self.faults)
         return srv.start() if start else srv
 
     # ----------------------------------- training contract: refuse loud

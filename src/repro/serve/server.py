@@ -30,11 +30,26 @@ never donated — every dispatch reads them).
 Failure discipline mirrors the host runtime's pools: a dispatcher death
 fails every pending and future request with the original traceback
 instead of hanging clients on futures that will never resolve.
+
+Graceful degradation (DESIGN.md §11) — every shed request gets a TYPED
+error, never a hung future:
+
+  * ``Overloaded``        — admission queue full (``submit(block=False)``).
+    Subclasses ``queue.Full``, so pre-taxonomy callers keep working.
+  * ``DeadlineExceeded``  — the request waited in the queue longer than
+    ``ServeConfig.deadline_ms`` before the dispatcher picked it up.
+  * ``DispatcherError``   — the request was IN FLIGHT when the
+    dispatcher failed and the server restarted the loop in place
+    (``ServeConfig.max_restarts``); queued requests survive the restart
+    untouched and the health probe stays green throughout.
+  * ``ServerClosed``      — submitted to a stopped/closing/dead server,
+    or still queued when ``close()`` tore the server down.
 """
 from __future__ import annotations
 
 import queue
 import threading
+import time
 import traceback
 from concurrent.futures import Future
 from dataclasses import dataclass
@@ -46,13 +61,32 @@ import jax.numpy as jnp
 
 from repro.core import determinism
 from repro.core.rollout import actor_forward
+from repro.faults import FaultInjector, FaultPlan
 from repro.serve.config import ServeConfig
 
 _SHUTDOWN = object()
 
 
 class ServerClosed(RuntimeError):
-    """Raised by submit/act on a stopped or dead server."""
+    """Raised by submit/act on a stopped or dead server, and set on
+    futures still queued when ``close()`` tears the server down."""
+
+
+class Overloaded(queue.Full):
+    """Typed load-shedding rejection: the admission queue is at
+    ``max_queue``. A ``queue.Full`` subclass — callers that predate the
+    taxonomy and catch ``queue.Full`` still see every rejection."""
+
+
+class DeadlineExceeded(RuntimeError):
+    """The request sat in the admission queue past its
+    ``ServeConfig.deadline_ms`` deadline; shed instead of served stale."""
+
+
+class DispatcherError(RuntimeError):
+    """The request was in flight when the dispatcher failed; the server
+    restarted in place, and this request (only) was the casualty —
+    resubmission is safe (serving is stateless and deterministic)."""
 
 
 @dataclass(frozen=True)
@@ -68,6 +102,7 @@ class _Request:
     obs: np.ndarray
     seed: int
     future: Future
+    admitted: float = 0.0      # monotonic admission time (deadline clock)
 
 
 class PolicyServer:
@@ -87,7 +122,8 @@ class PolicyServer:
     """
 
     def __init__(self, policy_apply: Callable, params, obs_like,
-                 serve: Optional[ServeConfig] = None, seed: int = 0):
+                 serve: Optional[ServeConfig] = None, seed: int = 0,
+                 faults: "Optional[FaultInjector | FaultPlan]" = None):
         self.serve = serve if serve is not None else ServeConfig()
         self.policy_apply = policy_apply
         self.params = params
@@ -98,14 +134,23 @@ class PolicyServer:
         self._queue: "queue.Queue" = queue.Queue(self.serve.max_queue)
         self._thread: Optional[threading.Thread] = None
         self._stopping = threading.Event()
+        self._closing = threading.Event()
         self._failure: Optional[BaseException] = None
         self._failure_tb: Optional[str] = None
         self._lock = threading.Lock()
+        # "dispatcher"-site chaos fires at dispatch index d (the same
+        # shared injector a Session threads through training)
+        if faults is not None and not isinstance(faults, FaultInjector):
+            faults = FaultInjector(FaultPlan.of(faults))
+        self._faults = faults
+        self._dispatch_seq = 0    # dispatch attempts incl. failed ones
         # reporting-only counters (under _lock)
         self.n_requests = 0
         self.n_dispatches = 0
         self.n_rows = 0           # sum of dispatch occupancies
         self.n_rejected = 0
+        self.n_deadline = 0       # shed past deadline_ms
+        self.n_restarts = 0       # in-place dispatcher restarts
         self._program = self._build()
 
     # ------------------------------------------------------------ build
@@ -154,26 +199,69 @@ class PolicyServer:
         # fail anything that raced its way in behind the sentinel
         self._fail_pending(ServerClosed("server stopped"))
 
+    def close(self) -> None:
+        """Graceful teardown, biased toward shedding: stop admission
+        NOW, let the in-flight dispatch flush (its futures resolve
+        normally), then fail everything still queued with a typed
+        ``ServerClosed`` — never a hung future. ``stop()`` is the
+        drain-everything variant; ``close()`` is what a deadline-bound
+        shutdown wants. Idempotent, and safe on a never-started or
+        already-dead server."""
+        self._closing.set()
+        if self._thread is not None:
+            try:
+                self._queue.put_nowait(_SHUTDOWN)
+            except queue.Full:
+                pass  # the loop notices _closing at its next tick
+            self._thread.join()
+            self._thread = None
+        self._fail_pending(ServerClosed("server closed"))
+
     def __enter__(self) -> "PolicyServer":
         return self.start() if self._thread is None else self
 
     def __exit__(self, *exc) -> None:
-        self.stop()
+        self.close()
 
     @property
     def dead(self) -> bool:
         return self._failure is not None
 
+    @property
+    def ready(self) -> bool:
+        """Readiness probe: is a submit() right now going to be
+        admitted? (dispatcher alive, not stopping/closing, not dead)"""
+        return (self._thread is not None and self._thread.is_alive()
+                and not self.dead and not self._stopping.is_set()
+                and not self._closing.is_set())
+
+    def health(self) -> dict:
+        """Liveness probe. ``ok`` stays True through in-place
+        dispatcher restarts (the thread survives; only the in-flight
+        batch is failed) — it goes False only when the server is dead
+        (restarts exhausted) or torn down."""
+        alive = self._thread is not None and self._thread.is_alive()
+        with self._lock:
+            restarts = self.n_restarts
+        return {
+            "ok": alive and not self.dead,
+            "ready": self.ready,
+            "dispatcher_alive": alive,
+            "dead": self.dead,
+            "queue_depth": self._queue.qsize(),
+            "restarts": restarts,
+        }
+
     # -------------------------------------------------------- admission
     def submit(self, obs, seed: int = 0, block: bool = True) -> Future:
         """Admit one request; the Future resolves to an ActionResult.
-        ``block=False`` raises ``queue.Full`` instead of backpressuring
-        when the admission queue is at ``max_queue``."""
+        ``block=False`` raises ``Overloaded`` (a ``queue.Full``) instead
+        of backpressuring when the admission queue is at ``max_queue``."""
         if self._failure is not None:
             raise ServerClosed(
                 f"serve dispatcher died: {self._failure!r}") \
                 from self._failure
-        if self._stopping.is_set():
+        if self._stopping.is_set() or self._closing.is_set():
             # note an UNSTARTED server does accept submits — the queue
             # just accumulates until start() (how tests stage specific
             # batch compositions); only a stopping server admits nothing
@@ -183,13 +271,16 @@ class PolicyServer:
             raise ValueError(
                 f"request obs shape {tuple(obs.shape)} != served env's "
                 f"obs shape {self._obs_shape}")
-        req = _Request(obs=obs, seed=int(seed), future=Future())
+        req = _Request(obs=obs, seed=int(seed), future=Future(),
+                       admitted=time.monotonic())
         try:
             self._queue.put(req, block=block)
         except queue.Full:
             with self._lock:
                 self.n_rejected += 1
-            raise
+            raise Overloaded(
+                f"admission queue is at max_queue="
+                f"{self.serve.max_queue}; request shed") from None
         with self._lock:
             self.n_requests += 1
         return req.future
@@ -220,6 +311,23 @@ class PolicyServer:
                 self._stopping.set()
                 break
             batch.append(req)
+        if self.serve.deadline_ms:
+            # shed at PICKUP, not admission: the deadline measures how
+            # stale the answer would be, which only the dispatcher's
+            # clock knows
+            now = time.monotonic()
+            live = []
+            for req in batch:
+                waited_ms = (now - req.admitted) * 1e3
+                if waited_ms > self.serve.deadline_ms:
+                    with self._lock:
+                        self.n_deadline += 1
+                    req.future.set_exception(DeadlineExceeded(
+                        f"request waited {waited_ms:.1f}ms in queue, "
+                        f"deadline is {self.serve.deadline_ms}ms"))
+                else:
+                    live.append(req)
+            batch = live
         return batch
 
     def _dispatch(self, batch: list) -> None:
@@ -243,26 +351,57 @@ class PolicyServer:
 
     def _loop(self) -> None:
         batch = None
-        try:
-            while True:
-                batch = self._gather()
-                if batch is None:          # timeout tick
-                    if self._stopping.is_set():
+        consec = 0          # consecutive failures (reset per dispatch)
+        while True:
+            try:
+                while True:
+                    batch = self._gather()
+                    if batch is None:          # timeout tick
+                        if self._stopping.is_set() or \
+                                self._closing.is_set():
+                            return
+                        continue
+                    if batch:
+                        seq = self._dispatch_seq
+                        self._dispatch_seq += 1   # counts failed attempts
+                        if self._faults is not None:
+                            self._faults.fire("dispatcher", seq)
+                        self._dispatch(batch)
+                        consec = 0
+                    batch = None
+                    if self._closing.is_set():
+                        return      # close(): in-flight flushed, done
+                    if self._stopping.is_set() and self._queue.empty():
                         return
+            except BaseException as e:      # noqa: BLE001 — fail loudly
+                if consec < self.serve.max_restarts:
+                    # degrade, don't die: only the in-flight batch is
+                    # lost (typed DispatcherError — resubmission is
+                    # safe); queued requests stay admitted, the thread
+                    # survives, health stays green
+                    consec += 1
+                    with self._lock:
+                        self.n_restarts += 1
+                    err = DispatcherError(
+                        f"dispatcher failed (in-place restart "
+                        f"{consec}/{self.serve.max_restarts}): {e!r}")
+                    err.__cause__ = e
+                    for req in batch or ():
+                        if not req.future.done():
+                            req.future.set_exception(err)
+                    batch = None
+                    time.sleep(min(self.serve.restart_backoff_ms
+                                   * 2 ** (consec - 1), 1000.0) / 1e3)
                     continue
-                if batch:
-                    self._dispatch(batch)
-                if self._stopping.is_set() and self._queue.empty():
-                    return
-        except BaseException as e:          # noqa: BLE001 — fail loudly
-            self._failure = e
-            self._failure_tb = traceback.format_exc()
-            # the in-flight batch is already off the queue: its futures
-            # must be failed here or clients hang on them forever
-            for req in batch or ():
-                if not req.future.done():
-                    req.future.set_exception(e)
-            self._fail_pending(e)
+                self._failure = e
+                self._failure_tb = traceback.format_exc()
+                # the in-flight batch is already off the queue: its
+                # futures must be failed here or clients hang forever
+                for req in batch or ():
+                    if not req.future.done():
+                        req.future.set_exception(e)
+                self._fail_pending(e)
+                return
 
     def _fail_pending(self, exc: BaseException) -> None:
         while True:
@@ -280,6 +419,8 @@ class PolicyServer:
                 "n_requests": self.n_requests,
                 "n_dispatches": self.n_dispatches,
                 "n_rejected": self.n_rejected,
+                "n_deadline": self.n_deadline,
+                "n_restarts": self.n_restarts,
                 "mean_batch": (self.n_rows / self.n_dispatches
                                if self.n_dispatches else 0.0),
             }

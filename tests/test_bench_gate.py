@@ -179,6 +179,22 @@ def test_gate_anchors_on_newest_record_with_key():
     assert ok and "baseline=2500.0" in msg
 
 
+def test_malformed_lines_skip_loudly_with_line_number(tmp_path, capsys):
+    """A truncated/hand-edited JSON line is ignored but NAMED (path and
+    line number on stderr): a silently-shrinking baseline window is the
+    same silently-vacuous-gate failure mode as an unfingerprinted
+    baseline."""
+    import json
+    path = tmp_path / "bench.json"
+    path.write_text(json.dumps(_rec(100.0)) + "\n"
+                    + '{"truncated mid-wri\n'
+                    + json.dumps(_rec(95.0)) + "\n")
+    records = check_sps.load_records(str(path))
+    assert len(records) == 2          # the good lines both survive
+    err = capsys.readouterr().err
+    assert f"{path}:2" in err and "not valid JSON" in err
+
+
 def test_live_bench_file_parses_and_gate_runs():
     """The committed BENCH_sps.json stays loadable end-to-end."""
     path = os.path.join(os.path.dirname(__file__), "..", "BENCH_sps.json")

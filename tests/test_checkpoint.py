@@ -1,0 +1,165 @@
+"""Checkpoint io: the corruption/error taxonomy (DESIGN.md §11).
+
+Two disjoint failure families, because they demand different responses:
+
+* ``CheckpointCorrupt`` (RuntimeError) — the BYTES cannot be trusted:
+  torn capsule (manifest without npz), truncated/corrupt archive, a
+  leaf failing its manifest crc32. Survivable: supervisors fall back to
+  an older complete checkpoint (core/trainer.Trainer does).
+* ``ValueError`` — the STRUCTURE disagrees with the restore template:
+  leaf count, tree shape, leaf shapes, dtypes, a missing manifest.
+  A caller error no amount of retrying fixes.
+
+Plus the selection helpers (``complete_checkpoints`` / ``latest`` skip
+torn capsules) and the ``restore_prefix`` error paths serving relies on.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import io as ckpt_io
+
+
+def _tree(seed=0):
+    rng = np.random.RandomState(seed)
+    return {"b": rng.randn(3).astype(np.float32),
+            "w": rng.randn(4, 3).astype(np.float32),
+            "extra": rng.randn(2, 2).astype(np.float32)}
+
+
+def _save(tmp_path, name="step_00000001", tree=None):
+    path = str(tmp_path / name)
+    ckpt_io.save(path, tree if tree is not None else _tree(),
+                 metadata={"intervals": 1})
+    return path
+
+
+# ------------------------------------------------------------- checksums
+def test_manifest_records_per_leaf_crc32(tmp_path):
+    path = _save(tmp_path)
+    m = ckpt_io.load_manifest(path)
+    assert len(m["crc32"]) == m["n_leaves"] == 3
+    restored = ckpt_io.restore(path, _tree(1))
+    for k, want in _tree().items():
+        np.testing.assert_array_equal(np.asarray(restored[k]), want)
+
+
+def test_truncated_npz_raises_checkpoint_corrupt(tmp_path):
+    path = _save(tmp_path)
+    npz = path + ".npz"
+    with open(npz, "r+b") as f:
+        size = f.seek(0, os.SEEK_END)
+        f.truncate(size // 2)
+    with pytest.raises(ckpt_io.CheckpointCorrupt):
+        ckpt_io.restore(path, _tree())
+
+
+def test_modified_leaf_fails_its_checksum(tmp_path):
+    """Content corruption the zip layer cannot see — the npz rewritten
+    internally consistent but with one leaf's values changed — is
+    exactly what the manifest's per-leaf crc32 exists to catch."""
+    path = _save(tmp_path)
+    npz = path + ".npz"
+    arrays = dict(np.load(npz))
+    arrays["leaf_1"] = arrays["leaf_1"] + 1.0
+    with open(npz, "wb") as f:
+        np.savez(f, **arrays)
+    with pytest.raises(ckpt_io.CheckpointCorrupt, match="checksum"):
+        ckpt_io.restore(path, _tree())
+
+
+def test_missing_npz_is_torn_not_selectable(tmp_path):
+    old = _save(tmp_path, "step_00000001")
+    torn = _save(tmp_path, "step_00000002")
+    os.remove(torn + ".npz")
+    # restore of the torn capsule: corrupt (survivable), naming the tear
+    with pytest.raises(ckpt_io.CheckpointCorrupt, match="torn"):
+        ckpt_io.restore(torn, _tree())
+    # selection skips it entirely: latest() is the older COMPLETE one
+    assert ckpt_io.complete_checkpoints(str(tmp_path)) == [old]
+    assert ckpt_io.latest(str(tmp_path)) == old
+
+
+def test_complete_checkpoints_newest_first(tmp_path):
+    paths = [_save(tmp_path, f"step_{i:08d}") for i in (1, 2, 3)]
+    assert ckpt_io.complete_checkpoints(str(tmp_path)) == paths[::-1]
+    assert ckpt_io.complete_checkpoints(str(tmp_path / "nowhere")) == []
+
+
+def test_corrupt_is_not_a_valueerror():
+    """The taxonomy is load-bearing: supervisors catch CheckpointCorrupt
+    (fall back) while letting ValueError (config mismatch) propagate."""
+    assert issubclass(ckpt_io.CheckpointCorrupt, RuntimeError)
+    assert not issubclass(ckpt_io.CheckpointCorrupt, ValueError)
+
+
+# ------------------------------------------------------ structural errors
+def test_restore_validates_structure_loudly(tmp_path):
+    path = _save(tmp_path)
+    with pytest.raises(ValueError, match="leaves"):
+        ckpt_io.restore(path, {"only": np.zeros(3, np.float32)})
+    bad_shape = dict(_tree(), w=np.zeros((5, 3), np.float32))
+    with pytest.raises(ValueError, match="shape"):
+        ckpt_io.restore(path, bad_shape)
+
+
+# ---------------------------------------------------- restore_prefix paths
+def _prefix_template():
+    t = _tree()
+    return {"b": t["b"], "extra": t["extra"]}   # first 2 of 3 flat leaves
+
+
+def test_restore_prefix_happy_path(tmp_path):
+    path = _save(tmp_path)
+    got = ckpt_io.restore_prefix(path, _prefix_template())
+    want = _tree()
+    np.testing.assert_array_equal(np.asarray(got["b"]), want["b"])
+    np.testing.assert_array_equal(np.asarray(got["extra"]), want["extra"])
+
+
+def test_restore_prefix_requires_manifest(tmp_path):
+    path = _save(tmp_path)
+    os.remove(path + ".json")
+    with pytest.raises(ValueError, match="no manifest"):
+        ckpt_io.restore_prefix(path, _prefix_template())
+
+
+def test_restore_prefix_requires_n_leaves_field(tmp_path):
+    path = _save(tmp_path)
+    m = ckpt_io.load_manifest(path)
+    del m["n_leaves"]
+    with open(path + ".json", "w") as f:
+        json.dump(m, f)
+    with pytest.raises(ValueError, match="n_leaves"):
+        ckpt_io.restore_prefix(path, _prefix_template())
+
+
+def test_restore_prefix_template_larger_than_capsule(tmp_path):
+    path = _save(tmp_path)
+    big = dict(_tree(), more=np.zeros(2, np.float32))
+    with pytest.raises(ValueError, match="needs"):
+        ckpt_io.restore_prefix(path, big)
+
+
+def test_restore_prefix_shape_mismatch(tmp_path):
+    path = _save(tmp_path)
+    bad = dict(_prefix_template(), b=np.zeros(7, np.float32))
+    with pytest.raises(ValueError, match="prefix leaf"):
+        ckpt_io.restore_prefix(path, bad)
+
+
+def test_restore_prefix_dtype_mismatch(tmp_path):
+    path = _save(tmp_path)
+    bad = {k: v.astype(np.float64)
+           for k, v in _prefix_template().items()}
+    with pytest.raises(ValueError, match="dtype"):
+        ckpt_io.restore_prefix(path, bad)
+
+
+def test_restore_prefix_corrupt_leaf_is_checkpoint_corrupt(tmp_path):
+    path = _save(tmp_path)
+    os.remove(path + ".npz")
+    with pytest.raises(ckpt_io.CheckpointCorrupt, match="torn"):
+        ckpt_io.restore_prefix(path, _prefix_template())

@@ -1,0 +1,218 @@
+"""Deterministic fault injection + self-healing supervision (DESIGN.md
+§11): the recovery contract, measured bit-exactly.
+
+The load-bearing claim: a supervised fit under ANY FaultPlan — worker
+thread deaths, env exceptions, learner divergence, corrupted
+checkpoints — finishes with final parameters and an episode-return
+stream EQUAL to the fault-free run's, because the supervisor restores a
+``TrainState`` capsule and ``run_from`` is a bit-exact replay. Plus the
+schedule machinery itself: events are validated eagerly, generated
+plans are seed-deterministic, and every event fires at most once (a
+transient fault — the replay after recovery proceeds cleanly).
+"""
+import numpy as np
+import jax
+import pytest
+
+from repro import api, models
+from repro.core import engine
+from repro.core.engine import HTSConfig
+from repro.core.trainer import Trainer
+from repro.envs import catch
+from repro.faults import (FaultEvent, FaultInjector, FaultPlan,
+                          InjectedFault, SITES)
+from repro.optim import rmsprop
+
+N = 6          # intervals per fit
+EVERY = 2      # checkpoint cadence
+
+
+def _host(faults=None):
+    env1 = catch.make()
+    cfg = HTSConfig(alpha=4, n_envs=4, seed=3)
+    policy = models.get_policy("mlp", env1)
+    params = policy.init(jax.random.key(0))
+    opt = rmsprop(7e-4, eps=1e-5)
+    return engine.make_runtime("host", env1, policy.apply, params, opt,
+                               cfg, faults=faults)
+
+
+def _fit(ckpt_dir, injector=None, n=N, every=EVERY):
+    """One supervised host-runtime fit; runtime and trainer SHARE the
+    injector (exactly how api.build threads one through a Session)."""
+    rt = _host(faults=injector)
+    return Trainer(rt, checkpoint_dir=str(ckpt_dir), ckpt_every=every,
+                   faults=injector).fit(n)
+
+
+def _assert_bitexact(got, want):
+    for a, b in zip(jax.tree.leaves(got.params),
+                    jax.tree.leaves(want.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(got.episode_returns,
+                                  want.episode_returns)
+    np.testing.assert_array_equal(got.rewards, want.rewards)
+
+
+@pytest.fixture(scope="module")
+def reference(tmp_path_factory):
+    """The fault-free oracle every recovery test compares against."""
+    return _fit(tmp_path_factory.mktemp("ref") / "ck")
+
+
+# -------------------------------------------------------------- the plan
+def test_event_validation_is_eager():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultEvent("gpu", 1)
+    with pytest.raises(ValueError, match=">= 0"):
+        FaultEvent("actor", -1)
+    with pytest.raises(ValueError, match="supports kind"):
+        FaultEvent("actor", 1, "nan")       # nan is learner-only
+    with pytest.raises(ValueError, match="unknown fault event field"):
+        FaultEvent.of({"site": "actor", "interval": 1, "when": "now"})
+    with pytest.raises(ValueError, match="needs"):
+        FaultEvent.of({"site": "actor"})
+    # tuple and dict forms resolve the site's default kind
+    assert FaultEvent.of(("learner", 3)).kind == "exc"
+    assert FaultEvent.of({"site": "checkpoint", "interval": 2}).kind \
+        == "truncate"
+
+
+def test_plan_validation_and_canonical_roundtrip():
+    with pytest.raises(ValueError, match="max_restarts"):
+        FaultPlan(max_restarts=-1)
+    with pytest.raises(ValueError, match="backoff_cap"):
+        FaultPlan(backoff=1.0, backoff_cap=0.5)
+    with pytest.raises(ValueError, match="unknown faults field"):
+        FaultPlan.of({"budget": 3})
+    plan = FaultPlan(events=(("stepper", 2), ("learner", 3, "nan")),
+                     seed=9, max_restarts=2, backoff=0.01)
+    assert FaultPlan.of(plan.canonical()) == plan
+
+
+def test_generate_is_seed_deterministic():
+    a = FaultPlan.generate(7, 8)
+    assert a == FaultPlan.generate(7, 8)
+    assert a != FaultPlan.generate(8, 8)
+    assert all(1 <= e.interval < 8 and e.site in SITES for e in a.events)
+    assert a.max_restarts == len(a.events)   # absorbs its own storm
+
+
+# ---------------------------------------------------------- the injector
+def test_events_fire_at_most_once():
+    inj = FaultInjector(FaultPlan(events=(("stepper", 2),
+                                          ("learner", 3, "nan"),
+                                          ("stepper", 2))))
+    assert inj.poll("stepper", 1) is None
+    with pytest.raises(InjectedFault):       # exc kind raises at the site
+        inj.fire("stepper", 2)
+    ev = inj.fire("learner", 3)              # non-exc kinds are returned
+    assert ev is not None and ev.kind == "nan"
+    # the duplicate listing is a SECOND armed event (a persistent fault)
+    with pytest.raises(InjectedFault):
+        inj.fire("stepper", 2)
+    assert inj.poll("stepper", 2) is None    # all spent
+    assert not inj.armed and len(inj.fired) == 3
+
+
+# ---------------------------------------------------- bit-exact recovery
+@pytest.mark.parametrize("site,kind", [
+    ("actor", ""), ("executor", ""), ("stepper", ""),
+    ("env_step", ""), ("learner", "exc"), ("learner", "nan"),
+])
+def test_recovery_is_bitexact_per_site(tmp_path, reference, site, kind):
+    """Kill each host-runtime site (or NaN the learner) mid-run: the
+    supervisor restores the last capsule, replays, and the final params
+    + episode-return + reward streams EQUAL the fault-free run's.
+    Interval 2 sits inside the second segment, so the restore is from a
+    real mid-run checkpoint, and (for kind=nan) the poisoned apply at
+    j+K lands inside the same segment — caught by the finite check
+    before the capsule could become durable."""
+    inj = FaultInjector(FaultPlan(events=((site, 2, kind),),
+                                  max_restarts=2, backoff=0.0,
+                                  backoff_cap=0.0))
+    rep = _fit(tmp_path / "ck", inj)
+    assert rep.restarts == 1 and not inj.armed
+    rec = rep.recoveries[0]
+    assert set(rec) == {"failure", "restored_to", "backoff_s",
+                        "restore_s"}
+    assert rec["restored_to"] == 2 and rec["restore_s"] >= 0.0
+    _assert_bitexact(rep, reference)
+
+
+def test_corrupt_checkpoint_fallback_is_bitexact(tmp_path, reference):
+    """checkpoint-site truncation + a later worker death: the recovery
+    walk finds the newest checkpoint corrupt (CheckpointCorrupt), skips
+    it loudly, and restores the one before — still bit-exact, because
+    falling back further only means replaying more."""
+    inj = FaultInjector(FaultPlan(events=(("checkpoint", 4, "truncate"),
+                                          ("stepper", 5)),
+                                  max_restarts=2, backoff=0.0,
+                                  backoff_cap=0.0))
+    rep = _fit(tmp_path / "ck", inj)
+    assert rep.restarts == 1
+    # step_4 was truncated, so the walk fell back to step_2
+    assert rep.recoveries[0]["restored_to"] == 2
+    _assert_bitexact(rep, reference)
+
+
+def test_restart_budget_exhausted_reraises(tmp_path):
+    """A persistent fault (the same event listed twice: it re-fires on
+    the replay) exhausts max_restarts=1 and the second failure
+    propagates — supervision is bounded, not a retry-forever loop."""
+    inj = FaultInjector(FaultPlan(events=(("stepper", 2), ("stepper", 2)),
+                                  max_restarts=1, backoff=0.0,
+                                  backoff_cap=0.0))
+    with pytest.raises(RuntimeError, match="injected fault"):
+        _fit(tmp_path / "ck", inj)
+
+
+def test_unsupervised_failure_propagates(tmp_path):
+    """max_restarts=0 (the default plan): injection fires but nothing
+    absorbs it — today's fail-loud semantics, unchanged."""
+    inj = FaultInjector(FaultPlan(events=(("executor", 1),)))
+    with pytest.raises(RuntimeError, match="injected fault"):
+        _fit(tmp_path / "ck", inj)
+
+
+def test_spec_driven_chaos_is_bitexact(tmp_path):
+    """The whole surface end-to-end: a JSON-round-tripped ExperimentSpec
+    carrying a 3-event storm (worker death, checkpoint truncation,
+    a second worker death whose recovery must fall back PAST the
+    corrupt capsule), built by api.build — one shared injector spans
+    runtime pools and trainer — recovers bit-exactly vs the same spec
+    with no faults block."""
+    def spec(tag, faults):
+        return api.ExperimentSpec(
+            env="catch", policy="mlp",
+            optimizer={"name": "rmsprop", "kwargs": {"lr": 7e-4}},
+            algorithm="a2c", runtime="host",
+            hts={"alpha": 4, "n_envs": 4, "seed": 3}, intervals=N,
+            checkpoint={"dir": str(tmp_path / tag), "every": 1},
+            faults=faults)
+
+    chaos = spec("chaos", {
+        "events": [{"site": "stepper", "interval": 2},
+                   {"site": "checkpoint", "interval": 3,
+                    "kind": "truncate"},
+                   {"site": "executor", "interval": 3}],
+        "max_restarts": 3, "backoff": 0.0, "backoff_cap": 0.0})
+    chaos = api.loads(api.dumps(chaos))          # survives JSON round-trip
+    rep = api.build(chaos).fit()
+    clean = api.build(spec("clean", {})).fit()
+    assert rep.restarts == 2
+    # second recovery skipped the truncated step_3 and restored step_2
+    assert rep.recoveries[1]["restored_to"] == 2
+    _assert_bitexact(rep, clean)
+
+
+def test_trivial_plan_adds_no_machinery():
+    """An empty faults block builds no injector anywhere — the hot path
+    stays exactly as wide as before this subsystem existed."""
+    session = api.build(api.ExperimentSpec(
+        env="catch", policy="mlp",
+        optimizer={"name": "rmsprop", "kwargs": {"lr": 7e-4}},
+        algorithm="a2c", runtime="host",
+        hts={"alpha": 4, "n_envs": 4, "seed": 3}))
+    assert session.faults is None
+    assert session.runtime._faults is None

@@ -23,7 +23,10 @@ from repro.core.rollout import actor_forward
 from repro.core import determinism
 from repro.envs import catch
 from repro.optim import rmsprop
-from repro.serve import ActionResult, PolicyServer, ServeConfig, ServerClosed
+from repro.faults import FaultPlan
+from repro.serve import (ActionResult, DeadlineExceeded, DispatcherError,
+                         Overloaded, PolicyServer, ServeConfig,
+                         ServerClosed)
 
 
 def _setup(seed=3):
@@ -35,14 +38,16 @@ def _setup(seed=3):
     return env1, cfg, policy.apply, params, opt
 
 
-def _server(max_batch=8, max_queue=64, timeout_ms=50.0, seed=3):
+def _server(max_batch=8, max_queue=64, timeout_ms=50.0, seed=3,
+            faults=None, **serve_kw):
     env1, cfg, papply, params, opt = _setup(seed)
     _, obs0 = env1.reset(jax.random.key(0))
     srv = PolicyServer(papply, params, obs_like=np.asarray(obs0),
                        serve=ServeConfig(max_batch=max_batch,
                                          max_queue=max_queue,
-                                         timeout_ms=timeout_ms),
-                       seed=seed)
+                                         timeout_ms=timeout_ms,
+                                         **serve_kw),
+                       seed=seed, faults=faults)
     return srv, env1, papply, params
 
 
@@ -237,6 +242,106 @@ def test_dispatcher_death_fails_pending_and_future_requests():
         srv.submit(obs, seed=1)
 
 
+# ------------------------------------------------- graceful degradation
+def test_dispatcher_restart_keeps_health_green():
+    """A dispatcher-site fault with max_restarts budget: only the
+    in-flight batch is lost (typed DispatcherError, resubmission-safe),
+    the thread survives, subsequent requests are answered, and the
+    liveness probe stays ok throughout — the dispatcher kill is a blip,
+    not an outage."""
+    srv, env1, _, _ = _server(max_restarts=2, restart_backoff_ms=1.0,
+                              faults=FaultPlan(events=(("dispatcher", 0),)))
+    obs = _obs(env1, 1)[0]
+    fut = srv.submit(obs, seed=0)          # will be in flight at kill
+    srv.start()
+    with pytest.raises(DispatcherError, match="in-place restart"):
+        fut.result(timeout=30)
+    # the server shrugged it off: still ready, still answering
+    out = srv.act(obs, seed=0, timeout=30)
+    assert isinstance(out, ActionResult)
+    h = srv.health()
+    assert h["ok"] and h["ready"] and h["restarts"] == 1 and not h["dead"]
+    srv.stop()
+
+
+def test_restart_budget_exhaustion_kills_server():
+    """Persistent dispatcher faults (consecutive dispatch indices — the
+    restarted loop's next dispatch dies again) beyond max_restarts: the
+    server dies with the pre-existing fail-loud semantics."""
+    srv, env1, _, _ = _server(
+        max_restarts=1, restart_backoff_ms=1.0,
+        faults=FaultPlan(events=(("dispatcher", 0), ("dispatcher", 1))))
+    obs = _obs(env1, 1)[0]
+    f0 = srv.submit(obs, seed=0)
+    srv.start()
+    with pytest.raises(DispatcherError):
+        f0.result(timeout=30)              # kill 1: absorbed in place
+    f1 = srv.submit(obs, seed=1)
+    with pytest.raises(RuntimeError, match="injected fault"):
+        f1.result(timeout=30)              # kill 2: budget spent, dead
+    srv._thread.join(timeout=30)
+    assert srv.dead and not srv.health()["ok"]
+    with pytest.raises(ServerClosed, match="died"):
+        srv.submit(obs, seed=2)
+
+
+def test_deadline_sheds_stale_queued_requests():
+    """deadline_ms measures admission -> dispatcher pickup: requests
+    staged on an unstarted server go stale and are shed with a typed
+    DeadlineExceeded at pickup, never served late silently."""
+    import time
+    srv, env1, _, _ = _server(deadline_ms=25.0)
+    obs = _obs(env1, 1)[0]
+    stale = srv.submit(obs, seed=0)
+    time.sleep(0.2)                        # 200ms >> the 25ms deadline
+    srv.start()
+    with pytest.raises(DeadlineExceeded, match="deadline"):
+        stale.result(timeout=30)
+    # fresh requests on the running server make their deadline
+    assert isinstance(srv.act(obs, seed=1, timeout=30), ActionResult)
+    srv.stop()
+    assert srv.stats()["n_deadline"] == 1
+
+
+def test_close_fails_queued_requests_with_typed_error():
+    """close() is the shedding teardown: admission stops NOW and every
+    still-queued future resolves to ServerClosed — never a hang. (stop()
+    remains the drain-everything variant, pinned elsewhere.)"""
+    srv, env1, _, _ = _server()
+    obs = _obs(env1, 1)[0]
+    queued = [srv.submit(obs, seed=i) for i in range(3)]
+    srv.close()                            # never started: all shed
+    for f in queued:
+        with pytest.raises(ServerClosed, match="closed"):
+            f.result(timeout=5)
+    with pytest.raises(ServerClosed):
+        srv.submit(obs, seed=9)
+    srv.close()                            # idempotent
+
+
+def test_context_manager_closes_on_exit():
+    srv, env1, _, _ = _server()
+    obs = _obs(env1, 1)[0]
+    with srv as s:
+        assert s.ready
+        assert isinstance(s.act(obs, seed=0, timeout=30), ActionResult)
+    assert not srv.ready
+    with pytest.raises(ServerClosed):
+        srv.submit(obs, seed=1)
+
+
+def test_overloaded_is_a_typed_queue_full():
+    """The shed rejection is BOTH the new typed error and the
+    pre-taxonomy queue.Full, so existing callers keep catching it."""
+    assert issubclass(Overloaded, queue.Full)
+    srv, env1, _, _ = _server(max_queue=1)
+    obs = _obs(env1, 1)[0]
+    srv.submit(obs, seed=0, block=False)
+    with pytest.raises(Overloaded, match="shed"):
+        srv.submit(obs, seed=1, block=False)
+    srv.close()
+
+
 # -------------------------------------------------------- session.serve
 def _serve_spec(ckpt_dir=None, runtime="serve", **serve_kw):
     kw = {}
@@ -309,6 +414,10 @@ def test_loadgen_smoke_returns_finite_metrics():
     metrics = loadgen.run(_serve_spec(), requests=40, rate=4000.0,
                           seed=0, warmup=8)
     assert set(metrics) == {"serve_qps", "serve_p50_ms", "serve_p99_ms",
-                            "serve_mean_batch"}
-    for k, v in metrics.items():
-        assert np.isfinite(v) and v > 0, (k, v)
+                            "serve_mean_batch", "serve_shed",
+                            "serve_restarts"}
+    for k in ("serve_qps", "serve_p50_ms", "serve_p99_ms",
+              "serve_mean_batch"):
+        assert np.isfinite(metrics[k]) and metrics[k] > 0, (k, metrics[k])
+    # a healthy un-faulted run sheds nothing and never restarts
+    assert metrics["serve_shed"] == 0 and metrics["serve_restarts"] == 0
