@@ -32,11 +32,14 @@ IV = 12
 
 def bench_spec(runtime: str = "mesh", alpha: int = 8, n_envs: int = 8,
                staleness: int = 1, intervals: int = IV,
-               env_backend: str = "host") -> api.ExperimentSpec:
+               env_backend: str = "host",
+               n_replicas: int = 1) -> api.ExperimentSpec:
     """The default bench workload as a declarative spec. The hts dict
-    carries ``env_backend`` only when non-default, so host-backend
-    specs serialize byte-identically to every pre-backend-axis record
-    (the fingerprint match that keeps old baselines comparable)."""
+    carries ``env_backend`` only when non-default — and the batch block
+    likewise defaults (and is popped from the fingerprint) at
+    ``n_replicas=1`` — so host-backend single-replica specs serialize
+    byte-identically to every pre-backend-axis record (the fingerprint
+    match that keeps old baselines comparable)."""
     hts = {"alpha": alpha, "n_envs": n_envs, "seed": 0,
            "staleness": staleness}
     if env_backend != "host":
@@ -48,17 +51,22 @@ def bench_spec(runtime: str = "mesh", alpha: int = 8, n_envs: int = 8,
         algorithm="a2c",
         runtime=runtime,
         hts=hts,
-        intervals=intervals)
+        intervals=intervals,
+        batch=({"n_replicas": n_replicas} if n_replicas != 1 else None))
 
 
-def config_fingerprint(alpha=8, n_envs=8, staleness=1):
+def config_fingerprint(alpha=8, n_envs=8, staleness=1, n_replicas=1):
     """Everything about the benchmark workload that changes what an SPS
     number means — the bench spec's canonical serialization, minus the
     runtime axis (the record's ``sps`` mapping is keyed per
     runtime x env_backend cell). Comparable across records only when
-    equal."""
+    equal. A non-default replica count STAYS in the fingerprint
+    (workload_fingerprint keeps non-default batch blocks): an SPS
+    number measured on a 2-replica mesh must never gate — or be gated
+    by — a single-replica baseline."""
     fp = api.workload_fingerprint(
-        bench_spec(alpha=alpha, n_envs=n_envs, staleness=staleness))
+        bench_spec(alpha=alpha, n_envs=n_envs, staleness=staleness,
+                   n_replicas=n_replicas))
     fp.pop("runtime")
     # the backend axis also lives in the row key (``_device`` suffix),
     # never in the fingerprint — a sweep that adds device rows must not
@@ -67,15 +75,19 @@ def config_fingerprint(alpha=8, n_envs=8, staleness=1):
     return fp
 
 
-def sweep_key(runtime: str, env_backend: str = "host") -> str:
-    """The ``sps``-mapping key for one runtime x backend cell. Host rows
-    keep the historical un-suffixed keys."""
+def sweep_key(runtime: str, env_backend: str = "host",
+              n_replicas: int = 1) -> str:
+    """The ``sps``-mapping key for one runtime x backend x replicas
+    cell. Host single-replica rows keep the historical un-suffixed
+    keys; replica rows are suffixed ``_r<N>`` (satellite of the
+    batch-geometry axis: ``engine_sps_sharded_r2`` etc.)."""
     suffix = "" if env_backend == "host" else f"_{env_backend}"
-    return f"engine_sps_{runtime}{suffix}"
+    rep = "" if n_replicas == 1 else f"_r{n_replicas}"
+    return f"engine_sps_{runtime}{suffix}{rep}"
 
 
 def run(runtimes=None, intervals=IV, alpha=8, n_envs=8, staleness=1,
-        progress=None, env_backends=("host",)):
+        progress=None, env_backends=("host",), n_replicas=1):
     """``progress`` (optional) is attached as a Session ``on_interval``
     observer during the WARMUP run only, never the timed run. It fires
     live per interval on coordinator runtimes (host); the fused
@@ -89,17 +101,21 @@ def run(runtimes=None, intervals=IV, alpha=8, n_envs=8, staleness=1,
     # registry but has no interval semantics — its throughput is
     # measured by benchmarks/serve_bench.py in req/s, not sps
     for name in (runtimes or engine.training_runtime_names()):
+        if n_replicas != 1 and name not in ("host", "mesh", "sharded"):
+            # replica sweeps only make sense on geometry-aware runtimes
+            # (the baselines reject non-default batch at build time)
+            continue
         for backend in env_backends:
             # staleness reaches every runtime unmodified: the baselines
             # refuse K != 1 with a loud ValueError (sync is undelayed,
             # async has AsyncConfig.staleness) rather than silently
             # running a different workload than the record's config
             # fingerprint claims
-            cell = name if backend == "host" else f"{name}_{backend}"
+            cell = sweep_key(name, backend, n_replicas)[len("engine_sps_"):]
             session = api.build(bench_spec(
                 runtime=name, alpha=alpha, n_envs=n_envs,
                 staleness=staleness, intervals=intervals,
-                env_backend=backend))
+                env_backend=backend, n_replicas=n_replicas))
             if progress is not None:
                 observer = session.on_interval(
                     lambda m, _c=cell: progress(_c, m))
@@ -107,5 +123,6 @@ def run(runtimes=None, intervals=IV, alpha=8, n_envs=8, staleness=1,
             if progress is not None:
                 session.remove_observer(observer)
             out = session.run(intervals)
-            rows.append((sweep_key(name, backend), out.sps, "sps"))
+            rows.append((sweep_key(name, backend, n_replicas), out.sps,
+                         "sps"))
     return rows

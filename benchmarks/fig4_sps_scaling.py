@@ -1,7 +1,21 @@
 """Fig. 4(right): throughput (steps/s) vs number of environments —
 threaded host runtime with real (scaled) exponential step delays, catch
 policy. HTS-RL SPS should scale ~linearly in n_envs; the synchronous
-baseline's shouldn't (straggler effect)."""
+baseline's shouldn't (straggler effect).
+
+Second axis (PR 9): replica scale-out. ``run()`` adds
+``engine_sps_sharded_r<N>`` rows for every replica count the local
+platform can size (batch.n_replicas ∈ {1, 2, ...} up to the device
+count, fixed global batch) — the data-parallel half of Fig. 4, where
+the determinism contract means the curves measure pure scheduling,
+never a changed optimization problem. Standalone:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=2 PYTHONPATH=src \
+        python -m benchmarks.fig4_sps_scaling --n-replicas 1,2 \
+        --append-sps BENCH_sps.json
+
+(the module CLI defers to benchmarks.run's sweep machinery, which owns
+fingerprinting and record layout)."""
 import jax
 
 from repro import models
@@ -13,6 +27,26 @@ from repro.envs.steptime import StepTimeModel
 from repro.optim import rmsprop
 
 SCALE = 0.004            # seconds per simulated mean step
+
+
+def replica_rows(n_replicas=None, intervals=12, n_envs=8):
+    """``engine_sps_sharded_r<N>`` rows: the sharded runtime at each
+    replica count, fixed global batch. ``n_replicas=None`` sizes the
+    axis to the local platform: every power of two up to the visible
+    device count (1 device -> just r1)."""
+    from benchmarks import engine_sps
+    if n_replicas is None:
+        n_replicas = []
+        r = 1
+        while r <= len(jax.devices()):
+            n_replicas.append(r)
+            r *= 2
+    rows = []
+    for nr in n_replicas:
+        rows.extend(engine_sps.run(runtimes=["sharded"],
+                                   intervals=intervals, n_envs=n_envs,
+                                   n_replicas=nr))
+    return rows
 
 
 def run():
@@ -34,4 +68,16 @@ def run():
         t_sync = expected_runtime(K, n_envs, 1, beta=1.0) * SCALE
         rows.append((f"fig4r_syncmodel_envs{n_envs}", K / t_sync,
                      "virtual_sps"))
+    # the replica-scaling half: auto-sized to the local platform
+    rows.extend(replica_rows())
     return rows
+
+
+if __name__ == "__main__":
+    # the CLI form used by CI's forced-2-device scaling leg; delegates
+    # to benchmarks.run so records carry the standard fingerprints
+    import sys
+    from benchmarks.run import main
+    sys.argv = ([sys.argv[0], "--runtime", "sharded"]
+                + sys.argv[1:])
+    main()

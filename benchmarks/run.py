@@ -64,7 +64,8 @@ def _load_progress(args) -> dict:
         return {}
     # completed runtimes are only reusable if the sweep shape matches
     if (saved.get("intervals") != args.intervals
-            or saved.get("staleness", 1) != args.staleness):
+            or saved.get("staleness", 1) != args.staleness
+            or saved.get("n_replicas", "1") != args.n_replicas):
         return {}
     return saved.get("done", {})
 
@@ -74,7 +75,9 @@ def _save_progress(args, done: dict) -> None:
     tmp = _progress_path(args) + ".tmp"
     with open(tmp, "w") as f:
         json.dump({"intervals": args.intervals,
-                   "staleness": args.staleness, "done": done}, f, indent=1)
+                   "staleness": args.staleness,
+                   "n_replicas": args.n_replicas, "done": done}, f,
+                  indent=1)
     os.replace(tmp, _progress_path(args))
 
 
@@ -93,21 +96,26 @@ def _sweep_progress(rt_name: str, m: dict) -> None:
 def _run_runtime_sweep(args) -> None:
     from benchmarks import engine_sps
     names = args.runtime.split(",")
+    replicas = [int(r) for r in args.n_replicas.split(",")]
     t0 = time.time()
-    rows, failed = [], 0
+    failed = 0
+    rows_by_nr = {nr: [] for nr in replicas}
+    restored_by_nr = {nr: [] for nr in replicas}
     done = _load_progress(args)
-    restored = []
     print("name,value,unit")
     backends = args.env_backend.split(",")
-    # one sweep cell per runtime x env_backend, isolated like the tables;
-    # cells are named like their sps keys ("mesh", "mesh_device") so
-    # checkpoints and check_sps's restored-row staleness test agree
-    cells = [(rt, be) for rt in names for be in backends]
-    for rt_name, backend in cells:
-        cell = rt_name if backend == "host" else f"{rt_name}_{backend}"
+    # one sweep cell per runtime x env_backend x n_replicas, isolated
+    # like the tables; cells are named like their sps keys ("mesh",
+    # "mesh_device", "sharded_r2") so checkpoints and check_sps's
+    # restored-row staleness test agree
+    cells = [(rt, be, nr) for rt in names for be in backends
+             for nr in replicas]
+    for rt_name, backend, nr in cells:
+        cell = engine_sps.sweep_key(rt_name, backend,
+                                    nr)[len("engine_sps_"):]
         if cell in done:           # resumed: replay the recorded rows
             sub = [tuple(row) for row in done[cell]]
-            restored.append(cell)
+            restored_by_nr[nr].append(cell)
             print(f"# runtime {cell} restored from checkpoint",
                   file=sys.stderr, flush=True)
         else:
@@ -116,7 +124,8 @@ def _run_runtime_sweep(args) -> None:
                                      intervals=args.intervals,
                                      staleness=args.staleness,
                                      progress=_sweep_progress,
-                                     env_backends=(backend,))
+                                     env_backends=(backend,),
+                                     n_replicas=nr)
             except Exception:
                 failed += 1
                 print(f"# runtime {cell} FAILED:\n"
@@ -126,28 +135,35 @@ def _run_runtime_sweep(args) -> None:
             if args.ckpt_dir:
                 done[cell] = sub
                 _save_progress(args, done)
-        rows.extend(sub)
+        rows_by_nr[nr].extend(sub)
         for name, value, unit in sub:
             print(f"{name},{value:.6g},{unit}", flush=True)
     if args.append_sps:
-        record = {
-            "ts": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
-            "intervals": args.intervals,
-            "host": host_fingerprint(),
-            # workload fingerprint: check_sps only compares records with
-            # equal configs, so a sweep run with different HTSConfig
-            # knobs can never silently become the gate's baseline
-            "config": engine_sps.config_fingerprint(
-                staleness=args.staleness),
-            "wall_s": round(time.time() - t0, 2),
-            "sps": {name: round(value, 2) for name, value, _ in rows},
-        }
-        if restored:
-            # replayed rows carry an older measurement's numbers — flag
-            # them so the bench trajectory isn't polluted silently
-            record["restored_runtimes"] = restored
+        # one record PER replica count: the workload fingerprint of a
+        # multi-replica sweep includes its batch block, and check_sps
+        # only compares records with equal configs — so replica rows
+        # can never gate (or be gated by) single-replica baselines
         with open(args.append_sps, "a") as f:
-            f.write(json.dumps(record) + "\n")
+            for nr in replicas:
+                rows = rows_by_nr[nr]
+                if not rows:
+                    continue
+                record = {
+                    "ts": time.strftime("%Y-%m-%dT%H:%M:%SZ",
+                                        time.gmtime()),
+                    "intervals": args.intervals,
+                    "host": host_fingerprint(),
+                    "config": engine_sps.config_fingerprint(
+                        staleness=args.staleness, n_replicas=nr),
+                    "wall_s": round(time.time() - t0, 2),
+                    "sps": {name: round(value, 2)
+                            for name, value, _ in rows},
+                }
+                if restored_by_nr[nr]:
+                    # replayed rows carry an older measurement's numbers
+                    # — flag them so the bench trajectory isn't polluted
+                    record["restored_runtimes"] = restored_by_nr[nr]
+                f.write(json.dumps(record) + "\n")
         print(f"# appended to {args.append_sps}", file=sys.stderr,
               flush=True)
     if failed:
@@ -176,6 +192,15 @@ def main() -> None:
                          "are keyed engine_sps_<rt>_device. Only envs "
                          "with device ports (catch, gridmaze) support "
                          "'device'")
+    ap.add_argument("--n-replicas", default="1",
+                    help="comma-separated replica counts for the "
+                         "--runtime sweep (batch.n_replicas axis): "
+                         "counts != 1 write rows keyed "
+                         "engine_sps_<rt>_r<N> in their OWN --append-sps "
+                         "record (the replica count is part of the "
+                         "config fingerprint). Geometry-aware runtimes "
+                         "only (host,mesh,sharded); sharded needs that "
+                         "many visible devices")
     ap.add_argument("--append-sps", default=None, metavar="FILE",
                     help="with --runtime: append the sweep as a JSON line "
                          "to FILE (e.g. BENCH_sps.json)")
@@ -197,6 +222,8 @@ def main() -> None:
         ap.error("--ckpt-dir applies to the --runtime sweep")
     if args.env_backend != "host" and not args.runtime:
         ap.error("--env-backend applies to the --runtime sweep")
+    if args.n_replicas != "1" and not args.runtime:
+        ap.error("--n-replicas applies to the --runtime sweep")
 
     if args.runtime:
         _run_runtime_sweep(args)

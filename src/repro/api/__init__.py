@@ -28,5 +28,6 @@ from repro.api.session import Session, build, runtime_names  # noqa: F401
 from repro.api.spec import (  # noqa: F401
     CheckpointSpec, ComponentSpec, ExperimentSpec, diff_canonical,
     dumps, from_dict, load, loads, save, workload_fingerprint)
+from repro.core.batch import BatchConfig  # noqa: F401
 from repro.faults import FaultEvent, FaultPlan  # noqa: F401
 from repro.serve.config import ServeConfig  # noqa: F401

@@ -166,6 +166,24 @@ def build(spec: ExperimentSpec, **runtime_overrides) -> "Session":
     rkw = _decode_runtime_kwargs(rt_name, spec.runtime.kwargs)
     rkw.update(runtime_overrides)
 
+    # batch geometry (spec.batch, DESIGN.md §12) threads into the
+    # runtimes that honor the scale-out determinism contract: host and
+    # mesh reproduce any factorization in-process, sharded sizes its
+    # replica axis from it, stream maps grad_accumulation onto its
+    # learner microbatches. The baselines and the serving entry have no
+    # geometry to factorize — a non-default batch there is a spec
+    # error, named loudly rather than silently ignored.
+    _BATCH_RUNTIMES = ("host", "mesh", "sharded")
+    if rt_name in _BATCH_RUNTIMES:
+        rkw.setdefault("batch", spec.batch)
+    elif rt_name == _STREAM_RUNTIME:
+        rkw.setdefault("batch", spec.batch)
+    elif not spec.batch.is_default:
+        raise ValueError(
+            f"runtime {rt_name!r} does not implement the batch-geometry "
+            f"contract; non-default spec.batch pairs with "
+            f"{sorted(_BATCH_RUNTIMES + (_STREAM_RUNTIME,))}")
+
     # ONE injector spans every surface of the session — host runtime
     # pools, Trainer checkpoint writes, the serve dispatcher — so a
     # single FaultPlan schedules chaos across training AND serving

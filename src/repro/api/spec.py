@@ -32,6 +32,7 @@ import json
 from dataclasses import dataclass, field
 from typing import Any, Dict, Optional, Union
 
+from repro.core.batch import BatchConfig
 from repro.core.engine import HTSConfig
 from repro.faults import FaultPlan
 from repro.serve.config import ServeConfig
@@ -137,6 +138,14 @@ class ExperimentSpec:
     # workload_fingerprint: by the recovery guarantee, faults change
     # wall time, never what a result means.
     faults: FaultPlan = field(default_factory=FaultPlan)
+    # batch geometry (repro.core.batch, DESIGN.md §12):
+    # global_batch (= hts.n_envs) factorized as
+    # micro_batch x grad_accumulation x n_replicas. Validated eagerly
+    # against hts.n_envs here; threaded into the runtime by
+    # Session.build. Default (all None/1) reproduces the legacy
+    # runtime-determined geometry exactly — and is popped from
+    # workload_fingerprint so committed baselines stay comparable.
+    batch: BatchConfig = field(default_factory=BatchConfig)
 
     def __post_init__(self):
         object.__setattr__(self, "env", ComponentSpec.of(self.env, "env"))
@@ -151,6 +160,7 @@ class ExperimentSpec:
                            CheckpointSpec.of(self.checkpoint))
         object.__setattr__(self, "serve", ServeConfig.of(self.serve))
         object.__setattr__(self, "faults", FaultPlan.of(self.faults))
+        object.__setattr__(self, "batch", BatchConfig.of(self.batch))
         self._validate()
 
     def _validate(self) -> None:
@@ -188,6 +198,11 @@ class ExperimentSpec:
                     f"it; envs with device ports: "
                     f"{sorted(device_port_names())}. Use the default "
                     f"env_backend='host' for {self.env.name!r}.")
+        # geometry checks need the global batch (n_envs): divisibility
+        # and the power-of-two alignment of the bit-exactness contract,
+        # rejected spec-side with the offending batch.<field> named and
+        # the nearest valid factorization suggested (repro.core.batch)
+        self.batch.resolve(cfg.n_envs)
         if self.intervals < 0:
             raise ValueError(
                 f"intervals must be >= 0, got {self.intervals}")
@@ -216,6 +231,7 @@ class ExperimentSpec:
             "checkpoint": self.checkpoint.canonical(),
             "serve": self.serve.canonical(),
             "faults": self.faults.canonical(),
+            "batch": self.batch.canonical(),
         }
 
     def replace(self, **changes) -> "ExperimentSpec":
@@ -275,6 +291,13 @@ def workload_fingerprint(spec: ExperimentSpec) -> dict:
     # run's — only wall time differs, and the bench harness records
     # that separately (benchmarks/recovery_bench.py)
     fp.pop("faults")
+    # DEFAULT batch geometry is popped so every committed pre-BatchConfig
+    # record stays byte-comparable; a NON-default geometry stays in —
+    # replica count and accumulation change the execution schedule, so
+    # check_sps must never compare SPS across geometries (the
+    # determinism contract makes the RESULTS equal, not the timings)
+    if spec.batch.is_default:
+        fp.pop("batch")
     return fp
 
 

@@ -1,0 +1,83 @@
+"""Multi-process data parallelism: ``jax.distributed`` wiring for the
+sharded runtime.
+
+One process per host (or per forced-host-device group) joins a
+coordinator; afterwards ``jax.devices()`` spans every process and a
+single :class:`~jax.sharding.Mesh` over them runs the SAME shard_map
+program the single-process sharded runtime runs — same spec, same
+geometry, same floats. The determinism contract (DESIGN.md §12) does
+the heavy lifting: env ids are globally offset by the replica index and
+the gradient is the canonical tree sum combined in env-index order, so
+N processes produce the parameters of the 1-process run bit-exactly.
+
+CPU specifics (and why this module exists at all): the default CPU
+collective implementation cannot execute multi-process computations —
+``jax_cpu_collectives_implementation`` must be switched to ``"gloo"``
+BEFORE ``jax.distributed.initialize``, or every collective fails with
+"Multiprocess computations aren't implemented on the CPU backend".
+:func:`initialize` orders those two calls correctly and is idempotent.
+
+Entry point: ``python -m repro.launch.distributed`` (one invocation per
+process); CI exercises a 2-process run via subprocess with forced host
+devices (tests/test_batch_geometry.py).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+import jax
+
+__all__ = ["initialize", "is_initialized", "global_data_mesh"]
+
+_initialized = False
+
+
+def is_initialized() -> bool:
+    return _initialized
+
+
+def initialize(coordinator_address: str, num_processes: int,
+               process_id: int) -> None:
+    """Join (or form) the ``jax.distributed`` cluster. Idempotent.
+
+    Must run before any other JAX call touches the backend — device
+    initialization locks the process topology, exactly like
+    ``XLA_FLAGS`` device forcing.
+    """
+    global _initialized
+    if _initialized:
+        return
+    if num_processes < 1 or not (0 <= process_id < num_processes):
+        raise ValueError(
+            f"bad process topology: process_id={process_id}, "
+            f"num_processes={num_processes}")
+    # ORDER MATTERS: the gloo switch must precede initialize() — the
+    # default CPU collectives reject multi-process programs outright.
+    # Set unconditionally (it only affects the CPU backend): probing
+    # the backend first would itself initialize it and lock the
+    # process topology.
+    jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    jax.distributed.initialize(coordinator_address=coordinator_address,
+                               num_processes=num_processes,
+                               process_id=process_id)
+    _initialized = True
+
+
+def global_data_mesh(axis: str = "data",
+                     n_replicas: Optional[int] = None):
+    """A 1-D mesh over the GLOBAL device list (all processes).
+
+    ``n_replicas`` must equal the global device count when given: a
+    mesh covering only some processes would leave the rest executing a
+    program they hold no shard of — reject it loudly instead.
+    """
+    from jax.sharding import Mesh
+    devices = jax.devices()
+    if n_replicas is not None and n_replicas != len(devices):
+        raise ValueError(
+            f"batch.n_replicas={n_replicas} != {len(devices)} global "
+            f"device(s) across {jax.process_count()} process(es); in "
+            f"the multi-process path every device is a replica — size "
+            f"the process topology to the geometry")
+    return Mesh(np.array(devices), (axis,))

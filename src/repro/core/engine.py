@@ -124,9 +124,9 @@ class RunResult:
     reward/done semantics (the stream runtime's loss stats); the
     Session observer hook (repro.api) forwards them per interval.
 
-    Mapping-style access (``out["params"]``, ``out["dg"]``) is
-    DEPRECATED — use the attributes (``out.params``; ``out["dg"]`` is
-    ``out.state``).
+    Mapping-style access (``out["params"]``, ``out["dg"]``) was
+    deprecated in PR 5 and is now REMOVED — use the attributes
+    (``out.params``; the old ``out["dg"]`` is ``out.state``).
     """
     params: Any
     state: Any
@@ -138,13 +138,11 @@ class RunResult:
     metrics: Any = None
 
     def __getitem__(self, key):
-        import warnings
         attr = "state" if key == "dg" else key
-        warnings.warn(
-            f"RunResult[{key!r}] mapping-style access is deprecated; "
-            f"use the RunResult.{attr} attribute",
-            DeprecationWarning, stacklevel=2)
-        return getattr(self, attr)
+        raise TypeError(
+            f"RunResult is not a mapping (RunResult[{key!r}] was "
+            f"removed after its PR-5 deprecation); use the "
+            f"RunResult.{attr} attribute")
 
     def interval_metrics(self):
         """Yield ``(i, metrics)`` per interval: the reward/done slices
@@ -270,6 +268,12 @@ class ScanRuntimeBase:
         immediately, so the default is the identity."""
         return carry
 
+    def _host_metrics(self, metrics):
+        """Bring the program's metric streams to THIS host. Identity by
+        default; the sharded runtime overrides it to all-gather streams
+        that live sharded across a multi-process mesh."""
+        return metrics
+
     # --------------------------------------------------------- plumbing
     def init(self) -> None:
         if not self._built:
@@ -317,6 +321,7 @@ class ScanRuntimeBase:
         # must not flatter the SPS numbers
         jax.block_until_ready((params, metrics))
         wall = time.perf_counter() - t0
+        metrics = self._host_metrics(metrics)
         steps = n_intervals * cfg.alpha * cfg.n_envs
         return RunResult(
             params=params, state=state, steps=steps, wall_time=wall,

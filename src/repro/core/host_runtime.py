@@ -115,7 +115,7 @@ class HostHTSRL:
                  opt: Optimizer, cfg: HTSConfig,
                  host: Optional[HostConfig] = None,
                  faults: "Optional[FaultInjector | FaultPlan]" = None,
-                 **host_kwargs):
+                 batch=None, **host_kwargs):
         if host is not None and host_kwargs:
             # both forms at once used to silently discard the kwargs —
             # e.g. HostHTSRL(..., host=HostConfig(), n_actors=8) ran
@@ -136,6 +136,17 @@ class HostHTSRL:
         self.venv = batched_env(env, cfg.n_envs, cfg.env_backend)
         self.cfg = cfg
         self.host = host if host is not None else HostConfig(**host_kwargs)
+        # batch geometry (repro.core.batch): the host runtime has one
+        # replica, so any configured (grad_accumulation, n_replicas)
+        # factorization is reproduced as chunks = A*R sequential
+        # microbatch blocks inside the gradient pass — bit-exact to the
+        # physically-replicated run by the canonical-reduction contract
+        # (DESIGN.md §12). micro_batch is thus the gradient block size;
+        # the slab ring stays (alpha, n_envs) — actors fill the global
+        # slab, the learner scans it in micro_batch-sized blocks.
+        from repro.core.batch import BatchConfig
+        self.batch = BatchConfig.of(batch)
+        self.geometry = self.batch.resolve(cfg.n_envs, default_replicas=1)
         self.opt = opt
         self.policy_apply = policy_apply
         self.params0 = params
@@ -222,7 +233,8 @@ class HostHTSRL:
         #            advances (params, behavior history, opt state).
         # The fused runtimes compute the identical composition inside one
         # XLA program; splitting changes scheduling, not values.
-        self._grad_fn = jax.jit(make_grad_fn(policy_apply, cfg))
+        self._grad_fn = jax.jit(make_grad_fn(
+            policy_apply, cfg, grad_accumulation=self.geometry.chunks))
 
         def stream_apply(params_prev, opt_state, step, params, grads):
             dg = delayed_grad.DelayedGradState(params, params_prev,
@@ -239,8 +251,10 @@ class HostHTSRL:
         # trailing reporting-only drain of the K pending ring slots: the
         # SAME drain the fused runtimes jit (make_ring_drain), must NOT
         # donate (self.dg and the capsule keep using its inputs)
-        learn = make_learner_update(policy_apply, self.opt, cfg)
-        self._final_fn = jax.jit(make_ring_drain(learn, cfg.staleness))
+        learn = make_learner_update(
+            policy_apply, self.opt, cfg,
+            grad_accumulation=self.geometry.chunks)
+        self._final_fn = make_ring_drain(learn, cfg.staleness)
 
         obs_shape = env.obs_shape
         self._spec = {

@@ -128,13 +128,37 @@ def rl_loss(params, cfg: ModelConfig, batch, algorithm: str = "a2c",
 
 def make_train_step(cfg: ModelConfig, opt: Optimizer,
                     algorithm: str = "a2c",
-                    n_microbatches: int = 1) -> Callable:
+                    n_microbatches: int = 1,
+                    batch_geometry=None) -> Callable:
     """(dg_state, batch) -> (dg_state', stats). Pure; pjit-able.
 
     n_microbatches > 1: gradient accumulation — the global batch is
     split on its leading axis and the backward runs per slice, dividing
     activation memory by the microbatch count at no collective cost
-    (grads are summed locally; the parameter update happens once)."""
+    (grads are summed in fp32 locally; the parameter update happens
+    once per logical step). ``batch_geometry`` (a
+    ``repro.core.batch.BatchConfig`` or its dict form) is the typed way
+    to say the same thing: its ``grad_accumulation`` sets the microbatch
+    count. This learner is single-replica — replica scale-out happens in
+    the sharded runtimes — so ``n_replicas`` must be unset or 1. Unlike
+    the core-runtime gradient (repro.core.batch), the accumulation here
+    is the sequential scan sum: the LLM-scale path makes no
+    cross-factorization bit-exactness promise, only the A=1 identity
+    (n_microbatches=1 runs the exact unaccumulated computation)."""
+    if batch_geometry is not None:
+        from repro.core.batch import BatchConfig
+        bc = BatchConfig.of(batch_geometry)
+        if bc.n_replicas not in (None, 1):
+            raise ValueError(
+                f"batch.n_replicas={bc.n_replicas}: train_step is "
+                f"single-replica; use the sharded runtime for replica "
+                f"scale-out")
+        if n_microbatches != 1 and n_microbatches != bc.grad_accumulation:
+            raise ValueError(
+                f"n_microbatches={n_microbatches} conflicts with "
+                f"batch.grad_accumulation={bc.grad_accumulation}; pass "
+                f"one or the other")
+        n_microbatches = bc.grad_accumulation
 
     def grad_one(params, batch):
         grad_fn = jax.value_and_grad(

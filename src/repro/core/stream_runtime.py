@@ -56,7 +56,7 @@ class StreamRuntime:
     def __init__(self, stream_factory: Callable, params, opt: Optimizer,
                  cfg: HTSConfig, model_config,
                  mesh: Union[str, object, None] = "host",
-                 n_microbatches: int = 1):
+                 n_microbatches: int = 1, batch=None):
         if cfg.algorithm not in _ALGORITHMS:
             raise ValueError(
                 f"the stream runtime implements {list(_ALGORITHMS)}, got "
@@ -72,6 +72,11 @@ class StreamRuntime:
         self.cfg = cfg
         self.model_config = model_config
         self.mesh = self._resolve_mesh(mesh)
+        # typed geometry (repro.core.batch): grad_accumulation maps to
+        # the learner's microbatch count; replica scale-out belongs to
+        # the sharded runtimes, so n_replicas must be unset/1 here —
+        # make_train_step validates both
+        self.batch = batch
         self.n_microbatches = n_microbatches
         self._built = False
         self.dg = None
@@ -102,7 +107,8 @@ class StreamRuntime:
         mesh, opt = self.mesh, self.opt
         step_fn = learner.make_train_step(self.model_config, opt,
                                           self.cfg.algorithm,
-                                          self.n_microbatches)
+                                          self.n_microbatches,
+                                          batch_geometry=self.batch)
         dg0 = jax.eval_shape(
             lambda: delayed_grad.init(self.params0, opt))
         # the probe batch: REAL batch 0 off a fresh stream, exactly the

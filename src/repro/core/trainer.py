@@ -146,7 +146,7 @@ class Trainer:
     def _save(self, state: TrainState, intervals: int,
               stream: evaluate.ReturnStream) -> None:
         cfg = self.runtime.cfg
-        ckpt_io.save(self._ckpt_path(intervals), state, metadata={
+        meta = {
             "format": CKPT_FORMAT,
             "runtime": self.runtime.name,
             "algorithm": cfg.algorithm,
@@ -156,7 +156,16 @@ class Trainer:
             "staleness": cfg.staleness,
             "intervals": intervals,
             "metrics": stream.state_dict(),
-        })
+        }
+        # batch geometry rides in the MANIFEST, not the capsule (the
+        # capsule is a pure-array pytree identical across geometries —
+        # that is the point of the determinism contract). Recorded so
+        # _resume can validate a restore onto a different factorization
+        # loudly instead of guessing.
+        geom = getattr(self.runtime, "geometry", None)
+        if geom is not None:
+            meta["batch"] = geom.canonical()
+        ckpt_io.save(self._ckpt_path(intervals), state, metadata=meta)
         if self.faults is not None:
             # checkpoint-site chaos: the atomic write (checkpoint/io)
             # makes a torn file impossible to PRODUCE, so the injectable
@@ -208,6 +217,19 @@ class Trainer:
                 raise ValueError(
                     f"resume mismatch: checkpoint has {key}="
                     f"{meta.get(key, default)!r}, runtime has {have!r}")
+        # batch geometry: a DIFFERENT factorization of the SAME global
+        # batch is a supported restore (bit-exact by the determinism
+        # contract, DESIGN.md §12) — announced loudly, never silent.
+        # global_batch is pinned by the n_envs check above; checkpoints
+        # written before BatchConfig carry no geometry (trivial default).
+        geom = getattr(self.runtime, "geometry", None)
+        saved = meta.get("batch")
+        if (geom is not None and saved is not None
+                and saved != geom.canonical()):
+            print(f"[trainer] resume crosses batch geometries: "
+                  f"checkpoint {saved} -> runtime {geom.canonical()} "
+                  f"(same global_batch; bit-exact by the scale-out "
+                  f"determinism contract)", file=sys.stderr)
         state = ckpt_io.restore(path, self.runtime.state())
         return state, int(meta["intervals"]), meta.get("metrics")
 

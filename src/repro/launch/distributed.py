@@ -1,0 +1,90 @@
+"""Multi-process sharded training: one invocation per process.
+
+    # process 0 (also the coordinator) and process 1, same spec:
+    PYTHONPATH=src python -m repro.launch.distributed \
+        --spec examples/specs/quickstart.json \
+        --coordinator localhost:12355 --num-processes 2 --process-id 0 &
+    PYTHONPATH=src python -m repro.launch.distributed \
+        --spec examples/specs/quickstart.json \
+        --coordinator localhost:12355 --num-processes 2 --process-id 1
+
+Every process joins the ``jax.distributed`` cluster
+(core/distributed.py — gloo collectives on CPU, ordered before backend
+init), builds the SAME session from the SAME spec, and runs the sharded
+runtime over one global mesh spanning all processes. The scale-out
+determinism contract (DESIGN.md §12) makes the result bit-exact to the
+1-process run: the final-parameter digest printed by every process is
+the digest the mesh runtime prints on one device — which is exactly
+what the CI subprocess test asserts.
+
+The spec's runtime must be ``sharded`` (or is forced to it here —
+multi-process training has exactly one runtime), and
+``batch.n_replicas``, when set, must equal the global device count.
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import sys
+
+import numpy as np
+
+
+def params_digest(params) -> str:
+    """sha256 over the parameter pytree (dtype/shape + bytes per leaf,
+    in tree order) — the cross-process/cross-runtime comparison key."""
+    import jax
+    h = hashlib.sha256()
+    for leaf in jax.tree.leaves(params):
+        arr = np.asarray(leaf)
+        h.update(repr((str(arr.dtype), arr.shape)).encode())
+        h.update(arr.tobytes())
+    return h.hexdigest()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="multi-process sharded HTS-RL (one run per process)")
+    ap.add_argument("--spec", required=True, help="experiment spec JSON")
+    ap.add_argument("--coordinator", required=True,
+                    help="host:port of process 0")
+    ap.add_argument("--num-processes", type=int, required=True)
+    ap.add_argument("--process-id", type=int, required=True)
+    ap.add_argument("--intervals", type=int, default=None,
+                    help="override spec.intervals")
+    args = ap.parse_args(argv)
+
+    # join the cluster BEFORE importing anything that touches devices
+    from repro.core import distributed
+    distributed.initialize(args.coordinator, args.num_processes,
+                           args.process_id)
+
+    import jax
+    from repro import api
+
+    spec = api.load(args.spec)
+    if spec.runtime.name != "sharded":
+        spec = spec.replace(runtime="sharded")
+    mesh = distributed.global_data_mesh(
+        n_replicas=spec.batch.n_replicas)
+    session = api.build(spec, mesh=mesh)
+    n = args.intervals if args.intervals is not None else spec.intervals
+    out = session.run(n)
+
+    digest = params_digest(out.params)
+    print(json.dumps({
+        "process": args.process_id,
+        "num_processes": args.num_processes,
+        "devices": len(jax.devices()),
+        "intervals": n,
+        "geometry": session.runtime.geometry.canonical(),
+        "params_sha256": digest,
+        "sps": round(out.sps, 1),
+    }))
+    sys.stdout.flush()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

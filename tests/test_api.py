@@ -84,7 +84,7 @@ def test_dumps_is_canonical_and_stable():
     d = json.loads(s)
     assert set(d) == {"env", "policy", "optimizer", "algorithm",
                       "runtime", "hts", "params_seed", "intervals",
-                      "checkpoint", "serve", "faults"}
+                      "checkpoint", "serve", "faults", "batch"}
 
 
 def test_committed_spec_files_are_canonical():

@@ -40,9 +40,8 @@ def _maxdiff(a, b):
 def test_host_mesh_sharded_bitexact():
     """Host (threads), mesh (fused XLA), sharded (shard_map, 1-device
     'data' mesh): bit-identical params and trajectories after 4
-    intervals. The sharded runtime is pinned to a 1-device mesh — on
-    multi-device meshes only trajectories stay bit-exact (gradient
-    reduction reorders; see the 2-device subprocess test)."""
+    intervals. (Since PR 9 multi-device meshes are bit-exact too — the
+    canonical tree-sum gradient, see the 2-device subprocess test.)"""
     from jax.sharding import Mesh
     env1, cfg, papply, params, opt = _setup()
     mesh1 = Mesh(np.array(jax.devices()[:1]), ("data",))
@@ -74,12 +73,12 @@ def test_registry_executes_every_runtime(name):
     assert out.rewards.shape == (2, cfg.alpha, cfg.n_envs)
     assert out.steps == 2 * cfg.alpha * cfg.n_envs
     assert out.sps > 0
-    # mapping-style access still resolves for out-of-tree callers, but
-    # is deprecated in favor of the attributes
-    with pytest.warns(DeprecationWarning, match="RunResult.params"):
-        assert out["params"] is out.params
-    with pytest.warns(DeprecationWarning, match="RunResult.state"):
-        assert out["dg"] is out.state
+    # mapping-style access was removed after its PR-5 deprecation; the
+    # TypeError still names the attribute to reach for
+    with pytest.raises(TypeError, match="RunResult.params"):
+        out["params"]
+    with pytest.raises(TypeError, match="RunResult.state"):
+        out["dg"]
 
 
 def test_rerun_determinism_through_registry():
@@ -108,17 +107,18 @@ _MULTIDEV_SCRIPT = textwrap.dedent("""
     md = max(float(jnp.max(jnp.abs(x - y))) for x, y in
              zip(jax.tree.leaves(m.params), jax.tree.leaves(s.params)))
     assert np.array_equal(m.rewards, s.rewards)   # trajectories bit-exact
-    assert md < 1e-5, md                          # grads: reduction reorder
+    assert md == 0.0, md       # params too: canonical tree-sum gradient
     print("OK", md)
 """)
 
 
 def test_sharded_two_devices_matches_mesh():
     """Real data parallelism (2 forced host devices, subprocess because
-    the device count locks at first jax init): trajectories stay
-    bit-exact (the determinism contract crosses shards via env-id
-    offsets); params agree to float tolerance (per-shard mean + pmean
-    reorders the gradient reduction)."""
+    the device count locks at first jax init): trajectories AND params
+    bit-exact — the determinism contract crosses shards via env-id
+    offsets, and the canonical tree-sum gradient (repro.core.batch)
+    makes the cross-replica reduction order identical to the
+    single-device one (DESIGN.md §12)."""
     env = dict(os.environ,
                XLA_FLAGS="--xla_force_host_platform_device_count=2",
                PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",

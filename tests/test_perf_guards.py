@@ -62,7 +62,7 @@ def test_host_warm_run_does_not_recompile():
         "tables": rt._tables_fn,
         "grad": rt._grad_fn,
         "apply": rt._apply_fn,
-        "final_drain": rt._final_fn,
+        "final_drain": rt._final_fn.one_pass,
         "env_reset": rt._env_reset_v,
     }
     sizes = {k: f._cache_size() for k, f in jitted.items()}
