@@ -346,6 +346,26 @@ class Session:
                               faults=self.faults)
         return server.start() if start else server
 
+    # ------------------------------------------------------------ pool
+    @staticmethod
+    def pool(specs, weights=None, names=None, max_concurrency: int = 2,
+             on_slice=None, **build_overrides):
+        """Admit several specs (or built Sessions) into one
+        ``repro.tenancy.TenantPool`` sharing this process's device pool:
+
+            pool = Session.pool([spec_a, spec_b], weights=[2, 1])
+            results = pool.run()          # {name: TenantResult}
+
+        Deterministic weighted fair-share time-slicing at interval
+        granularity; every tenant's final params and episode streams
+        are bit-exact to its solo ``run`` (DESIGN.md §13). See
+        ``TenantPool`` for lifecycle (pause/evict/readmit) and
+        multi-model ``pool.serve()``."""
+        from repro.tenancy import TenantPool
+        return TenantPool(specs, weights=weights, names=names,
+                          max_concurrency=max_concurrency,
+                          on_slice=on_slice, **build_overrides)
+
     # ------------------------------------------------------------ misc
     def describe(self) -> str:
         return spec_mod.dumps(self.spec, indent=2)

@@ -36,6 +36,7 @@ from repro.core.batch import BatchConfig
 from repro.core.engine import HTSConfig
 from repro.faults import FaultPlan
 from repro.serve.config import ServeConfig
+from repro.tenancy.config import TenancyConfig
 
 # HTSConfig knobs a spec may set. ``algorithm`` is excluded: it is a
 # first-class spec axis (``ExperimentSpec.algorithm``), and allowing it
@@ -146,6 +147,13 @@ class ExperimentSpec:
     # runtime-determined geometry exactly — and is popped from
     # workload_fingerprint so committed baselines stay comparable.
     batch: BatchConfig = field(default_factory=BatchConfig)
+    # multi-tenant scheduling block (repro.tenancy, DESIGN.md §13):
+    # fair-share weight, grant quantum, and tenant name consumed when
+    # this spec is admitted into a TenantPool. Popped from
+    # workload_fingerprint always — by the multiplexing-determinism
+    # contract, scheduling share changes WHEN intervals run, never what
+    # they compute.
+    tenancy: TenancyConfig = field(default_factory=TenancyConfig)
 
     def __post_init__(self):
         object.__setattr__(self, "env", ComponentSpec.of(self.env, "env"))
@@ -161,6 +169,7 @@ class ExperimentSpec:
         object.__setattr__(self, "serve", ServeConfig.of(self.serve))
         object.__setattr__(self, "faults", FaultPlan.of(self.faults))
         object.__setattr__(self, "batch", BatchConfig.of(self.batch))
+        object.__setattr__(self, "tenancy", TenancyConfig.of(self.tenancy))
         self._validate()
 
     def _validate(self) -> None:
@@ -232,6 +241,7 @@ class ExperimentSpec:
             "serve": self.serve.canonical(),
             "faults": self.faults.canonical(),
             "batch": self.batch.canonical(),
+            "tenancy": self.tenancy.canonical(),
         }
 
     def replace(self, **changes) -> "ExperimentSpec":
@@ -298,6 +308,12 @@ def workload_fingerprint(spec: ExperimentSpec) -> dict:
     # determinism contract makes the RESULTS equal, not the timings)
     if spec.batch.is_default:
         fp.pop("batch")
+    # tenancy is popped ALWAYS: by the multiplexing-determinism contract
+    # (DESIGN.md §13) a tenant's results are bit-exact to its solo run
+    # at any weight/quantum — scheduling share changes when intervals
+    # run, never what they compute, so pooled and solo records of the
+    # same workload must stay comparable
+    fp.pop("tenancy")
     return fp
 
 

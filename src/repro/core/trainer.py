@@ -48,6 +48,50 @@ from repro.faults import FaultInjector, FaultPlan
 CKPT_FORMAT = "hts-trainstate-v1"
 
 
+def checkpoint_metadata(runtime: Runtime, intervals: int,
+                        stream: evaluate.ReturnStream) -> dict:
+    """The versioned manifest written beside every trainer-format
+    capsule. Module-level so every writer of ``CKPT_FORMAT``
+    checkpoints (Trainer segments, TenantPool slice boundaries) emits
+    the same manifest and the same ``_resume`` validation applies."""
+    cfg = runtime.cfg
+    meta = {
+        "format": CKPT_FORMAT,
+        "runtime": runtime.name,
+        "algorithm": cfg.algorithm,
+        "seed": cfg.seed,
+        "alpha": cfg.alpha,
+        "n_envs": cfg.n_envs,
+        "staleness": cfg.staleness,
+        "intervals": intervals,
+        "metrics": stream.state_dict(),
+    }
+    # batch geometry rides in the MANIFEST, not the capsule (the
+    # capsule is a pure-array pytree identical across geometries —
+    # that is the point of the determinism contract). Recorded so
+    # _resume can validate a restore onto a different factorization
+    # loudly instead of guessing.
+    geom = getattr(runtime, "geometry", None)
+    if geom is not None:
+        meta["batch"] = geom.canonical()
+    return meta
+
+
+def prune_checkpoints(checkpoint_dir: str, keep: int) -> None:
+    """Retain the ``keep`` most-recent ``step_*`` checkpoints
+    (0 = keep all)."""
+    if not keep:
+        return
+    paths = sorted(glob.glob(os.path.join(checkpoint_dir, "step_*.json")))
+    for p in paths[:-keep]:
+        base = p[:-len(".json")]
+        for suffix in (".json", ".npz"):
+            try:
+                os.remove(base + suffix)
+            except OSError:
+                pass
+
+
 class LearnerDiverged(RuntimeError):
     """The segment produced non-finite parameters (a NaN'd/inf'd learner
     step). Raised BEFORE the capsule is checkpointed, so the divergence
@@ -145,26 +189,7 @@ class Trainer:
 
     def _save(self, state: TrainState, intervals: int,
               stream: evaluate.ReturnStream) -> None:
-        cfg = self.runtime.cfg
-        meta = {
-            "format": CKPT_FORMAT,
-            "runtime": self.runtime.name,
-            "algorithm": cfg.algorithm,
-            "seed": cfg.seed,
-            "alpha": cfg.alpha,
-            "n_envs": cfg.n_envs,
-            "staleness": cfg.staleness,
-            "intervals": intervals,
-            "metrics": stream.state_dict(),
-        }
-        # batch geometry rides in the MANIFEST, not the capsule (the
-        # capsule is a pure-array pytree identical across geometries —
-        # that is the point of the determinism contract). Recorded so
-        # _resume can validate a restore onto a different factorization
-        # loudly instead of guessing.
-        geom = getattr(self.runtime, "geometry", None)
-        if geom is not None:
-            meta["batch"] = geom.canonical()
+        meta = checkpoint_metadata(self.runtime, intervals, stream)
         ckpt_io.save(self._ckpt_path(intervals), state, metadata=meta)
         if self.faults is not None:
             # checkpoint-site chaos: the atomic write (checkpoint/io)
@@ -181,17 +206,7 @@ class Trainer:
         self._prune(intervals)
 
     def _prune(self, newest: int) -> None:
-        if not self.keep:
-            return
-        paths = sorted(glob.glob(
-            os.path.join(self.checkpoint_dir, "step_*.json")))
-        for p in paths[:-self.keep]:
-            base = p[:-len(".json")]
-            for suffix in (".json", ".npz"):
-                try:
-                    os.remove(base + suffix)
-                except OSError:
-                    pass
+        prune_checkpoints(self.checkpoint_dir, self.keep)
 
     def _resume(self) -> tuple[Optional[TrainState], int, Optional[dict]]:
         path = self.latest_checkpoint()

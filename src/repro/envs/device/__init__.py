@@ -144,7 +144,11 @@ def batched_env(env: Env, n_envs: int, backend: str = "host"):
     if backend == "host":
         return vectorize(env, n_envs)
     if backend == "device":
-        return get_device_env(env.name)
+        # the host env's construction kwargs (a scenario seed, say)
+        # travel with it — the port must be built the same way, or two
+        # backends of one spec would quietly step different worlds
+        return get_device_env(env.name,
+                              **(getattr(env, "make_kwargs", None) or {}))
     raise ValueError(
         f"unknown env_backend {backend!r}; choose 'host' (vmapped "
         f"scalar envs) or 'device' (device-resident batched port)")

@@ -5,59 +5,71 @@ pytree of the vmapped host env, capsule-compatible across backends.
 
 Fully deterministic, so the whole step is broadcast arithmetic: moves
 are a gather from the shared MOVES table, wall collisions a batched
-advanced-index lookup into the shared WALLS board, and the 3-channel
+advanced-index lookup into the shared walls board, and the 3-channel
 observation is assembled from one-hot comparison masks plus broadcast
 copies of the static walls/goal planes — no scatter anywhere.
+
+Procedural scenarios: ``make(scenario_seed=k)`` resolves the SAME
+``sample_scenario(k)`` board as the host factory (one pure numpy
+function of the seed, repro.envs.gridmaze), so both backends of a
+seeded scenario are bit-identical by construction — the equivalence
+suite then pins the dynamic streams too (tests/test_device_envs.py).
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.envs.gridmaze import HORIZON, MOVES, N, WALLS
+from repro.envs.gridmaze import HORIZON, MOVES, N, WALLS, resolve_board
 from repro.envs.device import DeviceEnv, device_autoreset
 
-_GOAL = jnp.zeros((N, N), jnp.float32).at[N - 1, N - 1].set(1.0)
+
+def _batched_fns(walls: jnp.ndarray, goal):
+    gr, gc = goal
+    goal_plane = jnp.zeros((N, N), jnp.float32).at[gr, gc].set(1.0)
+
+    def obs(state):
+        rows = (state["r"][:, None]
+                == jnp.arange(N, dtype=jnp.int32)).astype(jnp.float32)
+        cols = (state["c"][:, None]
+                == jnp.arange(N, dtype=jnp.int32)).astype(jnp.float32)
+        agent = rows[:, :, None] * cols[:, None, :]
+        n = state["r"].shape[0]
+        walls_b = jnp.broadcast_to(walls, (n, N, N))
+        goal_b = jnp.broadcast_to(goal_plane, (n, N, N))
+        return jnp.stack([walls_b, agent, goal_b], axis=-1)
+
+    def reset(keys):
+        n = keys.shape[0]
+        zeros = jnp.zeros((n,), jnp.int32)
+        # distinct buffers per leaf: the engine donates the carry, and
+        # XLA rejects donating one buffer under several leaves (eager
+        # jnp.zeros is constant-cached, so three names would share one)
+        state = {"r": zeros, "c": jnp.copy(zeros), "t": jnp.copy(zeros)}
+        return state, obs(state)
+
+    def step(state, actions, keys):
+        del keys
+        mv = MOVES[actions]                     # (n, 2) gather
+        nr = jnp.clip(state["r"] + mv[:, 0], 0, N - 1)
+        nc = jnp.clip(state["c"] + mv[:, 1], 0, N - 1)
+        blocked = walls[nr, nc] > 0             # batched advanced indexing
+        nr = jnp.where(blocked, state["r"], nr)
+        nc = jnp.where(blocked, state["c"], nc)
+        t = state["t"] + 1
+        at_goal = (nr == gr) & (nc == gc)
+        done = at_goal | (t >= HORIZON)
+        reward = jnp.where(at_goal, 1.0, -0.01)
+        ns = {"r": nr, "c": nc, "t": t}
+        return ns, obs(ns), reward, done.astype(jnp.float32)
+
+    return reset, step
 
 
-def _obs(state):
-    rows = (state["r"][:, None]
-            == jnp.arange(N, dtype=jnp.int32)).astype(jnp.float32)
-    cols = (state["c"][:, None]
-            == jnp.arange(N, dtype=jnp.int32)).astype(jnp.float32)
-    agent = rows[:, :, None] * cols[:, None, :]
-    n = state["r"].shape[0]
-    walls = jnp.broadcast_to(WALLS, (n, N, N))
-    goal = jnp.broadcast_to(_GOAL, (n, N, N))
-    return jnp.stack([walls, agent, goal], axis=-1)
-
-
-def _reset(keys):
-    n = keys.shape[0]
-    zeros = jnp.zeros((n,), jnp.int32)
-    # distinct buffers per leaf: the engine donates the carry, and XLA
-    # rejects donating one buffer under several leaves (eager jnp.zeros
-    # is constant-cached, so three names would share one buffer)
-    state = {"r": zeros, "c": jnp.copy(zeros), "t": jnp.copy(zeros)}
-    return state, _obs(state)
-
-
-def _step(state, actions, keys):
-    del keys
-    mv = MOVES[actions]                     # (n, 2) gather
-    nr = jnp.clip(state["r"] + mv[:, 0], 0, N - 1)
-    nc = jnp.clip(state["c"] + mv[:, 1], 0, N - 1)
-    blocked = WALLS[nr, nc] > 0             # batched advanced indexing
-    nr = jnp.where(blocked, state["r"], nr)
-    nc = jnp.where(blocked, state["c"], nc)
-    t = state["t"] + 1
-    at_goal = (nr == N - 1) & (nc == N - 1)
-    done = at_goal | (t >= HORIZON)
-    reward = jnp.where(at_goal, 1.0, -0.01)
-    ns = {"r": nr, "c": nc, "t": t}
-    return ns, _obs(ns), reward, done.astype(jnp.float32)
-
-
-def make() -> DeviceEnv:
-    return device_autoreset("gridmaze@device", _reset, _step, (N, N, 3), 4,
+def make(scenario_seed: Optional[int] = None) -> DeviceEnv:
+    walls, goal = resolve_board(scenario_seed)
+    reset, step = _batched_fns(walls, goal)
+    return device_autoreset("gridmaze@device", reset, step, (N, N, 3), 4,
                             host_name="gridmaze")

@@ -25,9 +25,16 @@ class Env(NamedTuple):
     step: Callable           # (state, action, key) -> (state, obs, r, done)
     obs_shape: Tuple[int, ...]
     n_actions: int
+    # construction kwargs that must survive backend re-resolution: when
+    # HTSConfig.env_backend='device' swaps this env for its device port
+    # (device.batched_env), these kwargs are forwarded to the port's
+    # factory — a scenario-seeded board means the SAME board on either
+    # backend, never a silently-default one. None: factory defaults.
+    make_kwargs: Any = None
 
 
-def with_autoreset(name, reset_fn, inner_step, obs_shape, n_actions) -> Env:
+def with_autoreset(name, reset_fn, inner_step, obs_shape, n_actions,
+                   make_kwargs=None) -> Env:
     """Wrap a raw step (that reports done without resetting) with
     auto-reset semantics."""
 
@@ -39,7 +46,8 @@ def with_autoreset(name, reset_fn, inner_step, obs_shape, n_actions) -> Env:
         obs_out = jnp.where(_bcast(done, obs), robs, obs)
         return state_out, obs_out, r, done
 
-    return Env(name, reset_fn, step, obs_shape, n_actions)
+    return Env(name, reset_fn, step, obs_shape, n_actions,
+               make_kwargs=make_kwargs)
 
 
 def _bcast(done, x):
@@ -55,4 +63,5 @@ def vectorize(env: Env, n: int) -> Env:
         step=jax.vmap(env.step),
         obs_shape=env.obs_shape,
         n_actions=env.n_actions,
+        make_kwargs=env.make_kwargs,
     )

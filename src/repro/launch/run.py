@@ -31,27 +31,46 @@ from repro import api
 
 def _apply_set(canon: dict, assignment: str) -> None:
     """Apply one ``dotted.path=json_value`` edit to the canonical dict.
-    Unknown paths fail loudly (the canonical form has every field, so a
-    missing key IS a typo)."""
+
+    A path segment naming a KNOWN optional block that the dict does not
+    carry (a hand-written partial spec without a ``tenancy`` block, say)
+    constructs that block's default canonical form in place and keeps
+    walking — ``--set tenancy.weight=2`` must mean "default tenancy
+    block, weight 2", not KeyError. Only truly unknown names — absent
+    from the edited dict AND from a default spec's canonical form —
+    fail, loudly, with the path named."""
     if "=" not in assignment:
         raise SystemExit(f"--set takes dotted.path=JSON, got "
                          f"{assignment!r}")
     path, _, raw = assignment.partition("=")
     keys = path.split(".")
     node = canon
+    # walk a default spec's canonical form in parallel: it is the
+    # authority on which absent names are real optional blocks/fields
+    default = api.ExperimentSpec().canonical()
     for key in keys[:-1]:
-        if not isinstance(node, dict) or key not in node:
-            raise SystemExit(f"--set {path}: no such spec field "
-                             f"{key!r} (canonical fields: "
-                             f"{sorted(node) if isinstance(node, dict) else node})")
+        if not isinstance(node, dict):
+            raise SystemExit(f"--set {path}: {key!r}'s parent is not "
+                             f"an object")
+        fallback = default.get(key) if isinstance(default, dict) else None
+        if key not in node:
+            if fallback is None:
+                raise SystemExit(
+                    f"--set {path}: no such spec field {key!r} "
+                    f"(canonical fields: {sorted(node)})")
+            node[key] = json.loads(json.dumps(fallback))  # deep copy
         node = node[key]
+        default = fallback
     leaf = keys[-1]
     if not isinstance(node, dict):
         raise SystemExit(f"--set {path}: {keys[-2]!r} is not an object")
     # hts knobs and component kwargs may be introduced by an edit;
-    # everything else must already exist in the canonical form
+    # everything else must exist in the canonical form — either in the
+    # edited dict or in a default spec's (a partial dict's missing
+    # optional field is constructible, a typo is not)
     allow_new = keys[0] == "hts" or "kwargs" in keys[:-1]
-    if leaf not in node and not allow_new:
+    known = isinstance(default, dict) and leaf in default
+    if leaf not in node and not (allow_new or known):
         raise SystemExit(f"--set {path}: no such spec field {leaf!r}")
     try:
         node[leaf] = json.loads(raw)

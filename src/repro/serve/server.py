@@ -27,6 +27,20 @@ rows, so the serving loop compiles exactly one program, and the obs and
 seed slabs are donated (they are rebuilt per dispatch; the params are
 never donated — every dispatch reads them).
 
+Multi-model serving (the pool half of repro.tenancy): one server can
+hold SEVERAL policy capsules behind the same admission queue —
+``add_model`` registers each under a model id with its own compiled +
+warmed program, its own seed master, and its own padding width;
+``submit(..., model=...)`` routes requests. The dispatcher gathers one
+admission batch, groups it by model, and dispatches each group padded
+to that model's width — several models ride one gather cycle, and
+per-model request/row/QPS counters feed ``stats()``. Determinism is
+per-model by construction: a model's rows are computed by ITS program
+under ITS master key, and rows are independent, so every (model, obs,
+seed) request answers bit-identically to a single-model server for
+that model, regardless of cross-model batch composition
+(tests/test_tenancy.py).
+
 Failure discipline mirrors the host runtime's pools: a dispatcher death
 fails every pending and future request with the original traceback
 instead of hanging clients on futures that will never resolve.
@@ -98,10 +112,28 @@ class ActionResult:
 
 
 @dataclass
+class _Model:
+    """One served policy: its program, seed master, padding width, and
+    reporting counters (counters guarded by the server lock)."""
+    name: str
+    policy_apply: Callable
+    params: object
+    obs_shape: Tuple[int, ...]
+    obs_dtype: object
+    master: object            # per-model seed master (determinism root)
+    max_batch: int            # per-model padding width
+    program: Optional[Callable] = None
+    n_requests: int = 0
+    n_dispatches: int = 0
+    n_rows: int = 0
+
+
+@dataclass
 class _Request:
     obs: np.ndarray
     seed: int
     future: Future
+    model: Optional[_Model] = None
     admitted: float = 0.0      # monotonic admission time (deadline clock)
 
 
@@ -123,14 +155,11 @@ class PolicyServer:
 
     def __init__(self, policy_apply: Callable, params, obs_like,
                  serve: Optional[ServeConfig] = None, seed: int = 0,
-                 faults: "Optional[FaultInjector | FaultPlan]" = None):
+                 faults: "Optional[FaultInjector | FaultPlan]" = None,
+                 model: str = "default"):
         self.serve = serve if serve is not None else ServeConfig()
-        self.policy_apply = policy_apply
-        self.params = params
-        obs_like = np.asarray(obs_like)
-        self._obs_shape = tuple(obs_like.shape)
-        self._obs_dtype = obs_like.dtype
-        self._master = determinism.master_key(seed)
+        self._seed = int(seed)
+        self._models: dict = {}
         self._queue: "queue.Queue" = queue.Queue(self.serve.max_queue)
         self._thread: Optional[threading.Thread] = None
         self._stopping = threading.Event()
@@ -151,12 +180,30 @@ class PolicyServer:
         self.n_rejected = 0
         self.n_deadline = 0       # shed past deadline_ms
         self.n_restarts = 0       # in-place dispatcher restarts
-        self._program = self._build()
+        self._t0 = time.monotonic()   # QPS clock (reset at start())
+        self._default = self._register(
+            model, policy_apply, params, obs_like,
+            self.serve.max_batch, seed)
 
     # ------------------------------------------------------------ build
-    def _build(self) -> Callable:
-        papply, master = self.policy_apply, self._master
-        B = self.serve.max_batch
+    def _register(self, name: str, policy_apply: Callable, params,
+                  obs_like, max_batch: int, seed: int) -> _Model:
+        if name in self._models:
+            raise ValueError(
+                f"model {name!r} already served; model ids must be "
+                f"unique (served: {sorted(self._models)})")
+        obs_like = np.asarray(obs_like)
+        m = _Model(name=name, policy_apply=policy_apply, params=params,
+                   obs_shape=tuple(obs_like.shape),
+                   obs_dtype=obs_like.dtype,
+                   master=determinism.master_key(seed),
+                   max_batch=int(max_batch))
+        m.program = self._compile(m)
+        self._models[name] = m
+        return m
+
+    def _compile(self, m: _Model) -> Callable:
+        papply, master, B = m.policy_apply, m.master, m.max_batch
 
         def prog(params, obs, seeds):
             keys = jax.vmap(
@@ -170,15 +217,63 @@ class PolicyServer:
         jprog = jax.jit(prog, donate_argnums=(2,))
         # warm the one compiled shape up front so the first request does
         # not pay compilation inside its latency
-        obs0 = jnp.zeros((B,) + self._obs_shape, self._obs_dtype)
+        obs0 = jnp.zeros((B,) + m.obs_shape, m.obs_dtype)
         seeds0 = jnp.zeros((B,), jnp.int32)
-        jax.block_until_ready(jprog(self.params, obs0, seeds0))
+        jax.block_until_ready(jprog(m.params, obs0, seeds0))
         return jprog
+
+    def add_model(self, name: str, policy_apply: Callable, params,
+                  obs_like, max_batch: Optional[int] = None,
+                  seed: Optional[int] = None) -> "PolicyServer":
+        """Register another policy under model id ``name``: compiles and
+        warms its own fixed-shape program (padding width ``max_batch``,
+        default the server's) with its own seed master (default the
+        server's seed) — so this model's answers are bit-identical to a
+        single-model server built from the same (policy, params, seed),
+        whatever else shares the admission queue. Safe to call while
+        the dispatcher is running (compilation happens here, in the
+        caller's thread; the model becomes routable when this
+        returns)."""
+        m = self._register(
+            name, policy_apply, params, obs_like,
+            self.serve.max_batch if max_batch is None else max_batch,
+            self._seed if seed is None else seed)
+        assert m is not None
+        return self
+
+    def models(self) -> list:
+        """Served model ids, default model first."""
+        return [self._default.name] + sorted(
+            n for n in self._models if n != self._default.name)
+
+    # back-compat surface: the default model's params/program, as the
+    # single-model server exposed them (tests swap _program to inject
+    # dispatcher failures; callers read .params to check hot-swaps)
+    @property
+    def params(self):
+        return self._default.params
+
+    @params.setter
+    def params(self, value) -> None:
+        self._default.params = value
+
+    @property
+    def policy_apply(self) -> Callable:
+        return self._default.policy_apply
+
+    @property
+    def _program(self) -> Callable:
+        return self._default.program
+
+    @_program.setter
+    def _program(self, value) -> None:
+        self._default.program = value
 
     # -------------------------------------------------------- lifecycle
     def start(self) -> "PolicyServer":
         if self._thread is not None:
             raise ServerClosed("server already started")
+        self._t0 = time.monotonic()    # QPS accounting starts at serve
         self._thread = threading.Thread(target=self._loop,
                                         name="serve-dispatcher",
                                         daemon=True)
@@ -253,10 +348,13 @@ class PolicyServer:
         }
 
     # -------------------------------------------------------- admission
-    def submit(self, obs, seed: int = 0, block: bool = True) -> Future:
+    def submit(self, obs, seed: int = 0, block: bool = True,
+               model: Optional[str] = None) -> Future:
         """Admit one request; the Future resolves to an ActionResult.
-        ``block=False`` raises ``Overloaded`` (a ``queue.Full``) instead
-        of backpressuring when the admission queue is at ``max_queue``."""
+        ``model`` routes to a served model id (default: the model the
+        server was constructed with). ``block=False`` raises
+        ``Overloaded`` (a ``queue.Full``) instead of backpressuring
+        when the admission queue is at ``max_queue``."""
         if self._failure is not None:
             raise ServerClosed(
                 f"serve dispatcher died: {self._failure!r}") \
@@ -266,13 +364,21 @@ class PolicyServer:
             # just accumulates until start() (how tests stage specific
             # batch compositions); only a stopping server admits nothing
             raise ServerClosed("server is stopping")
-        obs = np.asarray(obs, self._obs_dtype)
-        if tuple(obs.shape) != self._obs_shape:
+        if model is None:
+            m = self._default
+        else:
+            m = self._models.get(model)
+            if m is None:
+                raise KeyError(
+                    f"unknown model {model!r}; served models: "
+                    f"{self.models()}")
+        obs = np.asarray(obs, m.obs_dtype)
+        if tuple(obs.shape) != m.obs_shape:
             raise ValueError(
-                f"request obs shape {tuple(obs.shape)} != served env's "
-                f"obs shape {self._obs_shape}")
+                f"request obs shape {tuple(obs.shape)} != model "
+                f"{m.name!r}'s obs shape {m.obs_shape}")
         req = _Request(obs=obs, seed=int(seed), future=Future(),
-                       admitted=time.monotonic())
+                       model=m, admitted=time.monotonic())
         try:
             self._queue.put(req, block=block)
         except queue.Full:
@@ -283,12 +389,14 @@ class PolicyServer:
                 f"{self.serve.max_queue}; request shed") from None
         with self._lock:
             self.n_requests += 1
+            m.n_requests += 1
         return req.future
 
-    def act(self, obs, seed: int = 0,
-            timeout: Optional[float] = None) -> ActionResult:
+    def act(self, obs, seed: int = 0, timeout: Optional[float] = None,
+            model: Optional[str] = None) -> ActionResult:
         """Synchronous submit + wait."""
-        return self.submit(obs, seed=seed).result(timeout=timeout)
+        return self.submit(obs, seed=seed,
+                           model=model).result(timeout=timeout)
 
     # ------------------------------------------------------- dispatcher
     def _gather(self) -> Optional[list]:
@@ -331,19 +439,34 @@ class PolicyServer:
         return batch
 
     def _dispatch(self, batch: list) -> None:
-        B = self.serve.max_batch
-        obs = np.zeros((B,) + self._obs_shape, self._obs_dtype)
+        """Group one gathered admission batch by model (first-appearance
+        order), then run each group through ITS model's program padded
+        to ITS width — several models ride one gather cycle. Groups
+        wider than a model's ``max_batch`` are chunked."""
+        groups: dict = {}
+        for req in batch:
+            groups.setdefault(req.model.name, []).append(req)
+        for name, reqs in groups.items():
+            m = self._models[name]
+            for lo in range(0, len(reqs), m.max_batch):
+                self._dispatch_model(m, reqs[lo:lo + m.max_batch])
+
+    def _dispatch_model(self, m: _Model, batch: list) -> None:
+        B = m.max_batch
+        obs = np.zeros((B,) + m.obs_shape, m.obs_dtype)
         seeds = np.zeros((B,), np.int32)
         for i, req in enumerate(batch):
             obs[i] = req.obs
             seeds[i] = req.seed
-        actions, logprobs = self._program(
-            self.params, jnp.asarray(obs), jnp.asarray(seeds))
+        actions, logprobs = m.program(
+            m.params, jnp.asarray(obs), jnp.asarray(seeds))
         actions = np.asarray(actions)
         logprobs = np.asarray(logprobs)
         with self._lock:
             self.n_dispatches += 1
             self.n_rows += len(batch)
+            m.n_dispatches += 1
+            m.n_rows += len(batch)
         for i, req in enumerate(batch):
             req.future.set_result(ActionResult(
                 action=int(actions[i]), logprob=float(logprobs[i]),
@@ -414,6 +537,7 @@ class PolicyServer:
 
     # ------------------------------------------------------------ stats
     def stats(self) -> dict:
+        elapsed = max(time.monotonic() - self._t0, 1e-9)
         with self._lock:
             return {
                 "n_requests": self.n_requests,
@@ -423,4 +547,16 @@ class PolicyServer:
                 "n_restarts": self.n_restarts,
                 "mean_batch": (self.n_rows / self.n_dispatches
                                if self.n_dispatches else 0.0),
+                # per-tenant accounting: admitted-request rate and
+                # dispatch occupancy for each served model id
+                "models": {
+                    name: {
+                        "n_requests": m.n_requests,
+                        "n_dispatches": m.n_dispatches,
+                        "mean_batch": (m.n_rows / m.n_dispatches
+                                       if m.n_dispatches else 0.0),
+                        "qps": m.n_requests / elapsed,
+                    }
+                    for name, m in sorted(self._models.items())
+                },
             }

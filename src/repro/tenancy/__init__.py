@@ -1,0 +1,19 @@
+"""Multi-tenant scheduling: many ExperimentSpecs sharing one device
+pool, each bit-exact to its solo run.
+
+  * ``TenancyConfig`` — the per-spec ``tenancy`` block (weight, quantum,
+    name) consumed by the scheduler.
+  * ``TenantPool``    — admission, deterministic stride fair-share over
+    interval-boundary capsules, lifecycle (pause/resume/evict/readmit),
+    per-tenant fault domains, multi-model serving.
+  * ``TenantResult``  — one tenant's report (params, streams, sps).
+
+Entry points: ``repro.api.Session.pool([...])`` and
+``python -m repro.launch.pool --spec a.json --spec b.json``.
+Contract: DESIGN.md §13.
+"""
+from repro.tenancy.config import TenancyConfig
+from repro.tenancy.pool import TenantPool, TenantResult, capsule_params
+
+__all__ = ["TenancyConfig", "TenantPool", "TenantResult",
+           "capsule_params"]

@@ -84,7 +84,8 @@ def test_dumps_is_canonical_and_stable():
     d = json.loads(s)
     assert set(d) == {"env", "policy", "optimizer", "algorithm",
                       "runtime", "hts", "params_seed", "intervals",
-                      "checkpoint", "serve", "faults", "batch"}
+                      "checkpoint", "serve", "faults", "batch",
+                      "tenancy"}
 
 
 def test_committed_spec_files_are_canonical():

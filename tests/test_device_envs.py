@@ -244,3 +244,48 @@ def test_host_default_fingerprint_unchanged():
     fp = api.workload_fingerprint(bench_spec())
     assert "env_backend" not in fp["hts"]
     assert "env_backend" not in config_fingerprint()["hts"]
+
+
+# ------------------------------------------- seeded-scenario equivalence
+@pytest.mark.parametrize("scenario_seed", [3, 7])
+def test_seeded_gridmaze_device_port_matches_host(scenario_seed):
+    """Satellite of the tenancy PR: procedurally-sampled gridmaze
+    layouts honor the same oracle contract as the default board — the
+    device port steps the SAME sampled world bit-exactly, because both
+    factories share one ``resolve_board`` and ``batched_env`` forwards
+    the host env's ``make_kwargs``."""
+    env = get_env("gridmaze", scenario_seed=scenario_seed)
+    assert env.make_kwargs == {"scenario_seed": scenario_seed}
+    hv = vectorize(env, 4)
+    dv = batched_env(env, 4, "device")
+    master = jax.random.key(11)
+    keys0 = jax.random.split(jax.random.fold_in(master, 0), 4)
+    hs, ho = hv.reset(keys0)
+    ds, do = dv.reset(keys0)
+    np.testing.assert_array_equal(np.asarray(ho), np.asarray(do))
+    for t in range(30):
+        k = jax.random.fold_in(master, t + 1)
+        actions = jax.random.randint(k, (4,), 0, env.n_actions)
+        keys = jax.random.split(k, 4)
+        hs, ho, hr, hd = hv.step(hs, actions, keys)
+        ds, do, dr, dd = dv.step(ds, actions, keys)
+        np.testing.assert_array_equal(np.asarray(ho), np.asarray(do))
+        np.testing.assert_array_equal(np.asarray(hr), np.asarray(dr))
+        np.testing.assert_array_equal(np.asarray(hd), np.asarray(dd))
+
+
+def test_seeded_gridmaze_spec_trains_same_on_both_backends():
+    """End-to-end: one seeded-maze spec, host vs device env_backend,
+    identical trajectories and params (the runtime-level cell of the
+    scenario_seed axis)."""
+    env = get_env("gridmaze", scenario_seed=7)
+    outs = []
+    for backend in ("host", "device"):
+        cfg = HTSConfig(alpha=4, n_envs=4, seed=3, algorithm="ppo",
+                        env_backend=backend)
+        policy = models.get_policy("mlp", env)
+        params = policy.init(jax.random.key(0))
+        rt = engine.make_runtime("mesh", env, policy.apply, params,
+                                 rmsprop(7e-4, eps=1e-5), cfg)
+        outs.append(rt.run(3))
+    _assert_same(*outs)

@@ -35,3 +35,67 @@ def test_dryrun_cli_single():
               "/tmp/dryrun_test", "--tag", "citest"], timeout=400)
     assert r.returncode == 0, r.stderr[-2000:]
     assert "[OK]" in r.stdout
+
+
+# ---------------------------------------------- launch.run --set edits
+def _edited(spec_dict, *assignments):
+    from repro.launch.run import _apply_set
+    canon = spec_dict
+    for a in assignments:
+        _apply_set(canon, a)
+    return canon
+
+
+def test_set_edits_existing_field():
+    from repro import api
+    canon = api.ExperimentSpec().canonical()
+    _edited(canon, "hts.staleness=2", "intervals=7")
+    spec = api.from_dict(canon)
+    assert spec.hts["staleness"] == 2 and spec.intervals == 7
+
+
+def test_set_constructs_missing_optional_block():
+    """A hand-written partial spec without a tenancy/serve block:
+    ``--set tenancy.weight=2`` must mean 'default block, weight 2',
+    not KeyError (the dotted-path walk consults a default spec's
+    canonical form for known-but-absent names)."""
+    from repro import api
+    partial = {"env": {"name": "catch", "kwargs": {}}}
+    _edited(partial, "tenancy.weight=2", "serve.max_batch=16",
+            "checkpoint.every=3")
+    spec = api.from_dict(partial)
+    assert spec.tenancy.weight == 2
+    assert spec.tenancy.quantum == 1          # rest of block defaulted
+    assert spec.serve.max_batch == 16
+    assert spec.checkpoint.every == 3
+
+
+def test_set_missing_leaf_of_known_block():
+    """The leaf may be absent from the edited dict too, as long as the
+    default canonical form knows it."""
+    partial = {"env": {"name": "catch", "kwargs": {}},
+               "tenancy": {"weight": 3}}       # no quantum key
+    _edited(partial, "tenancy.quantum=4")
+    assert partial["tenancy"] == {"weight": 3, "quantum": 4}
+
+
+def test_set_unknown_names_fail_loudly():
+    from repro import api
+    canon = api.ExperimentSpec().canonical()
+    with pytest.raises(SystemExit, match="tennancy"):
+        _edited(canon, "tennancy.weight=2")    # typo'd block
+    with pytest.raises(SystemExit, match="wieght"):
+        _edited(canon, "tenancy.wieght=2")     # typo'd leaf
+    with pytest.raises(SystemExit):
+        _edited(canon, "no_equals_sign")
+
+
+def test_set_still_allows_new_hts_and_kwargs_keys():
+    from repro import api
+    canon = api.ExperimentSpec().canonical()
+    _edited(canon, "hts.staleness=3", "env.kwargs.scenario_seed=7",
+            "env.name=\"gridmaze\"")
+    spec = api.from_dict(canon)
+    assert spec.env.name == "gridmaze"
+    assert spec.env.kwargs == {"scenario_seed": 7}
+    assert spec.hts["staleness"] == 3

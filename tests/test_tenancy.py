@@ -1,0 +1,452 @@
+"""Multi-tenant pool (repro.tenancy): the fair-share determinism
+contract of DESIGN.md §13.
+
+The load-bearing claims, in suite order:
+
+* the stride schedule is a pure function of (admission order, weights,
+  quanta, interval budgets) — two pools over the same inputs produce
+  the SAME grant trace, and grants split proportionally to weights;
+* multiplexing is invisible: every tenant of a heterogeneous pool
+  (different envs, algorithms, staleness, runtimes, weights) finishes
+  with params and reward/episode streams BIT-IDENTICAL to its solo
+  ``run(n)`` — including across a mid-pool evict + readmit and through
+  one tenant's injected fault storm (per-tenant fault domains);
+* ``max_concurrency`` changes wall-clock only, never results;
+* multi-model serving answers each (model, obs, seed) request
+  bit-identically to a single-model server of that tenant, regardless
+  of cross-model batch composition;
+* the isolation baseline underneath it all: sequential ``build(spec)``
+  Sessions in one process share nothing (no observer, fault-injector,
+  or parameter leakage).
+"""
+import dataclasses
+from fractions import Fraction
+
+import numpy as np
+import jax
+import pytest
+
+from repro import api
+from repro.core import evaluate
+from repro.faults import FaultPlan
+from repro.serve import PolicyServer, ServeConfig
+from repro.tenancy import TenancyConfig, TenantPool, capsule_params
+
+
+# ------------------------------------------------------------- helpers
+def _spec(env="catch", algorithm="a2c", seed=3, intervals=3, runtime="host",
+          weight=1, quantum=1, name=None, staleness=1, env_kwargs=None,
+          faults=None):
+    """A tiny tenant spec: alpha 3 x 4 envs keeps every slice cheap."""
+    d = {
+        "env": {"name": env, "kwargs": env_kwargs or {}},
+        "algorithm": algorithm,
+        "runtime": runtime,
+        "hts": {"alpha": 3, "n_envs": 4, "seed": seed,
+                "staleness": staleness},
+        "intervals": intervals,
+        "tenancy": {"weight": weight, "quantum": quantum, "name": name},
+    }
+    if faults is not None:
+        d["faults"] = faults
+    return api.from_dict(d)
+
+
+def _solo(spec):
+    """The oracle: a fresh solo run of the tenant's workload (faults
+    stripped — the recovery guarantee says supervised results equal the
+    fault-free run, and solo ``Session.run`` has no supervisor)."""
+    out = api.build(dataclasses.replace(spec, faults=FaultPlan())) \
+             .run(spec.intervals)
+    stream = evaluate.ReturnStream(spec.hts.get("n_envs", 4))
+    stream.extend(out.rewards, out.dones)
+    return out, stream.returns
+
+
+def _assert_tenant_equals_solo(res, spec):
+    out, solo_returns = _solo(spec)
+    assert res.status == "done"
+    assert res.intervals == spec.intervals
+    for a, b in zip(jax.tree.leaves(res.params),
+                    jax.tree.leaves(out.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(res.rewards, np.asarray(out.rewards))
+    np.testing.assert_array_equal(res.dones, np.asarray(out.dones))
+    np.testing.assert_array_equal(res.episode_returns, solo_returns)
+
+
+# -------------------------------------------------------------- config
+def test_tenancy_config_validation():
+    assert TenancyConfig().is_default
+    assert TenancyConfig.of(None).is_default
+    assert TenancyConfig.of({"weight": 3}).weight == 3
+    assert TenancyConfig.of({"weight": 2, "quantum": 4, "name": "x"}) \
+        .canonical() == {"weight": 2, "quantum": 4, "name": "x"}
+    for bad in ({"weight": 0}, {"quantum": 0}, {"weight": -1},
+                {"nope": 1}, {"name": ""}):
+        with pytest.raises((ValueError, TypeError)):
+            TenancyConfig.of(bad)
+
+
+def test_spec_carries_tenancy_but_fingerprint_ignores_it():
+    """The tenancy block is pool policy, not workload: two specs that
+    differ only in tenancy are the SAME experiment (their results are
+    bit-identical by the multiplexing-invisibility contract), so the
+    fingerprint must not fork benchmark baselines over it."""
+    a = _spec(weight=1, quantum=1)
+    b = _spec(weight=5, quantum=2, name="vip")
+    assert a.tenancy.weight == 1 and b.tenancy.name == "vip"
+    assert api.loads(api.dumps(b)).tenancy == b.tenancy
+    assert api.workload_fingerprint(a) == api.workload_fingerprint(b)
+
+
+# ----------------------------------------------------------- scheduler
+def test_stride_schedule_is_deterministic_and_weighted():
+    """Schedule-side purity: the grant trace is a function of scheduler
+    inputs alone. Two pools over the same specs emit identical traces,
+    and granted intervals split 3:2:1 with weights 3:2:1."""
+    def make_pool():
+        return TenantPool([
+            _spec(seed=3, intervals=6, weight=3, quantum=1, name="w3"),
+            _spec(seed=4, intervals=6, weight=2, quantum=1, name="w2"),
+            _spec(seed=5, intervals=6, weight=1, quantum=1, name="w1"),
+        ])
+
+    def schedule_only(pool):
+        # drive _next/_grant without executing: the schedule never
+        # consults execution results, so this IS the run's grant order
+        while True:
+            t = pool._next()
+            if t is None:
+                return list(pool.trace)
+            pool._grant(t)
+
+    p1, p2 = make_pool(), make_pool()
+    tr1, tr2 = schedule_only(p1), schedule_only(p2)
+    assert tr1 == tr2
+    # first grants follow admission order (all passes start equal) ...
+    assert [n for n, _, _ in tr1[:3]] == ["w3", "w2", "w1"]
+    # ... and over the first 6 grants shares track weights 3:2:1
+    counts = {"w3": 0, "w2": 0, "w1": 0}
+    for name, _, n in tr1[:6]:
+        counts[name] += n
+    assert counts == {"w3": 3, "w2": 2, "w1": 1}
+    # every tenant reaches exactly its budget, in quantum-sized slices
+    assert p1.schedule_counts() == {"w3": 6, "w2": 6, "w1": 6}
+    # pass accounting is exact rationals, not floats
+    assert all(isinstance(t.passv, Fraction)
+               for t in p1._tenants.values())
+
+
+def test_quantum_slices_and_tail_grant():
+    """quantum=4 against a budget of 6: one full slice then the 2-
+    interval tail — never a grant past the budget."""
+    pool = TenantPool([_spec(intervals=6, quantum=4, name="t")])
+    while pool._next() is not None:
+        pool._grant(pool._next())
+    assert pool.trace == [("t", 0, 4), ("t", 4, 2)]
+
+
+# ----------------------------------------------- pool vs solo (flagship)
+def test_heterogeneous_pool_bit_exact_to_solo_with_chaos():
+    """The acceptance pool: three heterogeneous tenants (catch/a2c/mesh
+    vs seeded-gridmaze/ppo/K=2/mesh vs catch/a2c/host), distinct
+    weights and quanta, overlapped execution — PLUS a mid-pool evict +
+    readmit of the maze tenant and a 2-event fault storm confined to
+    the host tenant. Every tenant's final params and full streams must
+    equal its solo run bit-exactly; the storm must actually fire
+    (restarts recorded) and stay inside its fault domain."""
+    spec_a = _spec(env="catch", algorithm="a2c", runtime="mesh", seed=5,
+                   intervals=4, weight=3, quantum=2, name="catch-mesh")
+    spec_b = _spec(env="gridmaze", env_kwargs={"scenario_seed": 7},
+                   algorithm="ppo", runtime="mesh", seed=9, staleness=2,
+                   intervals=3, weight=1, quantum=1, name="maze")
+    spec_c = _spec(env="catch", algorithm="a2c", runtime="host", seed=2,
+                   intervals=4, weight=2, quantum=2, name="stormy",
+                   faults={"events": [["stepper", 1], ["executor", 2]],
+                           "max_restarts": 3, "backoff": 0.01})
+
+    phase = {"evicted": False, "readmitted": False}
+
+    def chaos(name, done, _out):
+        # evict the maze tenant at its first boundary; readmit it at
+        # the next OTHER tenant's boundary — both at commit points, the
+        # only places lifecycle ops are legal
+        if name == "maze" and done == 1 and not phase["evicted"]:
+            partial = pool.evict("maze")
+            assert partial.status == "evicted"
+            assert partial.intervals >= 1
+            phase["evicted"] = True
+        elif phase["evicted"] and not phase["readmitted"] \
+                and name != "maze":
+            pool.readmit("maze")
+            phase["readmitted"] = True
+
+    pool = TenantPool([spec_a, spec_b, spec_c], max_concurrency=2,
+                      on_slice=chaos)
+    results = pool.run()
+
+    assert phase == {"evicted": True, "readmitted": True}
+    assert set(results) == {"catch-mesh", "maze", "stormy"}
+    # the storm fired and was absorbed by the tenant's own supervisor
+    assert results["stormy"].restarts >= 2
+    assert results["catch-mesh"].restarts == 0
+    assert results["maze"].restarts == 0
+    for spec in (spec_a, spec_b, spec_c):
+        _assert_tenant_equals_solo(results[spec.tenancy.name], spec)
+
+
+def test_max_concurrency_changes_wallclock_only():
+    """mc=1 (strict time-slicing) and mc=3 (overlapped) produce the
+    same grant trace and bit-identical results."""
+    specs = lambda: [_spec(seed=11, intervals=3, name="p"),
+                     _spec(seed=12, intervals=3, weight=2, name="q")]
+    seq = TenantPool(specs(), max_concurrency=1)
+    ovl = TenantPool(specs(), max_concurrency=3)
+    r1, r2 = seq.run(), ovl.run()
+    assert seq.trace == ovl.trace
+    for name in ("p", "q"):
+        for a, b in zip(jax.tree.leaves(r1[name].params),
+                        jax.tree.leaves(r2[name].params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(r1[name].rewards, r2[name].rewards)
+        np.testing.assert_array_equal(r1[name].episode_returns,
+                                      r2[name].episode_returns)
+
+
+def test_pool_step_microscope_and_late_admission():
+    """step() drives one grant at a time; a tenant admitted mid-run
+    starts at the minimum active pass (shares from NOW) and still
+    finishes bit-exact to solo."""
+    pool = TenantPool([_spec(seed=21, intervals=2, name="early")])
+    assert pool.step()                      # early: interval 0
+    late_spec = _spec(seed=22, intervals=2, name="late")
+    pool.admit(late_spec)
+    # the late arrival joins at the current minimum active pass — it
+    # shares from NOW instead of bursting to repay the pool's history
+    assert pool._get("late").passv == pool._get("early").passv
+    assert isinstance(pool._get("late").passv, Fraction)
+    while pool.step():
+        pass
+    results = pool.results()
+    assert results["early"].status == "done"
+    _assert_tenant_equals_solo(results["late"], late_spec)
+
+
+# ------------------------------------------------------------ lifecycle
+def test_lifecycle_state_machine_is_loud():
+    pool = TenantPool([_spec(name="a"), _spec(seed=4, name="b")])
+    with pytest.raises(ValueError, match="already admitted"):
+        pool.admit(_spec(seed=5, name="a"))
+    with pytest.raises(KeyError, match="no tenant"):
+        pool.pause("ghost")
+    pool.pause("a")
+    with pytest.raises(ValueError, match="cannot pause"):
+        pool.pause("a")                     # already paused
+    with pytest.raises(ValueError, match="cannot readmit"):
+        pool.readmit("a")                   # paused, not evicted
+    pool.resume("a")
+    with pytest.raises(ValueError, match="cannot resume"):
+        pool.resume("a")                    # already active
+    pool.evict("b")
+    assert pool.status("b") == "evicted"
+    pool.readmit("b")
+    results = pool.run()
+    assert all(r.status == "done" for r in results.values())
+    with pytest.raises(ValueError, match="already completed"):
+        pool.evict("a")
+
+
+def test_paused_tenant_gets_no_grants_and_reports_partial():
+    pool = TenantPool([_spec(seed=6, intervals=2, name="run"),
+                       _spec(seed=7, intervals=2, name="hold")],
+                      max_concurrency=1)
+    pool.pause("hold")
+    results = pool.run()
+    assert results["run"].status == "done"
+    assert results["hold"].status == "paused"
+    assert results["hold"].intervals == 0
+    assert results["hold"].params is None
+    assert pool.schedule_counts() == {"run": 2, "hold": 0}
+
+
+def test_pool_constructor_validation():
+    with pytest.raises(ValueError, match="max_concurrency"):
+        TenantPool([], max_concurrency=0)
+    with pytest.raises(ValueError, match="align"):
+        TenantPool([_spec()], weights=[1, 2])
+
+
+# ------------------------------------------------------- multi-model serve
+def _probe_obs(session, n, seed=0):
+    _, obs = jax.vmap(session.env.reset)(
+        jax.random.split(jax.random.key(seed), n))
+    return np.asarray(obs)
+
+
+def test_multi_model_answers_match_single_model_servers():
+    """The serving acceptance claim: a (model, obs, seed) request to
+    the multi-model server answers bit-identically to that model's own
+    single-model server, even when its dispatch batch is packed with
+    the OTHER model's requests (different obs shape and all)."""
+    sa = api.build(_spec(env="catch", seed=5, name="ma"))
+    sb = api.build(_spec(env="gridmaze", seed=9, name="mb",
+                         env_kwargs={"scenario_seed": 7}))
+    cfg = ServeConfig(max_batch=8, timeout_ms=20.0)
+    obs_a, obs_b = _probe_obs(sa, 4), _probe_obs(sb, 4, seed=1)
+
+    def single(session, obs, seed):
+        srv = PolicyServer(session.policy.apply, session.params,
+                           obs_like=obs[0], serve=cfg,
+                           seed=session.cfg.seed).start()
+        try:
+            return srv.act(obs[0], seed=seed)
+        finally:
+            srv.stop()
+
+    ref_a = single(sa, obs_a, seed=7)
+    ref_b = single(sb, obs_b, seed=13)
+
+    multi = PolicyServer(sa.policy.apply, sa.params, obs_like=obs_a[0],
+                         serve=cfg, seed=sa.cfg.seed, model="ma")
+    multi.add_model("mb", sb.policy.apply, sb.params,
+                    obs_like=obs_b[0], seed=sb.cfg.seed)
+    # stage a mixed batch: both probes plus fillers of BOTH models
+    # queue before the dispatcher starts, so one gather drains them all
+    fa = multi.submit(obs_a[0], seed=7, model="ma")
+    fb = multi.submit(obs_b[0], seed=13, model="mb")
+    fillers = [multi.submit(obs_a[i], seed=100 + i, model="ma")
+               for i in range(1, 4)]
+    fillers += [multi.submit(obs_b[i], seed=200 + i, model="mb")
+                for i in range(1, 4)]
+    multi.start()
+    got_a, got_b = fa.result(timeout=30), fb.result(timeout=30)
+    for f in fillers:
+        f.result(timeout=30)
+    multi.stop()
+
+    assert got_a.action == ref_a.action
+    assert got_a.logprob == ref_a.logprob
+    assert got_b.action == ref_b.action
+    assert got_b.logprob == ref_b.logprob
+    stats = multi.stats()
+    assert set(stats["models"]) == {"ma", "mb"}
+    assert stats["models"]["ma"]["n_requests"] == 4
+    assert stats["models"]["mb"]["n_requests"] == 4
+
+
+def test_multi_model_unknown_model_and_shape_are_loud():
+    sa = api.build(_spec(env="catch", seed=5))
+    obs = _probe_obs(sa, 1)
+    srv = PolicyServer(sa.policy.apply, sa.params, obs_like=obs[0],
+                       serve=ServeConfig(max_batch=4), seed=3,
+                       model="only")
+    with pytest.raises(KeyError, match="only"):
+        srv.submit(obs[0], model="ghost")
+    with pytest.raises(ValueError, match="already"):
+        srv.add_model("only", sa.policy.apply, sa.params,
+                      obs_like=obs[0])
+    with pytest.raises(ValueError):
+        srv.submit(np.zeros((3, 3), np.float32), model="only")
+
+
+def test_pool_serve_routes_every_tenant():
+    """pool.serve(): one server, one dispatcher, every tenant's policy
+    behind its name — serving each tenant's CURRENT capsule params
+    (== final params after run()), answers equal to a single-model
+    server over the same params."""
+    pool = TenantPool([_spec(env="catch", seed=5, name="ta"),
+                       _spec(env="gridmaze", seed=9, name="tb",
+                             env_kwargs={"scenario_seed": 7})],
+                      max_concurrency=1)
+    results = pool.run()
+    server = pool.serve()
+    try:
+        sa = pool._get("ta").session
+        obs = _probe_obs(sa, 1)
+        got = server.act(obs[0], seed=17, model="ta")
+        solo = PolicyServer(sa.policy.apply, results["ta"].params,
+                            obs_like=obs[0], serve=sa.spec.serve,
+                            seed=sa.cfg.seed).start()
+        try:
+            ref = solo.act(obs[0], seed=17)
+        finally:
+            solo.stop()
+        assert got.action == ref.action
+        assert got.logprob == ref.logprob
+        assert sorted(server.models()) == ["ta", "tb"]
+    finally:
+        server.stop()
+    with pytest.raises(ValueError, match="empty pool"):
+        TenantPool().serve()
+
+
+def test_capsule_params_prefix_and_shape_check():
+    s = api.build(_spec(seed=5))
+    state = s.state()
+    p = capsule_params(state, s.params)
+    for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(s.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    bad = jax.tree.map(lambda x: np.zeros(x.shape + (2,), x.dtype),
+                       s.params)
+    with pytest.raises(ValueError, match="shape"):
+        capsule_params(state, bad)
+
+
+# -------------------------------------------- isolation baseline (solo)
+def test_sequential_sessions_share_nothing():
+    """The baseline under the pool: building and running Sessions
+    back-to-back in ONE process leaks nothing between them — a rebuild
+    of the first spec reproduces its results bit-exactly, and an
+    observer registered on one session never hears another's run."""
+    spec_a = _spec(env="catch", seed=31, intervals=2)
+    spec_b = _spec(env="gridmaze", algorithm="ppo", seed=32, intervals=2,
+                   env_kwargs={"scenario_seed": 7})
+
+    first = api.build(spec_a)
+    heard_a = []
+    first.on_interval(lambda m: heard_a.append(m["interval"]))
+    out_a1 = first.run(2)
+    assert heard_a == [0, 1]
+
+    other = api.build(spec_b)
+    out_b = other.run(2)
+    assert heard_a == [0, 1]        # A's observer never heard B
+    assert other._observers == []   # B inherited no observers
+
+    # a session whose spec carries a fault plan builds its OWN
+    # injector; merely building it must not arm anything process-wide
+    api.build(_spec(seed=33, faults={"events": [["stepper", 0]],
+                                     "max_restarts": 1}))
+
+    again = api.build(spec_a)
+    out_a2 = again.run(2)           # would raise if the injector leaked
+    for a, b in zip(jax.tree.leaves(out_a1.params),
+                    jax.tree.leaves(out_a2.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(out_a1.rewards),
+                                  np.asarray(out_a2.rewards))
+    assert np.asarray(out_a1.rewards).shape != \
+        np.asarray(out_b.rewards).shape or \
+        not np.array_equal(np.asarray(out_a1.rewards),
+                           np.asarray(out_b.rewards))
+
+
+def test_pool_checkpoints_are_trainer_compatible(tmp_path):
+    """A pool tenant's periodic checkpoints use the trainer's capsule
+    format: Session.serve() (and --resume) consume them unchanged."""
+    spec = dataclasses.replace(
+        _spec(seed=41, intervals=2, name="ck"),
+        checkpoint={"dir": str(tmp_path / "ck"), "every": 1, "keep": 2})
+    pool = TenantPool([spec], max_concurrency=1)
+    results = pool.run()
+    from repro.checkpoint import io as ckpt_io
+    latest = ckpt_io.latest(str(tmp_path / "ck"))
+    assert latest is not None and latest.endswith("step_00000002")
+    session = api.build(spec)
+    # the checkpoint holds the continuation CAPSULE (like a solo
+    # Trainer's), not the post-finalize reporting params
+    restored = ckpt_io.restore_prefix(latest, session.params)
+    expect = capsule_params(results["ck"].state, session.params)
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(expect)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
